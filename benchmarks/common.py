@@ -1,0 +1,188 @@
+"""Shared benchmark helpers: CSV emission + analytic roofline accounting."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional
+
+from repro.configs import ModelConfig, SHAPES, InputShape, get_config
+from repro.core import costmodel as cm
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(line)
+    print(line)
+
+
+def header():
+    print("name,us_per_call,derived")
+
+
+# =============================================================================
+# Analytic per-device roofline terms (TPU v5e target).
+#
+# XLA's cost_analysis counts while/scan bodies ONCE (trip counts are dynamic
+# to it), so layer-stacked HLO underreports totals by ~L x; these closed-form
+# counts are exact for our own implementation and are cross-checked against
+# the per-body HLO numbers in EXPERIMENTS.md §Roofline.
+# =============================================================================
+
+CHIP_FLOPS = 197e12          # bf16 peak / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+N_DATA, N_MODEL = 16, 16     # single-pod mesh
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def _attn_flops(cfg: ModelConfig, Sq: int, Sk: int, causal: bool, window: int) -> float:
+    """QK^T + PV flops for one layer, one sequence (pair-list-accurate)."""
+    if window > 0:
+        eff = min(window + Sq / 2, Sk)               # window-limited context
+        pairs_tokens = Sq * min(window * 1.5, Sk)
+    elif causal:
+        pairs_tokens = Sq * Sk / 2 if Sq == Sk else Sq * Sk
+    else:
+        pairs_tokens = Sq * Sk
+    return 2 * 2 * pairs_tokens * cfg.q_dim
+
+
+def _layer_linear_flops(cfg: ModelConfig, moe: bool) -> float:
+    """Per-token matmul flops of one layer (no attention score term)."""
+    d, f = cfg.d_model, cfg.d_ff
+    gated = cfg.ffn_type.startswith("gated")
+    out = 2 * d * (cfg.q_dim + 2 * cfg.kv_dim) + 2 * cfg.q_dim * d
+    if f:
+        ffn = 2 * (3 if gated else 2) * d * f
+        out += ffn * (cfg.moe_top_k if moe else 1)
+    return out
+
+
+def _ssd_flops(cfg: ModelConfig) -> float:
+    """Per-token flops of one SSD mixer layer."""
+    d, inner, n = cfg.d_model, cfg.ssm_inner, cfg.ssm_state_size
+    h, p, c = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_chunk
+    proj = 2 * d * (2 * inner + 2 * n + h) + 2 * inner * d
+    # SSD: intra-chunk (c^2-ish per token) + states
+    ssd = 2 * h * (c * n + c * p + 2 * p * n)
+    return proj + ssd
+
+
+def forward_flops(cfg: ModelConfig, B: int, S: int, ctx: Optional[int] = None,
+                  decode: bool = False) -> float:
+    """Global forward flops for one step (prefill/train fwd or decode)."""
+    total = 0.0
+    kinds = cfg.layer_kinds()
+    glob = cfg.layer_is_global()
+    moes = cfg.layer_is_moe()
+    for i, kind in enumerate(kinds):
+        if kind == "ssd":
+            total += B * S * _ssd_flops(cfg)
+            if cfg.d_ff:                     # hybrid (jamba) SSD layers keep FFNs
+                gated = cfg.ffn_type.startswith("gated")
+                ffn = 2 * (3 if gated else 2) * cfg.d_model * cfg.d_ff
+                total += B * S * ffn * (cfg.moe_top_k if moes[i] else 1)
+            continue
+        total += B * S * _layer_linear_flops(cfg, moes[i])
+        w = 0 if glob[i] else cfg.sliding_window
+        if decode:
+            eff_ctx = min(ctx, cfg.sliding_window) if w else ctx
+            total += B * 2 * 2 * eff_ctx * cfg.q_dim
+        else:
+            total += B * _attn_flops(cfg, S, S, True, w)
+    if cfg.is_encoder_decoder:
+        F = cfg.enc_seq_len
+        enc_lin = 8 * cfg.d_model ** 2 + (2 * (3 if cfg.ffn_type.startswith("gated")
+                                               else 2) * cfg.d_model * cfg.d_ff)
+        total += cfg.enc_num_layers * B * F * enc_lin
+        total += cfg.enc_num_layers * B * _attn_flops(cfg, F, F, False, 0)
+        # cross attention
+        total += cfg.num_layers * B * (S if not decode else 1) * 2 * 2 * F * cfg.q_dim / (S if decode else 1)
+    # unembed
+    total += 2 * B * (1 if decode else S) * cfg.d_model * cfg.vocab_size
+    return total
+
+
+def step_roofline(cfg: ModelConfig, shape: InputShape, *, chips: int = 256,
+                  hlo: Optional[dict] = None) -> Roofline:
+    """Analytic three-term roofline for one (arch x shape) step on the pod."""
+    B, S = shape.global_batch, shape.seq_len
+    bpp = cfg.bytes_per_param()
+    P_total = cfg.num_params()
+    # MODEL_FLOPS convention (6ND / 2ND) excludes embedding parameters
+    embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    P_active = cfg.active_params() - embed
+
+    if shape.kind == "train":
+        fwd = forward_flops(cfg, B, S)
+        flops = 3 * fwd                                  # fwd + 2x bwd
+        model_flops = 6 * P_active * B * S
+        # memory: params+grads+opt touched once, activations ~2 x layer io
+        bytes_ = (P_total * (bpp * 2 + 8) +              # p, g, m, v
+                  B * S * cfg.d_model * bpp * cfg.num_layers * 4)
+        # collectives: grad reduce-scatter+all-gather (FSDP) + TP psums
+        coll = (2 * P_total * bpp +
+                2 * B * S * cfg.d_model * bpp * cfg.num_layers)
+    elif shape.kind == "prefill":
+        flops = forward_flops(cfg, B, S)
+        model_flops = 2 * P_active * B * S
+        bytes_ = P_total * bpp + B * S * cfg.d_model * bpp * cfg.num_layers * 2
+        coll = 2 * B * S * cfg.d_model * bpp * cfg.num_layers
+    else:                                                # decode: 1 token
+        ctx = S
+        flops = forward_flops(cfg, B, 1, ctx=ctx, decode=True)
+        model_flops = 2 * P_active * B
+        # memory: weights + the whole KV cache read once
+        kinds = cfg.layer_kinds()
+        glob = cfg.layer_is_global()
+        cache_bytes = 0
+        for i, kind in enumerate(kinds):
+            if kind == "ssd":
+                cache_bytes += B * cfg.ssm_num_heads * cfg.ssm_head_dim * \
+                    cfg.ssm_state_size * bpp
+            else:
+                eff = min(ctx, cfg.sliding_window) if not glob[i] else ctx
+                cache_bytes += B * eff * 2 * cfg.kv_dim * bpp
+        bytes_ = (P_active + embed) * bpp + cache_bytes
+        coll = 2 * B * cfg.d_model * bpp * cfg.num_layers
+    compute_s = flops / chips / CHIP_FLOPS
+    memory_s = bytes_ / chips / HBM_BW
+    collective_s = coll / chips / ICI_BW
+    return Roofline(compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, model_flops=model_flops,
+                    hlo_flops=(hlo or {}).get("flops", 0.0))
+
+
+def load_dryrun(outdir="experiments/dryrun") -> Dict[str, dict]:
+    out = {}
+    if not os.path.isdir(outdir):
+        return out
+    for f in os.listdir(outdir):
+        if f.endswith(".json"):
+            with open(os.path.join(outdir, f)) as fh:
+                out[f[:-5]] = json.load(fh)
+    return out

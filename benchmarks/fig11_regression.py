@@ -1,0 +1,14 @@
+"""Paper Fig. 11: sampling-based linear regression of T_kv_gen / T_load_kv
+(R^2 = 0.99 in the paper)."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import costmodel as cm
+
+
+def run():
+    cfg = get_config("opt-30b")
+    fg, fl = cm.profile_cost_fns(cfg, cm.RTX4090, noise=0.02)
+    emit("fig11.t_kv_gen", fg(4096) * 1e6,
+         f"slope={fg.slope:.3e}s/tok r2={fg.r2:.4f} (paper: 0.99)")
+    emit("fig11.t_load_kv", fl(4096) * 1e6,
+         f"slope={fl.slope:.3e}s/tok r2={fl.r2:.4f} (paper: 0.99)")

@@ -1,0 +1,29 @@
+"""Paper Fig. 13: host->GPU traffic breakdown (KV vs ACT), OPT-30B b32/b64.
+Paper: up to 1.27x / 1.38x traffic reduction vs FlexGen."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.pipeline import simulate_generation
+from repro.core.policy import policy_act_ratio
+
+
+def run():
+    cfg = get_config("opt-30b")
+    hw = cm.RTX4090
+    ar = policy_act_ratio(cfg, hw)
+    for batch in [32, 64]:
+        for prompt in [512, 1024, 1920]:
+            kv = simulate_generation(cfg, hw, batch=batch, prompt=prompt,
+                                     gen=64, mode="kv")
+            hyb = simulate_generation(cfg, hw, batch=batch, prompt=prompt,
+                                      gen=64, mode="hybrid", act_ratio=ar)
+            t_kv = kv.traffic_per_step["kv_load"]
+            t_h = hyb.traffic_per_step["kv_load"] + hyb.traffic_per_step["act_load"]
+            red = (f"{t_kv/t_h:.2f}x" if t_h > 0
+                   else "inf (context fits device ACT pool)")
+            emit(f"fig13.b{batch}.p{prompt}", 0.0,
+                 f"flexgen={t_kv/2**30:.2f}GiB hybrid={t_h/2**30:.2f}GiB "
+                 f"(kv={hyb.traffic_per_step['kv_load']/2**30:.2f}"
+                 f"+act={hyb.traffic_per_step['act_load']/2**30:.2f}) "
+                 f"reduction={red} (paper: up to "
+                 f"{'1.27' if batch == 32 else '1.38'}x)")

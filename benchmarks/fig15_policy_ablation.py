@@ -1,0 +1,42 @@
+"""Paper Fig. 15: progressive ablation — Act-cache-only -> +hybrid caching
+(default 1:1) -> +cache-management policy (Algorithm 1 ratio).
+
+Paper: hybrid alone 1.33x over act-only; +policy 1.6x (30B) / 1.56x (66B);
+optimal KV:ACT 2:1 (30B), 1.78:1 (66B).
+
+Beyond-paper ablation: the byte-ratio-aware generalized policy on a GQA
+model (yi-6b), where the paper's balance misallocates (DESIGN.md §7).
+"""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.pipeline import simulate_generation
+from repro.core.policy import policy_act_ratio
+
+
+def run():
+    hw = cm.RTX4090
+    for model in ["opt-6.7b", "opt-13b", "opt-30b", "opt-66b"]:
+        cfg = get_config(model)
+        act = simulate_generation(cfg, hw, batch=128, prompt=1920, gen=128,
+                                  mode="act")
+        half = simulate_generation(cfg, hw, batch=128, prompt=1920, gen=128,
+                                   mode="hybrid", act_ratio=0.5)
+        ar = policy_act_ratio(cfg, hw)
+        pol = simulate_generation(cfg, hw, batch=128, prompt=1920, gen=128,
+                                  mode="hybrid", act_ratio=ar)
+        kv_act = (1 - ar) / max(ar, 1e-9)
+        emit(f"fig15.{model}", 0.0,
+             f"act_only={act.throughput:.2f} +hybrid(1:1)={half.throughput:.2f} "
+             f"+policy={pol.throughput:.2f} tok/s "
+             f"policy_KV:ACT={kv_act:.2f}:1 "
+             f"(paper 30B: 2:1, 66B: 1.78:1)")
+
+    # beyond-paper: generalized policy on GQA
+    cfg = get_config("yi-6b")
+    for name, gen in [("paper", False), ("generalized", True)]:
+        ar = policy_act_ratio(cfg, hw, generalized=gen)
+        r = simulate_generation(cfg, hw, batch=128, prompt=1920, gen=128,
+                                mode="hybrid", act_ratio=ar)
+        emit(f"fig15.gqa_yi-6b.{name}_policy", 0.0,
+             f"act_ratio={ar:.2f} thr={r.throughput:.2f} tok/s")

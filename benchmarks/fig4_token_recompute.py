@@ -1,0 +1,21 @@
+"""Paper Fig. 4: token-recomputation ratio vs normalized generation latency
+(OPT-30B ctx 1024 b64, OPT-66B ctx 512 b64).  Paper: 1.45x / 1.31x at 50%."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.pipeline import simulate_generation
+
+
+def run():
+    hw = cm.RTX4090
+    for model, ctx in [("opt-30b", 1024), ("opt-66b", 512)]:
+        cfg = get_config(model)
+        base = simulate_generation(cfg, hw, batch=64, prompt=ctx, gen=64,
+                                   mode="kv")
+        for ratio in [0.0, 0.25, 0.5, 0.75]:
+            r = simulate_generation(cfg, hw, batch=64, prompt=ctx, gen=64,
+                                    mode="token", recompute_ratio=ratio)
+            norm = r.step_time / base.step_time
+            emit(f"fig4.{model}.recompute{int(ratio*100)}", r.step_time * 1e6,
+                 f"normalized_latency={norm:.2f} (paper@50%: "
+                 f"{'1.45' if model == 'opt-30b' else '1.31'}x)")

@@ -1,0 +1,48 @@
+"""Kernel micro-bench: wall-clock of the pure-jnp oracle vs the Pallas
+interpreter on CPU.  Interpreter timings are NOT TPU performance — this
+exists to (a) exercise the kernels end-to-end and (b) report the analytic
+MXU-time estimate for the target chip."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CHIP_FLOPS, emit
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(*args)
+        jax.tree.leaves(r)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    from repro.kernels.kv_gen.kernel import kv_gen
+    from repro.kernels.kv_gen.ref import kv_gen_ref
+    d, kvh, hd, n = 512, 4, 128, 8
+    act = jax.random.normal(jax.random.PRNGKey(0), (n, 16, d))
+    sc = jnp.ones((d,))
+    wk = jax.random.normal(jax.random.PRNGKey(1), (d, kvh, hd)) * 0.05
+    wv = jax.random.normal(jax.random.PRNGKey(2), (d, kvh, hd)) * 0.05
+    us_ref = _time(lambda *a: kv_gen_ref(*a), act, sc, wk, wv)
+    flops = 2 * n * 16 * d * 2 * kvh * hd
+    tpu_us = flops / CHIP_FLOPS * 1e6
+    emit("kernel.kv_gen.ref_cpu", us_ref,
+         f"analytic_tpu_v5e={tpu_us:.3f}us_per_call flops={flops:.2e}")
+
+    from repro.kernels.ssd_scan.kernel import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_ref_chunked
+    b, s, h, p, nn, c = 1, 256, 4, 32, 64, 32
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(6), (b, s, nn)) * 0.3
+    C = jax.random.normal(jax.random.PRNGKey(7), (b, s, nn)) * 0.3
+    us_ref = _time(lambda *a: ssd_ref_chunked(*a, chunk=c), x, dt, A, B, C)
+    us_ker = _time(lambda *a: ssd_scan(*a, chunk=c), x, dt, A, B, C)
+    emit("kernel.ssd_scan.ref_cpu", us_ref, "pure-jnp chunked")
+    emit("kernel.ssd_scan.interp_cpu", us_ker,
+         "pallas interpreter (correctness mode, not perf)")

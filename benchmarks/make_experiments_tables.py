@@ -1,0 +1,86 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json.  Run after any dry-run refresh:
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+import json
+import os
+
+from benchmarks.common import load_dryrun, step_roofline
+from repro.configs import ASSIGNED, SHAPES, applicable, get_config
+
+HBM = 16 * 2**30
+
+
+def dryrun_table(dryruns, pod="pod1", suffix=""):
+    lines = ["| arch | shape | kind | FLOPs/body | bytes/body | coll bytes | "
+             "coll ops | args/dev | temp/dev | fits 16G | compile |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED:
+        for sname in SHAPES:
+            rec = dryruns.get(f"{arch}_{sname}_{pod}{suffix}")
+            if rec is None:
+                if not applicable(arch, SHAPES[sname]):
+                    lines.append(f"| {arch} | {sname} | — | SKIP (DESIGN.md §4) "
+                                 "| | | | | | | |")
+                continue
+            m = rec["memory"]
+            coll = rec["collective_bytes"]
+            coll_b = sum(v for k, v in coll.items() if k != "count")
+            total = m["argument_bytes"] + m["temp_bytes"]
+            fits = "YES" if total <= HBM else f"NO ({total/2**30:.0f}G)"
+            lines.append(
+                f"| {arch} | {sname} | {rec['kind']} | {rec['flops']:.2e} | "
+                f"{rec['bytes_accessed']:.2e} | {coll_b:.2e} | "
+                f"{int(coll['count'])} | {m['argument_bytes']/2**30:.2f}G | "
+                f"{m['temp_bytes']/2**30:.2f}G | {fits} | "
+                f"{rec['compile_seconds']:.0f}s |")
+    return "\n".join(lines)
+
+
+def roofline_table(dryruns):
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "MODEL_FLOPS | useful frac | what would move the bottleneck |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    advice = {
+        ("train", "compute"): "more chips / lower precision; MFU already near roofline",
+        ("prefill", "compute"): "attention is the gap: larger q/k tiles, fused kernels",
+        ("decode", "memory"): "KV-cache reads dominate: quantize cache, hybrid ACT blocks (the paper), better head sharding",
+        ("decode", "compute"): "batch more requests per step",
+        ("decode", "collective"): "reduce per-layer psums by sharding kv heads",
+        ("prefill", "memory"): "stream weights once per layer, fuse norms",
+        ("train", "memory"): "more microbatches / remat policy",
+        ("train", "collective"): "overlap grad reduce-scatter with bwd compute",
+    }
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if not applicable(arch, shape):
+                continue
+            rec = dryruns.get(f"{arch}_{sname}_pod1", {})
+            rl = step_roofline(cfg, shape, hlo=rec)
+            useful = rl.model_flops / max(rl.compute_s * 256 * 197e12, 1e-9)
+            tip = advice.get((shape.kind, rl.dominant), "")
+            lines.append(
+                f"| {arch} | {sname} | {rl.compute_s*1e3:.3f} ms | "
+                f"{rl.memory_s*1e3:.3f} ms | {rl.collective_s*1e3:.3f} ms | "
+                f"**{rl.dominant}** | {rl.model_flops:.2e} | {useful:.2f} | "
+                f"{tip} |")
+    return "\n".join(lines)
+
+
+def main():
+    base = load_dryrun("experiments/dryrun_baseline")
+    opt = load_dryrun("experiments/dryrun_opt")
+    print("### Single-pod (16x16) dry-run — BASELINE (paper-faithful layouts)\n")
+    print(dryrun_table(base, "pod1"))
+    print("\n### Single-pod (16x16) dry-run — OPTIMIZED (§Perf iterations)\n")
+    print(dryrun_table(opt, "pod1", "_2d"))
+    print("\n### Multi-pod (2x16x16) dry-run — OPTIMIZED\n")
+    print(dryrun_table(opt, "pod2", "_2d"))
+    print("\n### Roofline (single-pod, analytic terms + HLO evidence)\n")
+    print(roofline_table(base))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""§Roofline: three-term roofline per (arch x shape) on the 16x16 pod.
+
+Analytic terms (exact for our implementation; see common.py for why the HLO
+numbers are per-scan-body) + HLO evidence from experiments/dryrun/*.json.
+"""
+from benchmarks.common import (Roofline, emit, load_dryrun, step_roofline)
+from repro.configs import ASSIGNED, SHAPES, applicable, get_config
+
+
+def rows(dryruns=None):
+    dryruns = dryruns if dryruns is not None else load_dryrun()
+    out = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if not applicable(arch, shape):
+                continue
+            rec = dryruns.get(f"{arch}_{sname}_pod1", {})
+            rl = step_roofline(cfg, shape, hlo=rec)
+            out.append((arch, sname, rl, rec))
+    return out
+
+
+def run():
+    for arch, sname, rl, rec in rows():
+        useful = rl.model_flops / max(rl.compute_s * 256 * 197e12, 1e-9)
+        mem = rec.get("memory", {})
+        emit(f"roofline.{arch}.{sname}", rl.bound_s * 1e6,
+             f"compute={rl.compute_s*1e3:.3f}ms memory={rl.memory_s*1e3:.3f}ms "
+             f"collective={rl.collective_s*1e3:.3f}ms dominant={rl.dominant} "
+             f"useful_flops_frac={useful:.2f} "
+             f"hlo_temp={mem.get('temp_bytes', 0)/2**30:.1f}GiB "
+             f"hlo_args={mem.get('argument_bytes', 0)/2**30:.1f}GiB")

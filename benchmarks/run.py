@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig12]``
+Prints ``name,us_per_call,derived`` CSV.
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import header
+
+
+MODULES = [
+    "fig3_batch_scaling",
+    "table2_saturation",
+    "fig4_token_recompute",
+    "fig6_act_vs_token",
+    "fig11_regression",
+    "fig12_throughput",
+    "fig13_traffic",
+    "fig14_gpu_util",
+    "fig15_policy_ablation",
+    "beyond_paper",
+    "roofline",
+    "kernel_bench",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args(argv)
+    header()
+    failed = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            mod.run()
+        except Exception:                      # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Continuous batching over the hybrid KV/ACT cache: requests arrive, are
+admitted into free decode slots between iterations, finish and leave — all
+while every running request keeps the Algorithm-1 ACT:KV ratio and the output
+stays token-identical to offline decoding.
+
+Run:  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import request_trace
+from repro.models import model as M
+from repro.serving import ContinuousBatchingServer, exact_reference_generate
+
+cfg = get_config("opt-6.7b-reduced")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+requests = request_trace(cfg.vocab_size, 8, prompt_mean=48, gen_tokens=10, seed=13)
+
+server = ContinuousBatchingServer(cfg, params, slots=3, kv_cap=128, act_cap=128)
+out, stats = server.run(requests)
+ref = exact_reference_generate(cfg, params, requests)
+exact = all(np.array_equal(out[r.rid], ref[r.rid]) for r in requests)
+print(f"{len(requests)} requests through 3 slots in {stats.steps} iterations")
+print(f"token-exact vs offline decode: {exact}")
+print(f"simulated throughput on {server.hw.name}: {stats.throughput:.0f} tok/s")
+print(f"TTFT mean {np.mean(list(stats.ttft.values()))*1e3:.2f} ms, "
+      f"TBT mean {np.mean(list(stats.tbt.values()))*1e3:.2f} ms (simulated)")
+assert exact

@@ -1,0 +1,39 @@
+"""Quickstart: HybridServe in 60 seconds (CPU, reduced OPT).
+
+1. Builds a reduced OPT model (the paper's architecture family).
+2. Algorithm 1 picks the host ACT:KV ratio for the target hardware.
+3. Serves a small request batch with the hybrid KV/ACT cache.
+4. Verifies the generated tokens are IDENTICAL to plain KV-cache decoding —
+   the paper's central no-approximation claim.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import request_trace
+from repro.models import model as M
+from repro.serving import HybridServeEngine, exact_reference_generate
+
+cfg = get_config("opt-6.7b-reduced")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+requests = request_trace(cfg.vocab_size, n_requests=4, prompt_mean=48,
+                         gen_tokens=12, seed=7)
+
+engine = HybridServeEngine(cfg, params, mode="hybrid")
+print(f"Algorithm-1 host allocation: ACT={engine.alloc.act_blocks} blocks, "
+      f"KV={engine.alloc.kv_blocks} blocks (act fraction {engine.act_frac:.2f})")
+
+outputs, stats = engine.generate(requests)
+reference = exact_reference_generate(cfg, params, requests)
+for r in requests:
+    exact = np.array_equal(outputs[r.rid], reference[r.rid])
+    print(f"request {r.rid}: {len(r.prompt)}-token prompt -> "
+          f"{outputs[r.rid][:8]}... exact={exact}")
+    assert exact
+
+print(f"\n{stats.generated_tokens} tokens generated; on {engine.hw.name} this "
+      f"schedule simulates to {stats.sim_throughput:.1f} tok/s at "
+      f"{stats.sim_gpu_util:.0%} GPU utilization")
+print("hybrid KV/ACT cache output is bit-identical to full KV caching ✓")

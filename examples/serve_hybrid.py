@@ -1,0 +1,31 @@
+"""Serve a batched request trace with all three cache modes and compare the
+simulated schedules on the paper's hardware (Fig. 12's experiment, reduced).
+
+Run:  PYTHONPATH=src python examples/serve_hybrid.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.data import request_trace
+from repro.models import model as M
+from repro.serving import HybridServeEngine, exact_reference_generate
+
+cfg = get_config("opt-6.7b-reduced")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+requests = request_trace(cfg.vocab_size, n_requests=8, prompt_mean=64,
+                         gen_tokens=16, seed=11)
+reference = exact_reference_generate(cfg, params, requests)
+
+print(f"{'mode':8s} {'exact':6s} {'sim tok/s':>10s} {'gpu util':>9s} "
+      f"{'kv MiB':>8s} {'act MiB':>8s}")
+for mode in ["kv", "act", "hybrid"]:
+    eng = HybridServeEngine(cfg, params, mode=mode, hw=cm.RTX4090)
+    out, st = eng.generate(requests)
+    exact = all(np.array_equal(out[r.rid], reference[r.rid]) for r in requests)
+    print(f"{mode:8s} {str(exact):6s} {st.sim_throughput:10.1f} "
+          f"{st.sim_gpu_util:9.1%} {st.traffic.get('kv_load', 0)/2**20:8.1f} "
+          f"{st.traffic.get('act_load', 0)/2**20:8.1f}")
+    assert exact
+print("\nall modes produce identical tokens; hybrid balances the two lanes ✓")

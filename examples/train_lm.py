@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps.
+
+Uses the full framework stack: config -> model -> data pipeline -> AdamW ->
+checkpointing.  The config is a scaled yi-style GQA decoder sized to ~100M
+params (12L, d=768), trained on the synthetic structured corpus; loss must
+drop substantially from its ~ln(V) start.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, lm_batches
+from repro.launch.specs import make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+from repro import checkpoint
+
+
+def build_100m():
+    base = get_config("yi-6b")
+    return dataclasses.replace(
+        base, name="yi-100m", num_layers=12, d_model=768, num_heads=12,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192,
+        max_seq_len=1024, dtype="float32")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args(argv)
+
+    cfg = build_100m()
+    n_params = cfg.num_params()
+    print(f"model {cfg.name}: {n_params/1e6:.0f}M params")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    it = lm_batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                               batch_size=args.batch))
+
+    losses, t0 = [], time.time()
+    for step in range(args.steps):
+        raw = next(it)
+        batch = {"tokens": jnp.asarray(raw["tokens"]),
+                 "labels": jnp.asarray(raw["labels"])}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={losses[-1]:.4f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.5, "loss should fall on structured data"
+    checkpoint.save("experiments/ckpt/train_lm", {"params": params},
+                    metadata={"final_loss": losses[-1], "steps": args.steps})
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; checkpoint saved ✓")
+
+
+if __name__ == "__main__":
+    main()

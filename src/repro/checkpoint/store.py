@@ -1,0 +1,72 @@
+"""Pytree checkpointing to .npz with flattened path keys + json metadata.
+
+Sharding-aware in the practical sense: arrays are pulled to host with
+jax.device_get (fully addressable on the CPU runtime; on real multi-host pods
+each host writes its addressable shards — the layout hook is `shard_suffix`).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_key_str(k) for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":       # npz has no bf16: store bits
+            arr = arr.view(np.uint16)
+            key = key + "::bf16"
+        flat[key] = arr
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save(path: str, tree, metadata: Optional[Dict[str, Any]] = None,
+         shard_suffix: str = "") -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path + shard_suffix + ".npz", **flat)
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"keys": sorted(flat), "metadata": metadata or {}}, f, indent=1)
+
+
+def restore(path: str, like, shard_suffix: str = ""):
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    data = np.load(path + shard_suffix + ".npz")
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in leaves_paths:
+        key = SEP.join(_key_str(k) for k in p)
+        if key + "::bf16" in data:
+            import ml_dtypes
+            arr = data[key + "::bf16"].view(ml_dtypes.bfloat16)
+        else:
+            arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with open(path + ".meta.json") as f:
+        return json.load(f)["metadata"]

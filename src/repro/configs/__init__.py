@@ -1,0 +1,43 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, reduced
+from repro.configs.shapes import SHAPES, InputShape, applicable
+
+from repro.configs.whisper_base import CONFIG as WHISPER_BASE
+from repro.configs.gemma3_27b import CONFIG as GEMMA3_27B
+from repro.configs.qwen2_vl_2b import CONFIG as QWEN2_VL_2B
+from repro.configs.grok_1_314b import CONFIG as GROK_1_314B
+from repro.configs.yi_6b import CONFIG as YI_6B
+from repro.configs.gemma3_1b import CONFIG as GEMMA3_1B
+from repro.configs.dbrx_132b import CONFIG as DBRX_132B
+from repro.configs.jamba_1_5_large import CONFIG as JAMBA_1_5_LARGE
+from repro.configs.minitron_4b import CONFIG as MINITRON_4B
+from repro.configs.mamba2_2_7b import CONFIG as MAMBA2_2_7B
+from repro.configs import opt as _opt
+
+ASSIGNED = {
+    c.name: c
+    for c in (
+        WHISPER_BASE, GEMMA3_27B, QWEN2_VL_2B, GROK_1_314B, YI_6B,
+        GEMMA3_1B, DBRX_132B, JAMBA_1_5_LARGE, MINITRON_4B, MAMBA2_2_7B,
+    )
+}
+
+REGISTRY = dict(ASSIGNED)
+REGISTRY.update(_opt.CONFIGS)
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve ``--arch <id>``; ``<id>-reduced`` gives the smoke variant."""
+    if name in REGISTRY:
+        return REGISTRY[name]
+    if name.endswith("-reduced") and name[: -len("-reduced")] in REGISTRY:
+        return reduced(REGISTRY[name[: -len("-reduced")]])
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "SHAPES", "ASSIGNED", "REGISTRY",
+    "get_config", "reduced", "applicable",
+]

@@ -1,0 +1,14 @@
+"""HybridServe core: hybrid KV/ACT cache machinery (paper §4)."""
+from repro.core.blocks import (BLOCK_TOKENS, BlockManager, BlockType, Location,
+                               act_block_bytes, kv_block_bytes)
+from repro.core.costmodel import (HARDWARE, RTX4090, TPU_V5E, HardwareSpec,
+                                  LinearFit, fit_linear, make_cost_fns,
+                                  profile_cost_fns, t_load_w)
+from repro.core.minibatch import (MiniBatch, RequestBlocks, balance_metric,
+                                  f_b, form_minibatches)
+from repro.core.pipeline import (GenerationResult, MiniBatchSpec, StepConfig,
+                                 TimelineResult, simulate_generation,
+                                 simulate_step)
+from repro.core.policy import (HostAllocation, host_block_allocation,
+                               next_block_kind, policy_act_ratio,
+                               request_block_split, device_act_blocks)

@@ -1,0 +1,158 @@
+"""Hybrid cache blocks: PagedAttention-style tables extended with block TYPE.
+
+Each logical block covers BLOCK_TOKENS tokens of one request's context across
+all layers, stored either as K/V tensors (KV block) or as activation
+checkpoints (ACT block, half the bytes for MHA), resident on HOST or DEVICE
+(paper §4.1-4.2, Fig. 7).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+BLOCK_TOKENS = 16           # vLLM default; MXU-friendly sublane count
+
+
+class BlockType(enum.Enum):
+    KV = "kv"
+    ACT = "act"
+
+
+class Location(enum.Enum):
+    HOST = "host"
+    DEVICE = "device"
+
+
+def kv_block_bytes(cfg: ModelConfig) -> int:
+    """S_KV: one KV block, all layers."""
+    return BLOCK_TOKENS * cfg.kv_bytes_per_token() * cfg.num_layers
+
+
+def act_block_bytes(cfg: ModelConfig) -> int:
+    """S_ACT: one ACT block, all layers (= S_KV/2 for MHA)."""
+    return BLOCK_TOKENS * cfg.act_bytes_per_token() * cfg.num_layers
+
+
+@dataclass
+class LogicalBlock:
+    kind: BlockType
+    location: Location
+    pbn: int                 # physical block number within its (kind, location) pool
+    ntokens: int = 0         # filled tokens (<= BLOCK_TOKENS)
+
+    @property
+    def full(self) -> bool:
+        return self.ntokens >= BLOCK_TOKENS
+
+
+class PhysicalPool:
+    """Fixed-capacity allocator for one (kind, location) pool."""
+
+    def __init__(self, capacity_blocks: int):
+        self.capacity = int(capacity_blocks)
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.allocated = 0
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        self.allocated += 1
+        return self._free.pop()
+
+    def free(self, pbn: int) -> None:
+        self.allocated -= 1
+        self._free.append(pbn)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+
+class BlockManager:
+    """Two-tier, two-type physical pools + per-request block tables.
+
+    Pool capacities come from the Algorithm-1 host allocation and the GPU
+    buffer budget; the engine asks for blocks in ratio (Eq. 11) order.
+    """
+
+    def __init__(self, cfg: ModelConfig, *,
+                 host_kv_blocks: int, host_act_blocks: int,
+                 dev_kv_blocks: int, dev_act_blocks: int):
+        self.cfg = cfg
+        self.pools: Dict[Tuple[BlockType, Location], PhysicalPool] = {
+            (BlockType.KV, Location.HOST): PhysicalPool(host_kv_blocks),
+            (BlockType.ACT, Location.HOST): PhysicalPool(host_act_blocks),
+            (BlockType.KV, Location.DEVICE): PhysicalPool(dev_kv_blocks),
+            (BlockType.ACT, Location.DEVICE): PhysicalPool(dev_act_blocks),
+        }
+        self.tables: Dict[int, List[LogicalBlock]] = {}
+
+    # -- allocation ----------------------------------------------------------
+    def new_request(self, rid: int) -> None:
+        assert rid not in self.tables
+        self.tables[rid] = []
+
+    def free_request(self, rid: int) -> None:
+        for blk in self.tables.pop(rid, []):
+            self.pools[(blk.kind, blk.location)].free(blk.pbn)
+
+    def _alloc_block(self, kind: BlockType) -> Optional[LogicalBlock]:
+        # ACT blocks prefer DEVICE residency (paper §4.2.1: ACT is half-sized,
+        # keeping it on-device maximises recompute with zero PCIe cost);
+        # KV blocks live on HOST.
+        order = ([Location.DEVICE, Location.HOST] if kind == BlockType.ACT
+                 else [Location.HOST, Location.DEVICE])
+        for loc in order:
+            pbn = self.pools[(kind, loc)].alloc()
+            if pbn is not None:
+                return LogicalBlock(kind, loc, pbn)
+        return None
+
+    def append_token(self, rid: int, kind: BlockType) -> Optional[LogicalBlock]:
+        """Account one more token of the given representation; allocates a new
+        physical block at block boundaries.  Returns the block written to, or
+        None if out of memory."""
+        table = self.tables[rid]
+        last = next((b for b in reversed(table) if b.kind == kind and not b.full), None)
+        if last is None:
+            last = self._alloc_block(kind)
+            if last is None:
+                return None
+            table.append(last)
+        last.ntokens += 1
+        return last
+
+    # -- queries --------------------------------------------------------------
+    def counts(self, rid: int) -> Dict[str, int]:
+        t = self.tables[rid]
+        return {
+            "kv_blocks": sum(1 for b in t if b.kind == BlockType.KV),
+            "act_blocks": sum(1 for b in t if b.kind == BlockType.ACT),
+            "kv_tokens": sum(b.ntokens for b in t if b.kind == BlockType.KV),
+            "act_tokens": sum(b.ntokens for b in t if b.kind == BlockType.ACT),
+            "host_blocks": sum(1 for b in t if b.location == Location.HOST),
+            "dev_blocks": sum(1 for b in t if b.location == Location.DEVICE),
+        }
+
+    def context_len(self, rid: int) -> int:
+        return sum(b.ntokens for b in self.tables[rid])
+
+    def host_bytes_to_load(self, rid: int) -> Tuple[int, int]:
+        """(kv_bytes, act_bytes) that must cross PCIe for one generation step."""
+        cfg = self.cfg
+        kv = act = 0
+        for b in self.tables[rid]:
+            if b.location != Location.HOST:
+                continue
+            per_tok = (cfg.kv_bytes_per_token() if b.kind == BlockType.KV
+                       else cfg.act_bytes_per_token())
+            sz = b.ntokens * per_tok * cfg.num_layers
+            if b.kind == BlockType.KV:
+                kv += sz
+            else:
+                act += sz
+        return kv, act

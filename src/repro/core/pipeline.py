@@ -1,0 +1,268 @@
+"""Two-lane asynchronous pipeline model (paper Fig. 8/9) + generation sim.
+
+The machine is modelled as two serialised lanes with double-buffered
+hand-offs, exactly the structure HybridServe's engine schedules:
+
+  PCIe lane:  [w(l+1) prefetch][KV load mb0][ACT load mb0][KV load mb1]...[store]
+  GPU  lane:              [KV-gen mb0][fwd mb0][KV-gen mb1][fwd mb1]...
+
+Dependencies: fwd(l, m) needs w(l), KV(l, m), KV-gen(l, m); KV-gen(l, m)
+needs ACT(l, m); w(l+1) may prefetch as soon as the lane is free and the
+double buffer allows (w buffer of l-1 freed by fwd(l-1) completion).
+
+This is the same information the paper's own policy reasons with (T_PCIe vs
+T_Computation); the simulator additionally resolves per-task overlap so
+imbalance (Fig. 9) shows up as lane idle time.  Benchmarks reproduce the
+paper's figures by sweeping modes:
+
+  kv      — FlexGen-style: full KV on host (weights partially resident)
+  act     — Activation-cache-only (HybridServe-Act-Cache)
+  hybrid  — KV-Activation hybrid with a given ACT:KV token split
+  token   — token-ID recomputation (full-layer forward for the recompute set)
+  nomb    — DeepSpeed-like: no mini-batching (single batch, capped by memory)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel as cm
+from repro.core.blocks import BLOCK_TOKENS
+
+
+@dataclass
+class LaneTask:
+    lane: str                 # "pcie" | "gpu"
+    dur: float
+    deps: Tuple[int, ...] = ()
+    tag: str = ""
+
+
+@dataclass
+class TimelineResult:
+    total: float
+    pcie_busy: float
+    gpu_busy: float
+    traffic: Dict[str, float]           # bytes by category
+    finish: List[float] = field(default_factory=list)
+
+    @property
+    def gpu_util(self) -> float:
+        return self.gpu_busy / self.total if self.total > 0 else 0.0
+
+    @property
+    def pcie_util(self) -> float:
+        return self.pcie_busy / self.total if self.total > 0 else 0.0
+
+
+def run_timeline(tasks: List[LaneTask]) -> TimelineResult:
+    """Serialise tasks per lane in list order, honouring cross-lane deps.
+
+    Lanes: "pcie" (host->device, loads), "pcie_up" (device->host, stores —
+    PCIe is full duplex so stores never block loads) and "gpu" (compute).
+    """
+    lane_free = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0}
+    busy = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0}
+    finish: List[float] = [0.0] * len(tasks)
+    traffic: Dict[str, float] = {}
+    for i, t in enumerate(tasks):
+        ready = max([finish[d] for d in t.deps], default=0.0)
+        start = max(lane_free[t.lane], ready)
+        end = start + t.dur
+        lane_free[t.lane] = end
+        busy[t.lane] += t.dur
+        finish[i] = end
+    total = max(lane_free.values())
+    return TimelineResult(total=total, pcie_busy=busy["pcie"],
+                          gpu_busy=busy["gpu"], traffic=traffic, finish=finish)
+
+
+# =============================================================================
+# one generation step
+# =============================================================================
+
+@dataclass(frozen=True)
+class MiniBatchSpec:
+    """Token-level composition of one mini-batch at the current step."""
+    n_requests: int
+    kv_host_tokens: int       # context tokens held as KV on host (per layer)
+    act_host_tokens: int      # context tokens held as ACT on host
+    act_dev_tokens: int       # context tokens held as ACT on device
+    kv_dev_tokens: int = 0    # context tokens held as KV on device
+    tok_recompute_tokens: int = 0   # context tokens held as raw token IDs
+    ctx_tokens: int = 0       # total context per request (for attention cost)
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    weight_host_frac: float = 1.0    # fraction of weights streamed from host
+    prefetch_depth: int = 2          # double buffering
+
+
+def simulate_step(cfg: ModelConfig, hw: cm.HardwareSpec,
+                  minibatches: List[MiniBatchSpec],
+                  step_cfg: StepConfig = StepConfig()) -> TimelineResult:
+    """One token-generation iteration across all layers x mini-batches."""
+    eff = hw.flops * hw.mfu
+    L = cfg.num_layers
+    w_bytes = cm.layer_weight_bytes(cfg) * step_cfg.weight_host_frac
+    t_w = w_bytes / hw.host_link_bw
+    kvB, actB = cfg.kv_bytes_per_token(), cfg.act_bytes_per_token()
+
+    tasks: List[LaneTask] = []
+    idx: Dict[Tuple, int] = {}
+
+    def add(key, lane, dur, deps=(), tag=""):
+        tasks.append(LaneTask(lane, dur, tuple(idx[d] for d in deps if d in idx), tag))
+        idx[key] = len(tasks) - 1
+        return idx[key]
+
+    traffic = {"weights": 0.0, "kv_load": 0.0, "act_load": 0.0, "store": 0.0}
+
+    # task emission order = schedule order: layer-major; within a layer all
+    # loads queue before compute so mini-batch m+1's transfers overlap mini-
+    # batch m's compute (double buffering); stores ride the full-duplex
+    # upstream direction and never block loads.
+    for l in range(L):
+        # weight prefetch for layer l (double buffered against l-depth fwd)
+        dep = [("fwd", l - step_cfg.prefetch_depth, len(minibatches) - 1)]
+        add(("w", l), "pcie", t_w, deps=dep, tag="w")
+        traffic["weights"] += w_bytes
+        kv_bw = hw.host_link_bw * hw.gather_eff     # scattered page gathers
+        for m, mb in enumerate(minibatches):
+            kv_bytes = mb.kv_host_tokens * kvB
+            act_bytes = mb.act_host_tokens * actB
+            add(("kv", l, m), "pcie", kv_bytes / kv_bw,
+                deps=[("fwd", l - step_cfg.prefetch_depth, m)], tag="kv")
+            add(("act", l, m), "pcie", act_bytes / kv_bw,
+                deps=[("fwd", l - step_cfg.prefetch_depth, m)], tag="act")
+            traffic["kv_load"] += kv_bytes
+            traffic["act_load"] += act_bytes
+        for m, mb in enumerate(minibatches):
+            # GPU: KV-gen for ACT tokens (Eq. 7) ... or full-layer forward for
+            # token-ID recomputation
+            act_tokens = mb.act_host_tokens + mb.act_dev_tokens
+            t_gen = (act_tokens * cm.kv_gen_flops_per_token(cfg)
+                     / (hw.flops * hw.gen_mfu))
+            t_gen += (mb.tok_recompute_tokens * cm.forward_flops_per_token(
+                cfg, mb.tok_recompute_tokens) / eff)
+            add(("gen", l, m), "gpu", t_gen,
+                deps=[("act", l, m)], tag="gen")
+
+            # GPU: forward for the new token of every request in the mb
+            fwd_flops = mb.n_requests * cm.forward_flops_per_token(cfg, mb.ctx_tokens)
+            add(("fwd", l, m), "gpu", fwd_flops / eff,
+                deps=[("w", l), ("kv", l, m), ("gen", l, m)], tag="fwd")
+
+            # PCIe upstream: store the new token's KV/ACT back to host
+            st_bytes = mb.n_requests * max(kvB, actB)
+            add(("st", l, m), "pcie_up", st_bytes / hw.host_link_bw,
+                deps=[("fwd", l, m)], tag="st")
+            traffic["store"] += st_bytes
+
+    res = run_timeline(tasks)
+    res.traffic.update(traffic)
+    return res
+
+
+# =============================================================================
+# full-generation simulation (prefill + N decode steps)
+# =============================================================================
+
+@dataclass
+class GenerationResult:
+    throughput: float          # generated tokens / s (paper's metric)
+    step_time: float           # mean decode-step latency
+    prefill_time: float
+    gpu_util: float
+    traffic_per_step: Dict[str, float]
+    minibatch_count: int
+
+
+def _prefill_time(cfg: ModelConfig, hw: cm.HardwareSpec, batch: int,
+                  prompt: int, step_cfg: StepConfig) -> float:
+    """Prefill is compute/transfer max-overlap: weights stream once, prompt
+    forward is batched."""
+    eff = hw.flops * hw.mfu
+    w = cfg.num_params() * cfg.bytes_per_param() * step_cfg.weight_host_frac
+    flops = batch * prompt * cm.forward_flops_per_token(cfg, prompt) * cfg.num_layers
+    return max(w / hw.host_link_bw, flops / eff)
+
+
+def simulate_generation(cfg: ModelConfig, hw: cm.HardwareSpec, *,
+                        batch: int, prompt: int, gen: int, mode: str,
+                        act_ratio: float = 0.0, act_gpu_tokens: int = 0,
+                        minibatch_requests: Optional[int] = None,
+                        weight_host_frac: Optional[float] = None,
+                        recompute_ratio: float = 0.0) -> GenerationResult:
+    """Simulate `gen` decode steps; context grows from `prompt`.
+
+    mode: kv | act | hybrid | token | nomb   (see module docstring)
+    act_ratio: fraction of HOST context tokens held as ACT (hybrid mode)
+    """
+    usable_dev = hw.device_mem * 0.7            # minus staging buffers/runtime
+    if mode in ("act", "hybrid"):
+        # HybridServe: weights stream; device memory prioritises ACT blocks
+        if weight_host_frac is None:
+            weight_host_frac = 1.0
+        if act_gpu_tokens == 0:
+            per_tok = cfg.act_bytes_per_token() * cfg.num_layers
+            act_gpu_tokens = int(usable_dev / per_tok)
+    else:
+        # FlexGen/DeepSpeed-style: resident weights take the device memory
+        if weight_host_frac is None:
+            w_total = cfg.num_params() * cfg.bytes_per_param()
+            weight_host_frac = float(np.clip(1.0 - usable_dev / w_total, 0.0, 1.0))
+    step_cfg = StepConfig(weight_host_frac=weight_host_frac)
+
+    if minibatch_requests is None:
+        minibatch_requests = batch if mode == "nomb" else max(1, batch // 4)
+
+    n_mb = (batch + minibatch_requests - 1) // minibatch_requests
+    times, utils = [], []
+    traffic_acc: Dict[str, float] = {}
+    # sample a few representative steps and integrate
+    sample_steps = sorted(set([0, gen // 4, gen // 2, 3 * gen // 4, gen - 1]))
+    for s in sample_steps:
+        ctx = prompt + s
+        mbs = []
+        remaining = batch
+        for m in range(n_mb):
+            nr = min(minibatch_requests, remaining)
+            remaining -= nr
+            total_ctx = nr * ctx
+            act_dev = min(act_gpu_tokens // max(n_mb, 1), total_ctx)
+            rest = total_ctx - act_dev
+            if mode in ("kv", "nomb"):
+                spec = MiniBatchSpec(nr, rest, 0, act_dev, ctx_tokens=ctx)
+            elif mode == "act":
+                spec = MiniBatchSpec(nr, 0, rest, act_dev, ctx_tokens=ctx)
+            elif mode == "hybrid":
+                a = int(rest * act_ratio)
+                spec = MiniBatchSpec(nr, rest - a, a, act_dev, ctx_tokens=ctx)
+            elif mode == "token":
+                t = int(rest * recompute_ratio)
+                spec = MiniBatchSpec(nr, rest - t, 0, act_dev,
+                                     tok_recompute_tokens=t, ctx_tokens=ctx)
+            else:
+                raise ValueError(mode)
+            mbs.append(spec)
+        res = simulate_step(cfg, hw, mbs, step_cfg)
+        times.append(res.total)
+        utils.append(res.gpu_util)
+        for k, v in res.traffic.items():
+            traffic_acc[k] = traffic_acc.get(k, 0.0) + v / len(sample_steps)
+
+    step_time = float(np.mean(times))
+    prefill = _prefill_time(cfg, hw, batch, prompt, step_cfg)
+    total_time = prefill + step_time * gen
+    thr = batch * gen / total_time
+    return GenerationResult(throughput=thr, step_time=step_time,
+                            prefill_time=prefill,
+                            gpu_util=float(np.mean(utils)),
+                            traffic_per_step=traffic_acc,
+                            minibatch_count=n_mb)

@@ -1,0 +1,147 @@
+"""Cache management policy (paper §4.3, Algorithm 1 + Eq. 11).
+
+Step 1  initial_cache_allocation  — blocks needed to kill pipeline idleness
+Step 2  alloc_remaining           — fill the rest of host memory balanced
+Step 3  request ratio             — every request keeps #ACT:#KV = host ratio
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import BLOCK_TOKENS, act_block_bytes, kv_block_bytes
+from repro.core.costmodel import HardwareSpec, LinearFit, profile_cost_fns, t_load_w
+
+
+@dataclass(frozen=True)
+class HostAllocation:
+    act_blocks: int
+    kv_blocks: int
+    act_init: int
+    kv_init: int
+
+    @property
+    def ratio(self) -> float:
+        """#ACT_Host : #KV_Host as a float (Eq. 11 driver)."""
+        if self.kv_blocks == 0:
+            return float("inf")
+        return self.act_blocks / self.kv_blocks
+
+
+def _blocks_to_tokens(n_blocks: float) -> float:
+    return n_blocks * BLOCK_TOKENS
+
+
+def initial_cache_allocation(cfg: ModelConfig, hw: HardwareSpec,
+                             fit_gen: LinearFit, fit_load: LinearFit,
+                             n_act_gpu_blocks: int) -> Tuple[int, int]:
+    """Algorithm 1 lines 10-18: eliminate idle time vs. weight loading."""
+    T_w = t_load_w(cfg, hw)
+    T_budget = T_w - fit_gen(_blocks_to_tokens(n_act_gpu_blocks))
+    act_init = kv_init = 0
+    if T_budget >= 0:
+        act_init = int(fit_gen.inverse(T_budget) // BLOCK_TOKENS)
+    else:
+        kv_init = int(fit_load.inverse(-T_budget) // BLOCK_TOKENS)
+    return act_init, kv_init
+
+
+def alloc_remaining(cfg: ModelConfig, hw: HardwareSpec,
+                    fit_gen: LinearFit, fit_load: LinearFit,
+                    act_init: int, kv_init: int,
+                    generalized: bool = False) -> Tuple[int, int]:
+    """Algorithm 1 lines 20-27: fill remaining host memory with the balanced
+    2x2 linear system  {S_ACT*a + S_KV*k = M_rem ; T_gen(a) = T_load(k)}.
+
+    ``generalized=True`` is the beyond-paper byte-ratio-aware balance
+    (DESIGN.md §7): the paper's Eq. 9 omits the PCIe cost of loading the ACT
+    blocks themselves, which cancels for MHA (ACT = KV/2) but misallocates
+    under GQA where an ACT block costs MORE link bytes than the KV block it
+    replaces.  The generalized balance moves T_load_act to the PCIe side:
+       T_gen(a) = T_load_kv(k) - T_load_act(a).
+    """
+    S_act, S_kv = act_block_bytes(cfg), kv_block_bytes(cfg)
+    S_weight = cfg.num_params() * cfg.bytes_per_param()
+    M_occ = S_act * act_init + S_kv * kv_init
+    M_rem = hw.host_mem - S_weight - M_occ
+    if M_rem <= 0:
+        return 0, 0
+    # T_gen(a_tokens) = T_load(k_tokens), per-block token scaling
+    ga = fit_gen.slope * BLOCK_TOKENS
+    lk = fit_load.slope * BLOCK_TOKENS
+    c = fit_load.intercept - fit_gen.intercept
+    if generalized:
+        # la per block: ACT bytes over the (scattered-gather) link
+        la = BLOCK_TOKENS * cfg.act_bytes_per_token() / (
+            hw.host_link_bw * hw.gather_eff)
+        ga = ga + la
+    # solve: S_act*a + S_kv*k = M_rem ;  ga*a - lk*k = c
+    A = np.array([[S_act, S_kv], [ga, -lk]], float)
+    b = np.array([M_rem, c], float)
+    try:
+        a, k = np.linalg.solve(A, b)
+    except np.linalg.LinAlgError:
+        a, k = 0.0, M_rem / S_kv
+    if a < 0:                         # all-KV corner (GQA archs: ACT never pays)
+        return 0, int(M_rem // S_kv)
+    if k < 0:                         # all-ACT corner
+        return int(M_rem // S_act), 0
+    return int(a), int(k)
+
+
+def host_block_allocation(cfg: ModelConfig, hw: HardwareSpec,
+                          n_act_gpu_blocks: int,
+                          fits: Tuple[LinearFit, LinearFit] = None,
+                          generalized: bool = False) -> HostAllocation:
+    """Algorithm 1 top level: -> #ACT_Host, #KV_Host."""
+    fit_gen, fit_load = fits if fits is not None else profile_cost_fns(cfg, hw)
+    act_init, kv_init = initial_cache_allocation(
+        cfg, hw, fit_gen, fit_load, n_act_gpu_blocks)
+    act_rem, kv_rem = alloc_remaining(cfg, hw, fit_gen, fit_load, act_init,
+                                      kv_init, generalized=generalized)
+    return HostAllocation(act_blocks=act_init + act_rem,
+                          kv_blocks=kv_init + kv_rem,
+                          act_init=act_init, kv_init=kv_init)
+
+
+def request_block_split(alloc: HostAllocation, context_blocks: int) -> Tuple[int, int]:
+    """Eq. 11: split one request's context blocks in the host ACT:KV ratio."""
+    total = alloc.act_blocks + alloc.kv_blocks
+    if total == 0:
+        return 0, context_blocks
+    n_act = int(round(context_blocks * alloc.act_blocks / total))
+    return n_act, context_blocks - n_act
+
+
+def device_act_blocks(cfg: ModelConfig, hw: HardwareSpec,
+                      frac: float = 0.7) -> int:
+    """ACT blocks that fit the device-memory budget (weights stream)."""
+    per_block = act_block_bytes(cfg)
+    return int(hw.device_mem * frac / per_block)
+
+
+def policy_act_ratio(cfg: ModelConfig, hw: HardwareSpec,
+                     generalized: bool = False) -> float:
+    """Fraction of HOST context tokens to keep as ACT, per Algorithm 1 +
+    Eq. 11 — the knob the benchmarks compare against the brute-force best."""
+    alloc = host_block_allocation(cfg, hw, device_act_blocks(cfg, hw),
+                                  generalized=generalized)
+    total = alloc.act_blocks + alloc.kv_blocks
+    return alloc.act_blocks / total if total else 0.0
+
+
+def next_block_kind(alloc: HostAllocation, n_act: int, n_kv: int) -> str:
+    """During generation, keep the running ratio at the host ratio (Eq. 11):
+    'if the ratio is 3:1 and five ACT / two KV blocks exist, allocate ACT'."""
+    if alloc.kv_blocks == 0:
+        return "act"
+    if alloc.act_blocks == 0:
+        return "kv"
+    # choose the kind whose addition brings the ratio closest to target
+    target = alloc.ratio
+    r_act = (n_act + 1) / max(n_kv, 1)
+    r_kv = (n_act) / (n_kv + 1)
+    return "act" if abs(r_act - target) <= abs(r_kv - target) else "kv"

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, Request, lm_batches,
+                                 request_trace, token_stream)

@@ -1,0 +1,24 @@
+"""Oracle for the flash-attention kernel: naive masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, S, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k.astype(jnp.float32)) / np.sqrt(D)
+    i = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window > 0:
+        mask &= i[None, :] > i[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,152 @@
+"""Hybrid paged decode attention — the paper's kernel contribution, TPU-native.
+
+HybridServe extends vLLM's PagedAttention CUDA kernel to attend over "diverse
+KV buffer types" (KV pages + recomputed-from-ACT pages).  The TPU adaptation
+goes one step further than the paper (DESIGN.md §7): the ACT->KV projection
+(Eq. 7) is FUSED into the attention kernel, so a 16-token activation page is
+read into VMEM once, normed + projected on the MXU, and consumed by the
+online-softmax accumulator without a round trip of the recomputed K/V through
+HBM.  On a GPU the paper runs KV-Gen as a separate GEMM; on TPU the fusion
+removes 2 * T * kv_dim bytes of HBM traffic per page.
+
+Layout:
+  q            (B, KVH, G, D)    one query token per request (GQA grouped)
+  k/v_pages    (P_kv, T, KVH, D) physical KV page pools (post-positional)
+  act_pages    (P_act, T, d_model) physical ACT page pool (raw residuals)
+  page_table   (B, MAXP) int32   physical index into the type's pool
+  page_type    (B, MAXP) int32   0 = KV page, 1 = ACT page, 2 = empty
+  page_ntok    (B, MAXP) int32   valid tokens in page
+Grid (B, KVH, MAXP); the page dimension accumulates online-softmax state in
+VMEM scratch.  Positions are assumed already applied to q and k_pages
+(learned-positional models — OPT — need nothing for ACT pages; RoPE models use
+the ops.py XLA path, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+PAGE = 16
+NEG_INF = -1e30
+
+
+def _hybrid_attn_kernel(
+        # scalar prefetch
+        page_table, page_type, page_ntok,
+        # inputs
+        q_ref, k_ref, v_ref, act_ref, scale_ref, wk_ref, wv_ref,
+        # outputs
+        o_ref,
+        # scratch
+        acc, m_s, l_s,
+        *, norm_type: str, eps: float, sm_scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    ptype = page_type[b, p]
+    ntok = page_ntok[b, p]
+
+    @pl.when(ptype != 2)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (G, D)
+
+        def kv_path():
+            return (k_ref[0, :, 0, :].astype(jnp.float32),
+                    v_ref[0, :, 0, :].astype(jnp.float32))   # (T, D)
+
+        def act_path():
+            a = act_ref[0].astype(jnp.float32)               # (T, d_model)
+            s = scale_ref[...].astype(jnp.float32)           # (1, d_model)
+            if norm_type == "rmsnorm":
+                var = jnp.mean(a * a, axis=-1, keepdims=True)
+                a = a * lax.rsqrt(var + eps) * (1.0 + s)
+            elif norm_type == "layernorm":
+                mu = jnp.mean(a, axis=-1, keepdims=True)
+                var = jnp.mean((a - mu) ** 2, axis=-1, keepdims=True)
+                a = (a - mu) * lax.rsqrt(var + eps) * s
+            wk = wk_ref[:, 0, :].astype(jnp.float32)         # (d_model, D)
+            wv = wv_ref[:, 0, :].astype(jnp.float32)
+            return (jnp.dot(a, wk, preferred_element_type=jnp.float32),
+                    jnp.dot(a, wv, preferred_element_type=jnp.float32))
+
+        k, v = lax.cond(ptype == 1, act_path, kv_path)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, T)
+        valid = lax.broadcasted_iota(jnp.int32, s.shape, 1) < ntok
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev, l_prev = m_s[...], l_s[...]                   # (G, 1)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_cur)
+        pexp = jnp.exp(s - m_cur)
+        pexp = jnp.where(valid, pexp, 0.0)
+        l_s[...] = l_prev * corr + pexp.sum(axis=-1, keepdims=True)
+        m_s[...] = m_cur
+        acc[...] = acc[...] * corr + jnp.dot(
+            pexp, v, preferred_element_type=jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("norm_type", "eps", "interpret"))
+def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
+                           page_table, page_type, page_ntok, *,
+                           norm_type: str = "layernorm", eps: float = 1e-5,
+                           interpret: bool = True):
+    """-> (B, KVH, G, D) attention output over the hybrid paged cache."""
+    B, KVH, G, D = q.shape
+    P_kv, T, _, _ = k_pages.shape
+    d_model = act_pages.shape[-1]
+    MAXP = page_table.shape[1]
+    sm_scale = 1.0 / (D ** 0.5)
+    scale2d = norm_scale.reshape(1, d_model)
+
+    def k_index(b, h, p, pt, pty, pn):
+        # invalid/ACT pages clamp to physical page 0 (loaded but unused)
+        return (jnp.where(pty[b, p] == 0, pt[b, p], 0), 0, h, 0)
+
+    def act_index(b, h, p, pt, pty, pn):
+        return (jnp.where(pty[b, p] == 1, pt[b, p], 0), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KVH, MAXP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, pty, pn: (b, h, 0, 0)),
+            pl.BlockSpec((1, T, 1, D), k_index),
+            pl.BlockSpec((1, T, 1, D), k_index),
+            pl.BlockSpec((1, T, d_model), act_index),
+            pl.BlockSpec((1, d_model), lambda b, h, p, pt, pty, pn: (0, 0)),
+            pl.BlockSpec((d_model, 1, D), lambda b, h, p, pt, pty, pn: (0, h, 0)),
+            pl.BlockSpec((d_model, 1, D), lambda b, h, p, pt, pty, pn: (0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, pty, pn: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_hybrid_attn_kernel, norm_type=norm_type, eps=eps,
+                          sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table, page_type, page_ntok,
+      q, k_pages, v_pages, act_pages, scale2d, wk, wv)
+    return out

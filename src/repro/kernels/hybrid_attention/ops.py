@@ -1,0 +1,18 @@
+"""Public wrapper for hybrid paged attention.
+
+Kernel path (fused ACT->KV + attention) covers learned-positional models —
+the paper's OPT family — where no positional transform applies at recompute
+time.  RoPE architectures take the XLA path from models/model.py (the
+hybrid_decode_step), which applies RoPE to recomputed keys; the kernel fusion
+for RoPE is listed as future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+from repro.kernels.hybrid_attention.kernel import hybrid_paged_attention
+from repro.kernels.hybrid_attention.ref import hybrid_paged_attention_ref
+
+
+def paged_hybrid_attention(*args, use_kernel=True, interpret=True, **kw):
+    if use_kernel:
+        return hybrid_paged_attention(*args, interpret=interpret, **kw)
+    return hybrid_paged_attention_ref(*args, **kw)

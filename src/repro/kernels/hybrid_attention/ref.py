@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for hybrid paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def hybrid_paged_attention_ref(q, k_pages, v_pages, act_pages, norm_scale,
+                               wk, wv, page_table, page_type, page_ntok, *,
+                               norm_type: str = "layernorm", eps: float = 1e-5):
+    """Gathers every page, recomputes ACT pages via Eq. 7, runs plain softmax."""
+    B, KVH, G, D = q.shape
+    T = k_pages.shape[1]
+    d_model = act_pages.shape[-1]
+    MAXP = page_table.shape[1]
+
+    # recompute K/V for all ACT pages (dense, oracle-style)
+    a = act_pages.astype(jnp.float32)
+    s = norm_scale.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(a * a, axis=-1, keepdims=True)
+        a = a * lax.rsqrt(var + eps) * (1.0 + s)
+    elif norm_type == "layernorm":
+        mu = jnp.mean(a, axis=-1, keepdims=True)
+        var = jnp.mean((a - mu) ** 2, axis=-1, keepdims=True)
+        a = (a - mu) * lax.rsqrt(var + eps) * s
+    k_act = jnp.einsum("ptd,dhe->pthe", a, wk.astype(jnp.float32))
+    v_act = jnp.einsum("ptd,dhe->pthe", a, wv.astype(jnp.float32))
+
+    out = []
+    for b in range(B):
+        ks, vs, mask = [], [], []
+        for p in range(MAXP):
+            ty = int(page_type[b, p])
+            if ty == 2:
+                continue
+            idx = int(page_table[b, p])
+            n = int(page_ntok[b, p])
+            if ty == 0:
+                ks.append(jnp.asarray(k_pages[idx], jnp.float32))
+                vs.append(jnp.asarray(v_pages[idx], jnp.float32))
+            else:
+                ks.append(k_act[idx])
+                vs.append(v_act[idx])
+            mask.append(jnp.arange(T) < n)
+        k = jnp.concatenate(ks, axis=0)          # (S, KVH, D)
+        v = jnp.concatenate(vs, axis=0)
+        valid = jnp.concatenate(mask, axis=0)    # (S,)
+        qb = q[b].astype(jnp.float32) / (D ** 0.5)
+        s_ = jnp.einsum("hgd,shd->hgs", qb, k)
+        s_ = jnp.where(valid[None, None, :], s_, -jnp.inf)
+        p_ = jax.nn.softmax(s_, axis=-1)
+        out.append(jnp.einsum("hgs,shd->hgd", p_, v))
+    return jnp.stack(out, 0).astype(q.dtype)

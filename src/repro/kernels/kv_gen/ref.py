@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the KV-Gen kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def kv_gen_ref(act_pages, norm_scale, wk, wv, *, norm_type: str = "rmsnorm",
+               eps: float = 1e-6):
+    """act_pages (N, T, d), wk/wv (d, KVH, hd) -> (k, v) (N, T, KVH, hd)."""
+    x = act_pages.astype(jnp.float32)
+    s = norm_scale.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        x = x * lax.rsqrt(var + eps) * (1.0 + s)
+    elif norm_type == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+        x = (x - mu) * lax.rsqrt(var + eps) * s
+    k = jnp.einsum("ntd,dhe->nthe", x, wk.astype(jnp.float32))
+    v = jnp.einsum("ntd,dhe->nthe", x, wv.astype(jnp.float32))
+    return k.astype(act_pages.dtype), v.astype(act_pages.dtype)

@@ -1,0 +1,39 @@
+"""Oracles for the SSD kernel: the O(S) sequential recurrence (ground truth)
+and the chunked jnp implementation shared with the model stack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ssd_chunked
+
+
+def ssd_ref_sequential(x, dt, A, B, C):
+    """Direct recurrence: state_t = state_{t-1}*exp(dt_t*A) + dt_t*x_t B_t^T."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bm = B.astype(jnp.float32)
+    Cm = C.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, bt, ct = t
+        dA = jnp.exp(dtt * A)                        # (b, h)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        state = state * dA[..., None, None] + upd    # (b,h,p,n)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1)                    # (b, s, h, p)
+
+
+def ssd_ref_chunked(x, dt, A, B, C, *, chunk=64):
+    """The models/layers.py chunked implementation (g = 1 layout)."""
+    y, _ = ssd_chunked(x, dt, A, B[:, :, None, :], C[:, :, None, :], chunk=chunk)
+    return y

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first backend init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+(No ``from __future__`` here — the XLA_FLAGS lines above must stay first.)
+
+For each combination this produces:
+  - compiled.memory_analysis()  (per-device bytes — proves the config fits)
+  - compiled.cost_analysis()    (HLO FLOPs / bytes for the roofline terms)
+  - collective bytes parsed from the optimized HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+and writes a JSON record under experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, SHAPES, applicable, get_config
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sharding import batch_specs, cache_specs, params_specs
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the HLO text."""
+    out = {c: 0.0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op not in COLLECTIVES:
+            continue
+        if "-done(" in line:          # avoid double counting async pairs
+            continue
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        out["count"] += 1
+    return out
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              hybrid: bool = False, microbatches: int = 4,
+              serve_2d: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    p_shape = SP.params_shape(cfg)
+    p_specs = params_specs(cfg, p_shape, mesh, train=(shape.kind == "train"),
+                           weights_2d=serve_2d and shape.kind != "train")
+
+    if shape.kind == "train":
+        o_shape = SP.optstate_shape(cfg)
+        o_specs = adamw.AdamWState(step=P(),
+                                   m=p_specs, v=p_specs)
+        b_shape = SP.batch_specs_for(cfg, shape, with_labels=True)
+        b_specs = batch_specs(cfg, b_shape, mesh)
+        fn = SP.make_train_step(cfg, microbatches=microbatches)
+        in_shardings = (_sharding_tree(mesh, p_specs),
+                        _sharding_tree(mesh, o_specs),
+                        _sharding_tree(mesh, b_specs))
+        args = (p_shape, o_shape, b_shape)
+        out_shardings = (_sharding_tree(mesh, p_specs),
+                         _sharding_tree(mesh, o_specs), None)
+    elif shape.kind == "prefill":
+        b_shape = SP.batch_specs_for(cfg, shape, with_labels=False)
+        b_specs = batch_specs(cfg, b_shape, mesh)
+        c_shape = SP.cache_shape(cfg, shape.global_batch, shape.seq_len)
+        c_specs = cache_specs(cfg, c_shape, mesh)
+        fn = SP.make_prefill_step(cfg, max_len=shape.seq_len)
+        in_shardings = (_sharding_tree(mesh, p_specs),
+                        _sharding_tree(mesh, b_specs))
+        args = (p_shape, b_shape)
+        out_shardings = (None, _sharding_tree(mesh, c_specs))
+    else:  # decode
+        B = shape.global_batch
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_spec = batch_specs(cfg, {"t": tok}, mesh)["t"]
+        b_axis = tok_spec[0] if len(tok_spec) else None
+        if hybrid:
+            kv_cap = shape.seq_len // 2
+            act_cap = shape.seq_len - kv_cap + 16
+            c_shape = SP.hybrid_cache_shape(cfg, B, kv_cap, act_cap)
+            c_specs = cache_specs(cfg, c_shape, mesh)
+            store = jax.ShapeDtypeStruct((B,), jnp.bool_)
+            fn = SP.make_hybrid_decode_step(cfg)
+            in_shardings = (_sharding_tree(mesh, p_specs),
+                            NamedSharding(mesh, tok_spec),
+                            _sharding_tree(mesh, c_specs),
+                            NamedSharding(mesh, P(b_axis)))
+            args = (p_shape, tok, c_shape, store)
+            out_shardings = (None, _sharding_tree(mesh, c_specs))
+        else:
+            c_shape = SP.cache_shape(cfg, B, shape.seq_len)
+            c_specs = cache_specs(cfg, c_shape, mesh)
+            fn = SP.make_decode_step(cfg)
+            in_shardings = (_sharding_tree(mesh, p_specs),
+                            NamedSharding(mesh, tok_spec),
+                            _sharding_tree(mesh, c_specs))
+            args = (p_shape, tok, c_shape)
+            out_shardings = (None, _sharding_tree(mesh, c_specs))
+
+    from repro.models import shardhints
+    with mesh, shardhints.use_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=(0, 1) if shape.kind == "train" else
+                         ((2,) if shape.kind == "decode" else ()))
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "devices": n_dev, "hybrid": hybrid, "serve_2d": serve_2d, "microbatches": microbatches if shape.kind == "train" else 0,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                                  getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "compile_seconds": time.time() - t0,
+    }
+    return rec
+
+
+def run_and_save(arch, shape_name, multi_pod=False, hybrid=False,
+                 outdir="experiments/dryrun", verbose=True, microbatches=4,
+                 serve_2d=False):
+    rec = lower_one(arch, shape_name, multi_pod=multi_pod, hybrid=hybrid,
+                    microbatches=microbatches, serve_2d=serve_2d)
+    os.makedirs(outdir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}" + \
+        ("_hybrid" if hybrid else "") + ("_2d" if serve_2d else "")
+    with open(os.path.join(outdir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        m = rec["memory"]
+        print(f"[OK] {tag}: flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+              f"coll={sum(v for k, v in rec['collective_bytes'].items() if k != 'count'):.3e}B "
+              f"args/dev={m['argument_bytes']/2**30:.2f}GiB temp/dev={m['temp_bytes']/2**30:.2f}GiB "
+              f"compile={rec['compile_seconds']:.0f}s")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="lower the hybrid KV/ACT serve step instead")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--serve2d", action="store_true",
+                    help="2D weight sharding for serve shapes (perf iter 1)")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        failures = []
+        for arch in ASSIGNED:
+            for shape_name in SHAPES:
+                if not applicable(arch, SHAPES[shape_name]):
+                    print(f"[SKIP] {arch} x {shape_name} (DESIGN.md §4)")
+                    continue
+                try:
+                    run_and_save(arch, shape_name, multi_pod=args.multi_pod,
+                                 outdir=args.outdir,
+                                 microbatches=args.microbatches,
+                                 serve_2d=args.serve2d)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, repr(e)[:200]))
+                    print(f"[FAIL] {arch} x {shape_name}: {e!r}"[:300])
+        if failures:
+            sys.exit(1)
+        return
+    run_and_save(args.arch, args.shape, multi_pod=args.multi_pod,
+                 hybrid=args.hybrid, outdir=args.outdir,
+                 microbatches=args.microbatches, serve_2d=args.serve2d)
+
+
+if __name__ == "__main__":
+    main()

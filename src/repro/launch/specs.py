@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct input specs + lowerable step functions per (arch, shape).
+
+input_specs(cfg, shape) mirrors shannon/kernels' pattern: weak-type-correct,
+shardable stand-ins, zero device allocation.  Modality frontends are stubs —
+audio frames / vision patches arrive as precomputed embeddings (the one
+carve-out the assignment allows).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape, ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _bdt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, shape: InputShape, *,
+                    with_labels: bool) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, SDS] = {}
+    if cfg.frontend == "vision_stub":
+        P = cfg.frontend_tokens
+        out["patches"] = SDS((B, P, cfg.d_model), _bdt(cfg))
+        out["tokens"] = SDS((B, S - P), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S - P), jnp.int32)
+    elif cfg.is_encoder_decoder:
+        out["frames"] = SDS((B, cfg.enc_seq_len, cfg.d_model), _bdt(cfg))
+        out["tokens"] = SDS((B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(M.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def optstate_shape(cfg: ModelConfig):
+    p = params_shape(cfg)
+    return jax.eval_shape(adamw.init, p)
+
+
+def cache_shape(cfg: ModelConfig, B: int, max_len: int):
+    return jax.eval_shape(functools.partial(M.init_cache, cfg, B, max_len))
+
+
+def hybrid_cache_shape(cfg: ModelConfig, B: int, kv_cap: int, act_cap: int):
+    return jax.eval_shape(
+        functools.partial(M.init_hybrid_cache, cfg, B, kv_cap, act_cap))
+
+
+# --------------------------------------------------------------------------- steps
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    microbatches: int = 1):
+    """One optimizer step; ``microbatches`` > 1 accumulates gradients over
+    sequential slices of the global batch (activation memory / m)."""
+    def grad_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = M.apply_train(p, cfg, batch, remat=True)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+
+            def body(acc, b):
+                gsum, lsum = acc
+                (l, _), g = grad_of(params, b)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+        new_p, new_s, om = adamw.update(opt_cfg, params, grads, opt_state)
+        return new_p, new_s, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache):
+        return M.decode_step(params, cfg, token, cache)
+    return decode_step
+
+
+def make_hybrid_decode_step(cfg: ModelConfig):
+    def hybrid_step(params, token, cache, store_act):
+        return M.hybrid_decode_step(params, cfg, token, cache, store_act)
+    return hybrid_step

@@ -1,0 +1,77 @@
+"""Training launcher: real steps on CPU (reduced) or lowering on the mesh.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b-reduced --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b-reduced --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, lm_batches
+from repro.launch.specs import make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+from repro import checkpoint
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--save", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, rng)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                                total_steps=args.steps)
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      batch_size=args.batch)
+    it = lm_batches(data)
+
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        raw = next(it)
+        batch = {"tokens": jnp.asarray(raw["tokens"]),
+                 "labels": jnp.asarray(raw["labels"])}
+        if cfg.frontend == "vision_stub":
+            P = cfg.frontend_tokens
+            batch["patches"] = jnp.zeros((args.batch, P, cfg.d_model), jnp.float32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['gnorm']):.2f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+    assert np.isfinite(losses).all(), "NaN loss"
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}) "
+          f"improved={losses[-1] < losses[0]}")
+    if args.save:
+        checkpoint.save(args.save, {"params": params},
+                        metadata={"arch": args.arch, "steps": args.steps,
+                                  "final_loss": losses[-1]})
+        print(f"saved checkpoint to {args.save}.npz")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,601 @@
+"""Layer primitives shared by every architecture family.
+
+Pure functions over parameter dicts — no module classes, so the same code
+paths serve init (via jax.eval_shape), training, prefill and single-token
+decode, and stay scan-friendly for the 512-device dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# --------------------------------------------------------------------------- norms
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x, params, norm_type: str):
+    if norm_type == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+# --------------------------------------------------------------------------- rope
+
+def rope_sin_cos(positions, head_dim: int, theta: float):
+    """positions (..., S) int32 -> sin/cos (..., S, head_dim//2) f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(angle), jnp.cos(angle)
+
+
+def apply_rope(x, sin, cos):
+    """x (B, S, H, D); sin/cos (B, S, D//2) -> rotated x (half-split layout)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dtype)
+
+
+def mrope_sin_cos(positions3, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int] = (1, 1, 1)):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (B, S, 3) — (temporal, height, width) position ids.  The
+    rotary half-dim is split into three contiguous sections, each section
+    rotated by its own position stream.  For pure text, all three ids are
+    equal and M-RoPE degenerates to 1-D RoPE exactly.
+    """
+    half = head_dim // 2
+    # section sizes proportional to `sections`, padded onto the last one
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sizes[0] - sizes[1]
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sizes), total_repeat_length=half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions3.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (B, S, half): per-frequency position id
+    angle = pos * freq
+    return jnp.sin(angle), jnp.cos(angle)
+
+
+# --------------------------------------------------------------------------- attention
+
+def _pair_list(n_q: int, n_k: int, q_chunk: int, k_chunk: int,
+               causal: bool, window: int, q_offset_chunks: int) -> np.ndarray:
+    """Static (qi, kj) tile list for blockwise attention.
+
+    Only tiles that can contain any unmasked entry are emitted, so causal
+    attention does ~S^2/2 work and sliding-window attention O(S*W) — the HLO
+    FLOP count then reflects useful work (roofline honesty).
+    """
+    pairs = []
+    for qi in range(n_q):
+        # absolute token range of this q chunk (chunk units, offset for decode)
+        q_hi_chunk = qi + q_offset_chunks
+        for kj in range(n_k):
+            if causal and kj * k_chunk > (q_hi_chunk + 1) * q_chunk - 1:
+                continue
+            if window > 0:
+                # lowest position any query in this tile may attend to
+                lo = q_hi_chunk * q_chunk - window
+                if (kj + 1) * k_chunk - 1 < lo:
+                    continue
+            pairs.append((qi, kj))
+    return np.asarray(pairs, dtype=np.int32).reshape(-1, 2)
+
+
+def _tile_mask(qi, kj, q_chunk, k_chunk, q_offset, causal, window, kv_len):
+    qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+    kpos = kj * k_chunk + jnp.arange(k_chunk)
+    mask = kpos[None, :] < kv_len
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask                                           # (q_chunk, k_chunk)
+
+
+def _bw_attn_fwd(q, k, v, causal, window, q_offset, q_chunk, k_chunk,
+                 softcap, kv_len):
+    """Online-softmax forward over the static tile list (H-flat layout).
+
+    All q-side tensors keep a flat head dim H (shardable on 'model' even for
+    GQA: q heads shard, kv heads replicate); kv tiles are repeated to H inside
+    the tile only.  Returns (out f32 (B,nq,qc,H,D), lse (B,nq,qc,H), meta).
+    """
+    from repro.models import shardhints as SH
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    pq, pk = (-Sq) % q_chunk, (-Sk) % k_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    n_q, n_k = Sq_p // q_chunk, Sk_p // k_chunk
+    kv_len = jnp.asarray(Sk if kv_len is None else kv_len, jnp.int32)
+    pairs = _pair_list(n_q, n_k, q_chunk, k_chunk, causal, window,
+                       q_offset // q_chunk if q_offset else 0)
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, n_q, q_chunk, H, D)
+    kr = k.reshape(B, n_k, k_chunk, KVH, D)
+    vr = v.reshape(B, n_k, k_chunk, KVH, D)
+
+    CQ = (SH.BATCH, None, None, SH.MODEL, None)
+    acc = SH.constrain(jnp.zeros((B, n_q, q_chunk, H, D), jnp.float32), *CQ)
+    m = SH.constrain(jnp.full((B, n_q, q_chunk, H), -jnp.inf, jnp.float32),
+                     *CQ[:4])
+    l = SH.constrain(jnp.zeros((B, n_q, q_chunk, H), jnp.float32), *CQ[:4])
+
+    def body(carry, pair):
+        acc, m, l = carry
+        qi, kj = pair[0], pair[1]
+        qt = lax.dynamic_index_in_dim(qr, qi, axis=1, keepdims=False)
+        kt = lax.dynamic_index_in_dim(kr, kj, axis=1, keepdims=False)
+        vt = lax.dynamic_index_in_dim(vr, kj, axis=1, keepdims=False)
+        kt = jnp.repeat(kt, G, axis=2)                     # (B, kc, H, D)
+        vt = jnp.repeat(vt, G, axis=2)
+        qt = SH.constrain(qt, SH.BATCH, None, SH.MODEL, None)
+        kt = SH.constrain(kt, SH.BATCH, None, SH.MODEL, None)
+        vt = SH.constrain(vt, SH.BATCH, None, SH.MODEL, None)
+        s = jnp.einsum("bqhd,bkhd->bqhk", qt.astype(jnp.float32),
+                       kt.astype(jnp.float32)) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _tile_mask(qi, kj, q_chunk, k_chunk, q_offset, causal, window, kv_len)
+        s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+        m_new = s.max(axis=-1)
+        m_old = lax.dynamic_index_in_dim(m, qi, axis=1, keepdims=False)
+        l_old = lax.dynamic_index_in_dim(l, qi, axis=1, keepdims=False)
+        a_old = lax.dynamic_index_in_dim(acc, qi, axis=1, keepdims=False)
+        m_cur = jnp.maximum(m_old, m_new)
+        safe = jnp.isfinite(m_cur)
+        m_safe = jnp.where(safe, m_cur, 0.0)
+        p = jnp.exp(jnp.where(mask[None, :, None, :],
+                              s - m_safe[..., None], -jnp.inf))
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(safe, jnp.exp(m_old - m_safe), 0.0)
+        l_cur = l_old * corr + p.sum(axis=-1)
+        a_cur = a_old * corr[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p, vt.astype(jnp.float32))
+        acc = lax.dynamic_update_index_in_dim(acc, a_cur, qi, axis=1)
+        m = lax.dynamic_update_index_in_dim(m, m_cur, qi, axis=1)
+        l = lax.dynamic_update_index_in_dim(l, l_cur, qi, axis=1)
+        return (SH.constrain(acc, *CQ), SH.constrain(m, *CQ[:4]),
+                SH.constrain(l, *CQ[:4])), None
+
+    (acc, m, l), _ = lax.scan(body, (acc, m, l), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)           # (B,nq,qc,H,D)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))               # (B,nq,qc,H)
+    return out, lse, (pairs, scale, Sq, pq, pk, n_q, n_k, q_chunk, k_chunk, kv_len)
+
+
+def _bw_attn_bwd_impl(q, k, v, out, lse, dout, meta, causal, window, q_offset,
+                      softcap):
+    """Flash-style backward: recompute each tile, O(tile) memory (H-flat)."""
+    from repro.models import shardhints as SH
+    (pairs, scale, Sq, pq, pk, n_q, n_k, q_chunk, k_chunk, kv_len) = meta
+    B, _, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        dout = jnp.pad(dout, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    CQ = (SH.BATCH, None, None, SH.MODEL, None)
+    qr = SH.constrain(q.reshape(B, n_q, q_chunk, H, D), *CQ).astype(jnp.float32)
+    kr = k.reshape(B, n_k, k_chunk, KVH, D).astype(jnp.float32)
+    vr = v.reshape(B, n_k, k_chunk, KVH, D).astype(jnp.float32)
+    dor = SH.constrain(dout.reshape(B, n_q, q_chunk, H, D), *CQ).astype(jnp.float32)
+    delta = jnp.sum(dor * out, axis=-1)                    # (B,nq,qc,H)
+
+    dq = jnp.zeros_like(qr)
+    dkh = SH.constrain(jnp.zeros((B, n_k, k_chunk, H, D), jnp.float32), *CQ)
+    dvh = SH.constrain(jnp.zeros((B, n_k, k_chunk, H, D), jnp.float32), *CQ)
+
+    def body(carry, pair):
+        dq, dkh, dvh = carry
+        qi, kj = pair[0], pair[1]
+        qt = lax.dynamic_index_in_dim(qr, qi, axis=1, keepdims=False)
+        kt = jnp.repeat(lax.dynamic_index_in_dim(kr, kj, axis=1, keepdims=False),
+                        G, axis=2)
+        vt = jnp.repeat(lax.dynamic_index_in_dim(vr, kj, axis=1, keepdims=False),
+                        G, axis=2)
+        kt = SH.constrain(kt, SH.BATCH, None, SH.MODEL, None)
+        vt = SH.constrain(vt, SH.BATCH, None, SH.MODEL, None)
+        dot = lax.dynamic_index_in_dim(dor, qi, axis=1, keepdims=False)
+        lse_t = lax.dynamic_index_in_dim(lse, qi, axis=1, keepdims=False)
+        dlt = lax.dynamic_index_in_dim(delta, qi, axis=1, keepdims=False)
+        s_raw = jnp.einsum("bqhd,bkhd->bqhk", qt, kt) * scale
+        if softcap > 0.0:
+            th = jnp.tanh(s_raw / softcap)
+            s = softcap * th
+        else:
+            s = s_raw
+        mask = _tile_mask(qi, kj, q_chunk, k_chunk, q_offset, causal, window, kv_len)
+        p = jnp.exp(s - lse_t[..., None])
+        p = jnp.where(mask[None, :, None, :], p, 0.0)
+        dv_t = jnp.einsum("bqhk,bqhd->bkhd", p, dot)
+        dp = jnp.einsum("bqhd,bkhd->bqhk", dot, vt)
+        ds = p * (dp - dlt[..., None])
+        if softcap > 0.0:
+            ds = ds * (1.0 - th * th)
+        ds = ds * scale
+        dq_t = jnp.einsum("bqhk,bkhd->bqhd", ds, kt)
+        dk_t = jnp.einsum("bqhk,bqhd->bkhd", ds, qt)
+        dq = dq.at[:, qi].add(dq_t)
+        dkh = dkh.at[:, kj].add(dk_t)
+        dvh = dvh.at[:, kj].add(dv_t)
+        return (dq, dkh, dvh), None
+
+    (dq, dkh, dvh), _ = lax.scan(body, (dq, dkh, dvh), jnp.asarray(pairs))
+    Sq_p, Sk_p = n_q * q_chunk, n_k * k_chunk
+    dq = dq.reshape(B, Sq_p, H, D)[:, :Sq]
+    # fold the q-head groups back onto kv heads
+    dk = dkh.reshape(B, n_k, k_chunk, KVH, G, D).sum(axis=4)
+    dv = dvh.reshape(B, n_k, k_chunk, KVH, G, D).sum(axis=4)
+    dk = dk.reshape(B, Sk_p, KVH, D)[:, : Sk_p - pk]
+    dv = dv.reshape(B, Sk_p, KVH, D)[:, : Sk_p - pk]
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _bw_attn(q, k, v, causal, window, q_offset, q_chunk, k_chunk, softcap):
+    out, lse, meta = _bw_attn_fwd(q, k, v, causal, window, q_offset,
+                                  q_chunk, k_chunk, softcap, None)
+    B, Sq, H, D = q.shape
+    n_q = meta[5]
+    return out.reshape(B, n_q * meta[7], H, D)[:, :Sq].astype(q.dtype)
+
+
+def _bw_attn_f(q, k, v, causal, window, q_offset, q_chunk, k_chunk, softcap):
+    out, lse, meta = _bw_attn_fwd(q, k, v, causal, window, q_offset,
+                                  q_chunk, k_chunk, softcap, None)
+    B, Sq, H, D = q.shape
+    n_q, qc = meta[5], meta[7]
+    res = (q, k, v, out, lse)
+    return out.reshape(B, n_q * qc, H, D)[:, :Sq].astype(q.dtype), res
+
+
+def _bw_attn_b(causal, window, q_offset, q_chunk, k_chunk, softcap, res, g):
+    q, k, v, out, lse = res
+    _, _, meta = None, None, None
+    # reconstruct static meta (cheap, pure python + shapes)
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    pq, pk = (-Sq) % qc, (-Sk) % kc
+    n_q, n_k = (Sq + pq) // qc, (Sk + pk) // kc
+    pairs = _pair_list(n_q, n_k, qc, kc, causal, window,
+                       q_offset // qc if q_offset else 0)
+    meta = (pairs, 1.0 / math.sqrt(D), Sq, pq, pk, n_q, n_k, qc, kc,
+            jnp.asarray(Sk, jnp.int32))
+    dq, dk, dv = _bw_attn_bwd_impl(q, k, v, out, lse, g, meta, causal,
+                                   window, q_offset, softcap)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_bw_attn.defvjp(_bw_attn_f, _bw_attn_b)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, kv_len: Optional[jax.Array] = None,
+                        q_chunk: int = 1024, k_chunk: int = 1024,
+                        softcap: float = 0.0):
+    """Memory-efficient GQA attention (online softmax over static tile list).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KVH, D).  ``q_offset`` is the absolute
+    position of q[0] (for decode / chunked prefill).  ``kv_len`` optionally
+    masks the KV tail (ragged batches).  Never materialises an (Sq, Sk) score
+    matrix — scores exist only as (q_chunk, k_chunk) tiles inside the scan,
+    and the custom VJP recomputes tiles in the backward pass (flash-attention
+    style) so training memory stays O(Sq x D), not O(pairs x tile).
+    """
+    if kv_len is None:
+        return _bw_attn(q, k, v, causal, window, q_offset, q_chunk, k_chunk,
+                        softcap)
+    out, _, meta = _bw_attn_fwd(q, k, v, causal, window, q_offset, q_chunk,
+                                k_chunk, softcap, kv_len)
+    B, Sq, H, D = q.shape
+    n_q, qc = meta[5], meta[7]
+    return out.reshape(B, n_q * qc, H, D)[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, kv_len, window: int = 0,
+                     softcap: float = 0.0):
+    """Single-token attention: q (B, 1, H, D) vs cache (B, S, KVH, D).
+
+    kv_len (B,) or scalar: number of valid cache positions (the new token's
+    K/V must already be written at kv_len-1).
+    """
+    B, _, H, D = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, KVH, G, D).astype(jnp.float32)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)[None, :]
+    mask = pos < kv_len[:, None]
+    if window > 0:
+        mask &= pos > (kv_len[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- ffn
+
+def _act(x, kind: str):
+    if kind in ("gated_silu", "silu"):
+        return jax.nn.silu(x)
+    if kind in ("gated_gelu", "gelu"):
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def dense_ffn(params, x, ffn_type: str):
+    """x (..., d) -> (..., d).  Gated variants hold w1 (in), w3 (gate), w2 (out)."""
+    from repro.models import shardhints as SH
+    h = x @ params["w1"]
+    h = SH.constrain(h, *([SH.BATCH] + [None] * (h.ndim - 2) + [SH.MODEL]))
+    if ffn_type.startswith("gated"):
+        h = _act(h, ffn_type) * (x @ params["w3"])
+    else:
+        h = _act(h, ffn_type)
+    return h @ params["w2"]
+
+
+def _moe_groups(T: int, want: int = 32) -> int:
+    for g in (want, 16, 8, 4, 2):
+        if T % g == 0:
+            return g
+    return 1
+
+
+def moe_ffn(params, x, *, num_experts: int, top_k: int,
+            capacity_factor: float = 1.25, ffn_type: str = "gated_silu",
+            expert_sharding=None, groups: int = 32):
+    """Token-choice MoE with GROUP-LOCAL sort-based capacity dispatch.
+
+    x: (T, d) flattened tokens.  Returns (y, aux_loss).
+
+    Tokens are split into ``groups`` independent dispatch groups sharded over
+    the batch axes; the argsort, ranking and capacity scatter are all local to
+    a group, so no cross-shard token movement happens until the expert einsum
+    itself (which the compiler lowers to the expert all-to-all).  A single
+    global argsort instead forces an all-gather of every token activation per
+    MoE layer — measured at +136 GiB/device peak on jamba prefill_32k (§Perf
+    iteration 2).  Compiled FLOPs equal the active expert FLOPs (E x C x d x
+    f), never the dense all-experts product.
+    """
+    from repro.models import shardhints as SH
+    T, d = x.shape
+    E, k = num_experts, top_k
+    G = _moe_groups(T, groups)
+    Tg = T // G
+    Tk = Tg * k
+    xg = SH.constrain(x.reshape(G, Tg, d), SH.BATCH, None, None)
+
+    logits = (xg.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G, Tg, E)
+    gate, idx = lax.top_k(probs, k)                             # (G, Tg, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(G, Tk)
+    order = jnp.argsort(flat_e, axis=1, stable=True)            # (G, Tk)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    one_hot = jax.nn.one_hot(sorted_e, E, dtype=jnp.int32)      # (G, Tk, E)
+    counts = one_hot.sum(1)                                     # (G, E)
+    starts = jnp.cumsum(counts, axis=1) - counts                # exclusive
+    rank = jnp.arange(Tk, dtype=jnp.int32)[None] - \
+        jnp.take_along_axis(starts, sorted_e, axis=1)
+
+    C = int(math.ceil(capacity_factor * Tk / E / 8) * 8)
+    C = max(C, 8)
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)          # E*C = drop row
+
+    tok = order // k                                            # (G, Tk)
+    xs = jnp.take_along_axis(xg, tok[..., None], axis=1)        # (G, Tk, d)
+    # Build the expert buffer by GATHER, not scatter: after the stable sort,
+    # expert e's tokens sit at xs[starts[e] : starts[e]+counts[e]].  A 2D-
+    # indexed scatter here is unpartitionable for XLA SPMD and replicates the
+    # buffer on every device (+208 GiB/device measured at jamba prefill scale,
+    # §Perf iteration 2b); batched gathers partition fine.
+    posn = starts[:, :, None] + jnp.arange(C, dtype=jnp.int32)[None, None, :]
+    valid = jnp.arange(C, dtype=jnp.int32)[None, None, :] < counts[:, :, None]
+    posf = jnp.clip(posn.reshape(G, E * C), 0, Tk - 1)
+    buf = jnp.take_along_axis(xs, posf[..., None], axis=1)      # (G, E*C, d)
+    buf = jnp.where(valid.reshape(G, E * C)[..., None], buf, 0)
+    buf = buf.reshape(G, E, C, d)
+    # expert-parallel when E divides the model axis; else TP inside experts
+    buf = SH.constrain(buf, SH.BATCH, SH.MODEL, None, None)
+    if expert_sharding is not None:
+        buf = lax.with_sharding_constraint(buf, expert_sharding)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, params["we1"])
+    h = SH.constrain(h, SH.BATCH, SH.MODEL, None, SH.MODEL)
+    if ffn_type.startswith("gated"):
+        h = _act(h, ffn_type) * jnp.einsum("gecd,edf->gecf", buf, params["we3"])
+    else:
+        h = _act(h, ffn_type)
+    out = jnp.einsum("gecf,efd->gecd", h, params["we2"])        # (G, E, C, d)
+    out = out.reshape(G, E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((G, 1, d), out.dtype)], axis=1)
+    y_sorted = jnp.take_along_axis(
+        out, jnp.where(keep, slot, E * C)[..., None], axis=1)   # (G, Tk, d)
+
+    inv = jnp.argsort(order, axis=1, stable=True)
+    y_flat = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)
+    y_flat = y_flat.reshape(G, Tg, k, d)
+    y = jnp.einsum("gtk,gtkd->gtd", gate.astype(y_flat.dtype), y_flat)
+
+    # load-balance auxiliary loss (Switch-style, group-averaged)
+    frac_tokens = counts.astype(jnp.float32).sum(0) / jnp.maximum(G * Tk, 1)
+    frac_prob = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_prob)
+    return y.reshape(T, d).astype(x.dtype), aux
+
+
+# --------------------------------------------------------------------------- mamba2 SSD
+
+def segsum(x):
+    """Stable segment-sum: x (..., c) -> (..., c, c) lower-tri cumulative sums."""
+    c = x.shape[-1]
+    x = jnp.repeat(x[..., None], c, axis=-1)                    # (..., c, c)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    x = jnp.where(mask, x, 0)
+    x_seg = jnp.cumsum(x, axis=-2)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=0)
+    return jnp.where(mask, x_seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
+    """Mamba-2 SSD forward (chunked state-space duality).
+
+    x: (b, s, h, p); dt: (b, s, h) (already softplus'ed); A: (h,) negative;
+    B, C: (b, s, g, n) with g dividing h.  Returns (y (b,s,h,p),
+    final_state (b, h, p, n)).
+
+    One lax.scan over chunks carries the (b,h,p,n) state and computes the
+    intra-chunk dual form per step — the same structure as the Pallas kernel.
+    The fully-vectorised form materialises several (b,l,h,c,c)/(b,l,c,h,p)
+    f32 tensors at once (4+ GiB each at 32k context; §Perf iteration 3);
+    the scan keeps one chunk's tile live.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    l, c = sp // chunk, chunk
+    rep = h // g
+    A32 = A.astype(jnp.float32)
+
+    xr = jnp.moveaxis(x.reshape(b, l, c, h, p), 1, 0)           # (l,b,c,h,p)
+    dtr = jnp.moveaxis(dt.reshape(b, l, c, h), 1, 0)
+    Br = jnp.moveaxis(B.reshape(b, l, c, g, n), 1, 0)
+    Cr = jnp.moveaxis(C.reshape(b, l, c, g, n), 1, 0)
+
+    if initial_state is None:
+        init = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(state, inp):
+        xc, dtc, Bc, Cc = inp
+        xc = xc.astype(jnp.float32)
+        dtc = dtc.astype(jnp.float32)
+        Bc = jnp.repeat(Bc.astype(jnp.float32), rep, axis=2)    # (b,c,h,n)
+        Cc = jnp.repeat(Cc.astype(jnp.float32), rep, axis=2)
+        dA = dtc * A32                                          # (b,c,h)
+        cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # (b,c,c,h)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        att = jnp.einsum("bchn,bdhn->bcdh", Cc, Bc) * L
+        y = jnp.einsum("bcdh,bdhp->bchp", att, xc * dtc[..., None])
+        # carried-state contribution
+        y = y + jnp.einsum("bchn,bhpn->bchp", Cc, state) * \
+            jnp.exp(cum)[..., None]
+        # state update
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtc                 # (b,c,h)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + \
+            jnp.einsum("bchn,bchp->bhpn", Bc * w[..., None], xc)
+        return state, y.astype(x.dtype)
+
+    final, ys = lax.scan(step, init, (xr, dtr, Br, Cr))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, h, p)[:, :s]
+    return y, final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token SSD recurrence.
+
+    state (b,h,p,n); x_t (b,h,p); dt_t (b,h); B_t, C_t (b,g,n).
+    Returns (y (b,h,p), new_state).
+    """
+    b, h, p, n = state.shape
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)       # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))  # (b,h)
+    upd = (dt_t[..., None].astype(jnp.float32) * x_t.astype(jnp.float32))[..., None] \
+        * Bh[:, :, None, :]
+    new_state = state.astype(jnp.float32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state.astype(state.dtype)
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv: x (b, s, ch), w (ch, width).
+
+    Computed as a sum of ``width`` shifted products — never materialises the
+    (b, s, width, ch) window tensor (4x the activation bytes; §Perf iter. 3).
+    With ``cache`` (b, width-1, ch) the conv is streaming (decode); returns
+    (y, new_cache).
+    """
+    width = w.shape[-1]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)                      # (b, s+w-1, ch)
+    s = x.shape[1]
+    y = jnp.zeros(x.shape, jnp.float32)
+    for i in range(width):
+        y = y + xp[:, i: i + s, :].astype(jnp.float32) * \
+            w[:, i].astype(jnp.float32)[None, None, :]
+    new_cache = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y.astype(x.dtype), new_cache

@@ -1,0 +1,885 @@
+"""Top-level model API: embed -> family forward -> logits, plus caches.
+
+Entry points (all pure, jit/pjit-able):
+  init_params(cfg, rng)
+  apply_train(params, cfg, batch)            -> (loss, metrics)
+  apply_logits(params, cfg, batch)           -> logits over all positions
+  init_cache(cfg, batch, max_len)            -> empty decode cache
+  prefill(params, cfg, batch, max_len)       -> (last_logits, cache)
+  decode_step(params, cfg, token, cache)     -> (logits, cache)
+  hybrid_decode_step(...)                    -> paper's KV/ACT hybrid serve step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import shardhints as SH
+from repro.models import transformer as T
+from repro.models.transformer import (  # re-export
+    family, init_params, pad_vocab, _window_split, hybrid_slots)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+# attention chunking used by full-sequence paths (perf-tunable; see §Perf)
+Q_CHUNK = 1024
+K_CHUNK = 1024
+
+
+# =============================================================================
+# embedding / unembedding
+# =============================================================================
+
+def _embed_tokens(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _positions_for(cfg, batch, S, offset=0):
+    B = batch["tokens"].shape[0] if "tokens" in batch else batch["token"].shape[0]
+    if cfg.pos_type == "mrope":
+        # patches: t=0, (h, w) grid; text: t=h=w continuing after the grid
+        P = cfg.frontend_tokens
+        gw = max(1, int(np.sqrt(max(P, 1))))
+        ids = np.arange(P)
+        ph, pw = ids // gw, ids % gw
+        pt = np.zeros_like(ids)
+        t0 = int(max(gw, P // gw if gw else 0))
+        n_text = S - P
+        txt = t0 + np.arange(n_text)
+        pos3 = np.stack([
+            np.concatenate([pt, txt]),
+            np.concatenate([ph, txt]),
+            np.concatenate([pw, txt]),
+        ], axis=-1)  # (S, 3)
+        return jnp.broadcast_to(jnp.asarray(pos3, jnp.int32)[None], (B, S, 3))
+    return jnp.broadcast_to(jnp.arange(offset, offset + S, dtype=jnp.int32)[None], (B, S))
+
+
+def embed_input(params, cfg: ModelConfig, batch, offset: int = 0):
+    """-> (x (B,S,d), positions).  Handles modality-frontend stubs."""
+    if cfg.frontend == "vision_stub":
+        tok = _embed_tokens(params, cfg, batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(tok.dtype), tok], axis=1)
+    elif cfg.frontend == "audio_stub" and "frames" in batch and "tokens" not in batch:
+        x = batch["frames"]
+    else:
+        x = _embed_tokens(params, cfg, batch["tokens"])
+    S = x.shape[1]
+    if cfg.pos_type == "learned":
+        x = x + lax.dynamic_slice_in_dim(params["pos_embed"], offset, S, axis=0)[None]
+    positions = _positions_for(cfg, batch, S, offset)
+    return x, positions
+
+
+def unembed(params, cfg: ModelConfig, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+# =============================================================================
+# family forwards — full sequence (train / prefill)
+# =============================================================================
+
+def _scan_layers(body, carry, xs, remat: bool):
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    return lax.scan(body, carry, xs)
+
+
+def _uniform_full(params, cfg, x, sincos, *, causal=True, want_cache, remat):
+    is_moe = cfg.is_moe and cfg.moe_every == 1
+
+    def body(carry, lp):
+        h, aux = carry
+        h, cache, a = T.layer_full(lp, cfg, h, sincos, kind="attn", is_moe=is_moe,
+                                   causal=causal, window=0, want_cache=want_cache,
+                                   q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        return (h, aux + a), cache
+
+    (x, aux), caches = _scan_layers(body, (x, 0.0), params["layers"], remat)
+    return x, aux, caches          # caches: (k, v) stacked (L, B, S, kv, hd) or None
+
+
+def _ssm_full(params, cfg, x, *, want_cache, remat):
+    def body(carry, lp):
+        h, aux = carry
+        h, cache, a = T.layer_full(lp, cfg, h, None, kind="ssd", is_moe=False,
+                                   want_cache=want_cache)
+        return (h, aux + a), cache
+
+    (x, aux), caches = _scan_layers(body, (x, 0.0), params["layers"], remat)
+    return x, aux, caches          # caches: (state, conv) stacked (L, ...)
+
+
+def _windowed_full(params, cfg, x, sincos, *, want_cache, remat):
+    period, n_per, tail = _window_split(cfg)
+    W = cfg.sliding_window
+
+    def body(carry, pp):
+        h, aux = carry
+        lk, lv = [], []
+        for j in range(period - 1):
+            lp = jax.tree.map(lambda a: a[j], pp["local"])
+            h, c, a = T.layer_full(lp, cfg, h, sincos, window=W,
+                                   want_cache=want_cache,
+                                   q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+            aux += a
+            if want_cache:
+                lk.append(c[0]); lv.append(c[1])
+        h, cg, a = T.layer_full(pp["global"], cfg, h, sincos, window=0,
+                                want_cache=want_cache,
+                                q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        aux += a
+        ys = None
+        if want_cache:
+            ys = (jnp.stack(lk, 0), jnp.stack(lv, 0), cg[0], cg[1])
+        return (h, aux), ys
+
+    (x, aux), caches = _scan_layers(body, (x, 0.0), params["periods"], remat)
+
+    tail_caches = None
+    if tail:
+        def tbody(carry, lp):
+            h, aux = carry
+            h, c, a = T.layer_full(lp, cfg, h, sincos, window=W,
+                                   want_cache=want_cache,
+                                   q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+            return (h, aux + a), c
+        (x, aux), tail_caches = _scan_layers(tbody, (x, aux), params["tail"], remat)
+    return x, aux, (caches, tail_caches)
+
+
+def _hybrid_full(params, cfg, x, sincos, *, want_cache, remat):
+    slots = hybrid_slots(cfg)
+
+    def body(carry, pp):
+        h, aux = carry
+        ssd_caches, attn_cache = {"ssd_dense": [], "ssd_moe": []}, None
+        for name, idx, is_moe in slots:
+            if name == "attn":
+                h, c, a = T.layer_full(pp["attn"], cfg, h, sincos, kind="attn",
+                                       is_moe=is_moe, want_cache=want_cache,
+                                       q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+                attn_cache = c
+            else:
+                lp = jax.tree.map(lambda t: t[idx], pp[name])
+                h, c, a = T.layer_full(lp, cfg, h, None, kind="ssd", is_moe=is_moe,
+                                       want_cache=want_cache)
+                if want_cache:
+                    ssd_caches[name].append(c)
+            aux += a
+        ys = None
+        if want_cache:
+            stk = lambda cs: jax.tree.map(lambda *t: jnp.stack(t, 0), *cs)
+            ys = (stk(ssd_caches["ssd_dense"]) if ssd_caches["ssd_dense"] else None,
+                  stk(ssd_caches["ssd_moe"]) if ssd_caches["ssd_moe"] else None,
+                  attn_cache)
+        return (h, aux), ys
+
+    (x, aux), caches = _scan_layers(body, (x, 0.0), params["periods"], remat)
+    return x, aux, caches
+
+
+def _encdec_encode(params, cfg, frames, remat):
+    x = frames + params["enc_pos"][None, : frames.shape[1]]
+
+    def body(carry, lp):
+        h, _ = carry
+        h, _, _ = T.layer_full(lp, cfg, h, None, kind="attn", causal=False,
+                               want_cache=False, q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        return (h, 0.0), None
+
+    (x, _), _ = _scan_layers(body, (x, 0.0), params["enc_layers"], remat)
+    return L.apply_norm(x, params["enc_norm"], cfg.norm_type)
+
+
+def _encdec_full(params, cfg, tok_x, sincos, enc_out, *, want_cache, remat):
+    """Decoder stack with cross-attention to ``enc_out``."""
+    def body(carry, lp):
+        h, aux = carry
+        hn = L.apply_norm(h, lp["ln1"], cfg.norm_type)
+        a, kv = T.attn_full(lp["attn"], cfg, hn, sincos, causal=True,
+                            q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        h = h + a
+        hx = L.apply_norm(h, lp["ln_x"], cfg.norm_type)
+        q, _, _ = T._qk(lp["xattn"], cfg, hx)
+        ek = (enc_out @ lp["xattn"]["wk"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+        ev = (enc_out @ lp["xattn"]["wv"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+        xa = L.blockwise_attention(q, ek, ev, causal=False,
+                                   q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        h = h + xa.reshape(h.shape[0], h.shape[1], cfg.q_dim) @ lp["xattn"]["wo"]
+        hf = L.apply_norm(h, lp["ln2"], cfg.norm_type)
+        f, a2 = T.ffn_apply(lp["ffn"], cfg, hf, False)
+        h = h + f
+        ys = (kv[0], kv[1], ek, ev) if want_cache else None
+        return (h, aux + a2), ys
+
+    (x, aux), caches = _scan_layers(body, (tok_x, 0.0), params["layers"], remat)
+    return x, aux, caches
+
+
+def forward_hidden(params, cfg: ModelConfig, batch, *, want_cache=False,
+                   remat=False):
+    """Full-sequence forward -> (hidden, aux_loss, caches_or_None)."""
+    fam = family(cfg)
+    if fam == "encdec":
+        enc_out = _encdec_encode(params, cfg, batch["frames"], remat)
+        x, positions = embed_input(params, cfg, {"tokens": batch["tokens"]})
+        sincos = T._rope_for(cfg, positions)
+        x, aux, caches = _encdec_full(params, cfg, x, sincos, enc_out,
+                                      want_cache=want_cache, remat=remat)
+    else:
+        x, positions = embed_input(params, cfg, batch)
+        sincos = T._rope_for(cfg, positions)
+        if fam == "uniform":
+            x, aux, caches = _uniform_full(params, cfg, x, sincos,
+                                           want_cache=want_cache, remat=remat)
+        elif fam == "ssm":
+            x, aux, caches = _ssm_full(params, cfg, x,
+                                       want_cache=want_cache, remat=remat)
+        elif fam == "windowed":
+            x, aux, caches = _windowed_full(params, cfg, x, sincos,
+                                            want_cache=want_cache, remat=remat)
+        elif fam == "hybrid":
+            x, aux, caches = _hybrid_full(params, cfg, x, sincos,
+                                          want_cache=want_cache, remat=remat)
+        else:
+            raise ValueError(fam)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return x, aux, caches
+
+
+def apply_logits(params, cfg: ModelConfig, batch, remat=False):
+    h, aux, _ = forward_hidden(params, cfg, batch, want_cache=False, remat=remat)
+    return unembed(params, cfg, h), aux
+
+
+def lm_loss(params, cfg: ModelConfig, h, labels, *, chunk: int = 512):
+    """Sequence-chunked cross entropy that PRESERVES vocab sharding.
+
+    A take_along_axis gather over the vocab dim forces XLA to materialise
+    vocab-replicated logits (13+ GiB/device at 256k vocab); instead each chunk
+    computes logsumexp + a one-hot einsum — both reduce over V, so the logits
+    tile stays sharded on 'model' and peak memory is one (B, chunk, V/TP)
+    tile.  The chunk body is rematerialised in the backward pass.
+    """
+    B, S, _ = h.shape
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // chunk
+
+    def body(carry, i):
+        tot, cnt = carry
+        hc = lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        lab = lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = (hc @ w.astype(hc.dtype)).astype(jnp.float32)
+        logits = SH.constrain(logits, SH.BATCH, None, SH.MODEL)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        oh = jax.nn.one_hot(jnp.maximum(lab, 0), logits.shape[-1],
+                            dtype=jnp.float32)
+        ll = jnp.einsum("bcv,bcv->bc", logits, oh)
+        mask = (lab >= 0).astype(jnp.float32)
+        return (tot + ((lse - ll) * mask).sum(), cnt + mask.sum()), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                             jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def apply_train(params, cfg: ModelConfig, batch, remat=True):
+    """-> (loss, metrics).  CE over labels (pad id = -1 is masked)."""
+    h, aux, _ = forward_hidden(params, cfg, batch, want_cache=False, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub":
+        h = h[:, cfg.frontend_tokens:]
+    loss = lm_loss(params, cfg, h, labels)
+    total = loss + cfg.moe_aux_loss_weight * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# =============================================================================
+# decode caches
+# =============================================================================
+
+def cache_spec(cfg: ModelConfig, B: int, max_len: int) -> Dict[str, Any]:
+    """Shape/dtype tree of the decode cache (used for init and dry-run specs)."""
+    dt = jnp.dtype(cfg.dtype)
+    fam = family(cfg)
+    kv = lambda S: jnp.zeros((cfg.num_layers, B, S, cfg.num_kv_heads, cfg.head_dim), dt)
+    spec: Dict[str, Any] = {"kv_len": jnp.zeros((B,), jnp.int32)}
+    if fam == "uniform":
+        spec["k"], spec["v"] = kv(max_len), kv(max_len)
+    elif fam == "ssm":
+        spec["state"] = jnp.zeros(
+            (cfg.num_layers, B, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_size), dt)
+        spec["conv"] = jnp.zeros(
+            (cfg.num_layers, B, cfg.ssm_conv_width - 1, cfg.ssm_inner + 2 * cfg.ssm_state_size), dt)
+    elif fam == "windowed":
+        period, n_per, tail = _window_split(cfg)
+        W = cfg.sliding_window
+        sh = lambda n, S: jnp.zeros((n, B, S, cfg.num_kv_heads, cfg.head_dim), dt)
+        spec["local_k"] = jnp.zeros((n_per, period - 1, B, W, cfg.num_kv_heads, cfg.head_dim), dt)
+        spec["local_v"] = jnp.zeros_like(spec["local_k"])
+        spec["global_k"], spec["global_v"] = sh(n_per, max_len), sh(n_per, max_len)
+        if tail:
+            spec["tail_k"] = sh(tail, W)
+            spec["tail_v"] = sh(tail, W)
+    elif fam == "hybrid":
+        period = cfg.attn_period
+        n_per = cfg.num_layers // period
+        slots = hybrid_slots(cfg)
+        n_ssd = sum(1 for s in slots if s[0] != "attn")
+        spec["attn_k"] = jnp.zeros((n_per, B, max_len, cfg.num_kv_heads, cfg.head_dim), dt)
+        spec["attn_v"] = jnp.zeros_like(spec["attn_k"])
+        spec["state"] = jnp.zeros(
+            (n_per, n_ssd, B, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_size), dt)
+        spec["conv"] = jnp.zeros(
+            (n_per, n_ssd, B, cfg.ssm_conv_width - 1, cfg.ssm_inner + 2 * cfg.ssm_state_size), dt)
+    elif fam == "encdec":
+        F = cfg.enc_seq_len
+        spec["self_k"], spec["self_v"] = kv(max_len), kv(max_len)
+        spec["cross_k"] = jnp.zeros((cfg.num_layers, B, F, cfg.num_kv_heads, cfg.head_dim), dt)
+        spec["cross_v"] = jnp.zeros_like(spec["cross_k"])
+    return spec
+
+
+def cache_spec_cross_act(cfg: ModelConfig, B: int, max_len: int) -> Dict[str, Any]:
+    """Enc-dec cache variant: the paper's activation checkpointing applied to
+    CROSS attention — store the encoder output ONCE (B, F, d_model) and
+    recompute every layer's cross K/V via Eq. 7, instead of caching
+    (L, B, F, KVH, D) x2.  For whisper-base: 2*L*KVH*D / d_model = 12x less
+    cross-cache memory/traffic."""
+    spec = cache_spec(cfg, B, max_len)
+    del spec["cross_k"], spec["cross_v"]
+    spec["enc_act"] = jnp.zeros((B, cfg.enc_seq_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return spec
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int) -> Cache:
+    return cache_spec(cfg, B, max_len)
+
+
+def _to_ring(k_full, W):
+    """(..., S, kv, hd) full cache -> (..., W, kv, hd) ring for ctx_len=S."""
+    S = k_full.shape[-3]
+    j = np.arange(W)
+    idx = S - 1 - ((S - 1 - j) % W) if S >= W else None
+    if S < W:
+        pad = [(0, 0)] * k_full.ndim
+        pad[-3] = (0, W - S)
+        return jnp.pad(k_full, pad)
+    return jnp.take(k_full, jnp.asarray(idx), axis=-3)
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int, remat=False,
+            cross_act: bool = False):
+    """Run the prompt, build the decode cache. -> (last_logits, cache).
+
+    cross_act (enc-dec only): store the encoder output as an activation
+    checkpoint instead of per-layer cross K/V (see cache_spec_cross_act)."""
+    h, _, caches = forward_hidden(params, cfg, batch, want_cache=True, remat=remat)
+    logits = unembed(params, cfg, h[:, -1:])
+    fam = family(cfg)
+    B = h.shape[0]
+    S = h.shape[1]
+    cache = init_cache(cfg, B, max_len)
+    cache["kv_len"] = jnp.full((B,), S, jnp.int32)
+
+    def place(dst, src):     # write prompt K/V at [0, S)
+        return lax.dynamic_update_slice_in_dim(dst, src.astype(dst.dtype), 0, axis=-3)
+
+    if fam == "uniform":
+        cache["k"] = place(cache["k"], caches[0])
+        cache["v"] = place(cache["v"], caches[1])
+    elif fam == "ssm":
+        cache["state"] = caches[0].astype(cache["state"].dtype)
+        cache["conv"] = caches[1].astype(cache["conv"].dtype)
+    elif fam == "windowed":
+        (per_caches, tail_caches) = caches
+        lk, lv, gk, gv = per_caches
+        W = cfg.sliding_window
+        cache["local_k"] = _to_ring(lk, W).astype(cache["local_k"].dtype)
+        cache["local_v"] = _to_ring(lv, W).astype(cache["local_v"].dtype)
+        cache["global_k"] = place(cache["global_k"], gk)
+        cache["global_v"] = place(cache["global_v"], gv)
+        if tail_caches is not None:
+            cache["tail_k"] = _to_ring(tail_caches[0], W).astype(cache["tail_k"].dtype)
+            cache["tail_v"] = _to_ring(tail_caches[1], W).astype(cache["tail_v"].dtype)
+    elif fam == "hybrid":
+        ssd_dense, ssd_moe, attn_kv = caches
+        cache["attn_k"] = place(cache["attn_k"], attn_kv[0])
+        cache["attn_v"] = place(cache["attn_v"], attn_kv[1])
+        # reassemble SSD states into walk order
+        slots = hybrid_slots(cfg)
+        states, convs = [], []
+        di, mi = 0, 0
+        for name, idx, _ in slots:
+            if name == "ssd_dense":
+                states.append(jax.tree.map(lambda t: t[:, idx], ssd_dense)[0])
+                convs.append(jax.tree.map(lambda t: t[:, idx], ssd_dense)[1])
+            elif name == "ssd_moe":
+                states.append(jax.tree.map(lambda t: t[:, idx], ssd_moe)[0])
+                convs.append(jax.tree.map(lambda t: t[:, idx], ssd_moe)[1])
+        cache["state"] = jnp.stack(states, 1).astype(cache["state"].dtype)
+        cache["conv"] = jnp.stack(convs, 1).astype(cache["conv"].dtype)
+    elif fam == "encdec":
+        sk, sv, ck, cv = caches
+        if cross_act:
+            cache = {k: v for k, v in cache.items()
+                     if k not in ("cross_k", "cross_v")}
+            enc_out = _encdec_encode(params, cfg, batch["frames"], remat)
+            cache["enc_act"] = enc_out.astype(jnp.dtype(cfg.dtype))
+        else:
+            cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+            cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        cache["self_k"] = place(cache["self_k"], sk)
+        cache["self_v"] = place(cache["self_v"], sv)
+    return logits, cache
+
+
+# =============================================================================
+# decode step (serve_step)
+# =============================================================================
+
+def decode_step(params, cfg: ModelConfig, token, cache: Cache):
+    """token (B, 1) int32 (or (B,1,d) frames-free decode for encdec).
+
+    -> (logits (B,1,V), new cache).  kv_len advances by 1.
+    """
+    fam = family(cfg)
+    B = token.shape[0]
+    kv_len = cache["kv_len"]
+    if cfg.pos_type == "mrope":
+        # text continuation: all three streams equal; account for the patch
+        # grid occupying P slots but only t0 position values (see _positions_for)
+        P = cfg.frontend_tokens
+        gw = max(1, int(np.sqrt(max(P, 1))))
+        t0 = int(max(gw, P // gw)) if P else 0
+        mpos = kv_len - P + t0
+        p = jnp.broadcast_to(mpos[:, None, None], (B, 1, 3))
+        sincos = T._rope_for(cfg, p)
+    else:
+        sincos = T._rope_for(cfg, kv_len[:, None])
+
+    x = _embed_tokens(params, cfg, token)
+    if cfg.pos_type == "learned":
+        x = x + jnp.take(params["pos_embed"], kv_len, axis=0)[:, None]
+
+    new_cache = dict(cache)
+    if fam == "uniform":
+        is_moe = cfg.is_moe and cfg.moe_every == 1
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            h, (k, v) = T.layer_decode(lp, cfg, h, sincos, (kc, vc), kv_len,
+                                       kind="attn", is_moe=is_moe)
+            return h, (k, v)
+
+        x, (K, V) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = K, V
+    elif fam == "ssm":
+        def body(h, xs):
+            lp, st, cv = xs
+            h, (s, c) = T.layer_decode(lp, cfg, h, None, (st, cv), kv_len, kind="ssd")
+            return h, (s, c)
+        x, (S_, C_) = lax.scan(body, x, (params["layers"], cache["state"], cache["conv"]))
+        new_cache["state"], new_cache["conv"] = S_.astype(cache["state"].dtype), C_
+    elif fam == "windowed":
+        period, n_per, tail = _window_split(cfg)
+        W = cfg.sliding_window
+
+        def body(h, xs):
+            pp, lk, lv, gk, gv = xs
+            nlk, nlv = [], []
+            for j in range(period - 1):
+                lp = jax.tree.map(lambda a: a[j], pp["local"])
+                h, (k, v) = T.layer_decode(lp, cfg, h, sincos, (lk[j], lv[j]),
+                                           kv_len, window=W, ring=True)
+                nlk.append(k); nlv.append(v)
+            h, (gk2, gv2) = T.layer_decode(pp["global"], cfg, h, sincos, (gk, gv), kv_len)
+            return h, (jnp.stack(nlk, 0), jnp.stack(nlv, 0), gk2, gv2)
+
+        x, (LK, LV, GK, GV) = lax.scan(
+            body, x, (params["periods"], cache["local_k"], cache["local_v"],
+                      cache["global_k"], cache["global_v"]))
+        new_cache.update(local_k=LK, local_v=LV, global_k=GK, global_v=GV)
+        if tail:
+            def tbody(h, xs):
+                lp, k, v = xs
+                h, (k2, v2) = T.layer_decode(lp, cfg, h, sincos, (k, v), kv_len,
+                                             window=W, ring=True)
+                return h, (k2, v2)
+            x, (TK, TV) = lax.scan(tbody, x, (params["tail"], cache["tail_k"], cache["tail_v"]))
+            new_cache.update(tail_k=TK, tail_v=TV)
+    elif fam == "hybrid":
+        slots = hybrid_slots(cfg)
+
+        def body(h, xs):
+            pp, ak, av, st, cv = xs
+            si = 0
+            nst, ncv, nak, nav = [], [], None, None
+            for name, idx, is_moe in slots:
+                if name == "attn":
+                    h, (k, v) = T.layer_decode(pp["attn"], cfg, h, sincos, (ak, av),
+                                               kv_len, kind="attn", is_moe=is_moe)
+                    nak, nav = k, v
+                else:
+                    lp = jax.tree.map(lambda t: t[idx], pp[name])
+                    h, (s, c) = T.layer_decode(lp, cfg, h, None, (st[si], cv[si]),
+                                               kv_len, kind="ssd", is_moe=is_moe)
+                    nst.append(s.astype(st.dtype)); ncv.append(c)
+                    si += 1
+            return h, (nak, nav, jnp.stack(nst, 0), jnp.stack(ncv, 0))
+
+        x, (AK, AV, ST, CV) = lax.scan(
+            body, x, (params["periods"], cache["attn_k"], cache["attn_v"],
+                      cache["state"], cache["conv"]))
+        new_cache.update(attn_k=AK, attn_v=AV, state=ST, conv=CV)
+    elif fam == "encdec":
+        cross_act = "enc_act" in cache
+        enc_act = cache.get("enc_act")
+
+        def body(h, xs):
+            lp, sk, sv, ck, cv = xs
+            hn = L.apply_norm(h, lp["ln1"], cfg.norm_type)
+            a, k2, v2 = T.attn_decode(lp["attn"], cfg, hn, sincos, sk, sv, kv_len)
+            h = h + a
+            hx = L.apply_norm(h, lp["ln_x"], cfg.norm_type)
+            q, _, _ = T._qk(lp["xattn"], cfg, hx)
+            if cross_act:
+                # Eq. 7 on cross attention: recompute this layer's cross K/V
+                # from the single encoder-output checkpoint (KV Gen)
+                B_, F = enc_act.shape[0], enc_act.shape[1]
+                ck = (enc_act @ lp["xattn"]["wk"]).reshape(
+                    B_, F, cfg.num_kv_heads, cfg.head_dim)
+                cv = (enc_act @ lp["xattn"]["wv"]).reshape(
+                    B_, F, cfg.num_kv_heads, cfg.head_dim)
+            xa = L.decode_attention(q, ck, cv, kv_len=ck.shape[1])
+            h = h + xa.reshape(h.shape[0], 1, cfg.q_dim) @ lp["xattn"]["wo"]
+            hf = L.apply_norm(h, lp["ln2"], cfg.norm_type)
+            f, _ = T.ffn_apply(lp["ffn"], cfg, hf, False)
+            return h + f, (k2, v2)
+
+        if cross_act:
+            B_ = x.shape[0]
+            dummy = jnp.zeros((cfg.num_layers, B_, 1, cfg.num_kv_heads,
+                               cfg.head_dim), x.dtype)
+            xs_in = (params["layers"], cache["self_k"], cache["self_v"],
+                     dummy, dummy)
+        else:
+            xs_in = (params["layers"], cache["self_k"], cache["self_v"],
+                     cache["cross_k"], cache["cross_v"])
+        x, (SK, SV) = lax.scan(body, x, xs_in)
+        new_cache.update(self_k=SK, self_v=SV)
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    new_cache["kv_len"] = kv_len + 1
+    return unembed(params, cfg, x), new_cache
+
+
+# =============================================================================
+# HYBRID KV/ACT decode step — the paper's technique (uniform + windowed)
+# =============================================================================
+
+def init_hybrid_cache(cfg: ModelConfig, B: int, kv_cap: int, act_cap: int) -> Cache:
+    """KV region holds the context prefix as K/V; ACT region holds the suffix
+    as layer-input activation checkpoints (paper Eq. 7 recomputes K/V).
+
+    uniform family: every layer is hybrid.  windowed family (gemma): only the
+    GLOBAL layers carry the hybrid cache — local layers keep their bounded
+    ring buffers (there is nothing worth offloading in a 512-token window);
+    this is the DESIGN.md §7 extension of the paper's technique to
+    sliding-window architectures.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    fam = family(cfg)
+    if fam == "windowed":
+        period, n_per, tail = _window_split(cfg)
+        W = cfg.sliding_window
+        kv = lambda n, S: jnp.zeros((n, B, S, cfg.num_kv_heads, cfg.head_dim), dt)
+        spec = {
+            "local_k": jnp.zeros((n_per, period - 1, B, W, cfg.num_kv_heads,
+                                  cfg.head_dim), dt),
+        }
+        spec["local_v"] = jnp.zeros_like(spec["local_k"])
+        spec["k"], spec["v"] = kv(n_per, kv_cap), kv(n_per, kv_cap)
+        spec["act"] = jnp.zeros((n_per, B, act_cap, cfg.d_model), dt)
+        if tail:
+            spec["tail_k"], spec["tail_v"] = kv(tail, W), kv(tail, W)
+        spec.update(act_pos=jnp.zeros((B, act_cap), jnp.int32),
+                    kv_len=jnp.zeros((B,), jnp.int32),
+                    act_len=jnp.zeros((B,), jnp.int32))
+        return spec
+    return {
+        "k": jnp.zeros((cfg.num_layers, B, kv_cap, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((cfg.num_layers, B, kv_cap, cfg.num_kv_heads, cfg.head_dim), dt),
+        "act": jnp.zeros((cfg.num_layers, B, act_cap, cfg.d_model), dt),
+        "act_pos": jnp.zeros((B, act_cap), jnp.int32),
+        "kv_len": jnp.zeros((B,), jnp.int32),
+        "act_len": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
+                       sincos_new, sincos_act, is_moe):
+    """One hybrid KV/ACT attention layer at decode time (shared by the
+    uniform scan and the windowed period scan).  Returns h, kc', vc', ac'."""
+    B = h.shape[0]
+    S_act = ac.shape[1]
+    arangeB = jnp.arange(B)
+    act_in = h[:, 0]                                           # A^i of new token
+    hn = L.apply_norm(h, lp["ln1"], cfg.norm_type)
+    q, k, v = T._qk(lp["attn"], cfg, hn)
+    if sincos_new is not None:
+        q = L.apply_rope(q, *sincos_new)
+        k = L.apply_rope(k, *sincos_new)
+
+    # --- KV Gen: recompute the ACT region's K/V (Eq. 7) -------------------
+    an = L.apply_norm(ac, lp["ln1"], cfg.norm_type)
+    ka = (an @ lp["attn"]["wk"]).reshape(B, S_act, cfg.num_kv_heads, cfg.head_dim)
+    va = (an @ lp["attn"]["wv"]).reshape(B, S_act, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        ka = L.rms_norm(ka, lp["attn"]["knorm"])
+    if sincos_act is not None:
+        ka = L.apply_rope(ka, *sincos_act)
+
+    # --- append the new token to its region --------------------------------
+    kc2 = kc.at[arangeB, kv_len].set(
+        jnp.where(store_act[:, None, None], kc[arangeB, kv_len], k[:, 0]))
+    vc2 = vc.at[arangeB, kv_len].set(
+        jnp.where(store_act[:, None, None], vc[arangeB, kv_len], v[:, 0]))
+    ka = ka.at[arangeB, act_len].set(
+        jnp.where(store_act[:, None, None], k[:, 0], ka[arangeB, act_len]))
+    va = va.at[arangeB, act_len].set(
+        jnp.where(store_act[:, None, None], v[:, 0], va[arangeB, act_len]))
+    ac2 = ac.at[arangeB, act_len].set(
+        jnp.where(store_act[:, None], act_in.astype(ac.dtype), ac[arangeB, act_len]))
+
+    # --- attention over [KV region ; ACT region (recomputed)] --------------
+    S_kv = kc.shape[1]
+    kv_valid = jnp.arange(S_kv)[None, :] < (kv_len + (~store_act))[:, None]
+    act_valid = jnp.arange(S_act)[None, :] < (act_len + store_act)[:, None]
+    k_all = jnp.concatenate([kc2, ka.astype(kc2.dtype)], axis=1)
+    v_all = jnp.concatenate([vc2, va.astype(vc2.dtype)], axis=1)
+    valid = jnp.concatenate([kv_valid, act_valid], axis=1)
+    o = T._masked_decode_attn(q, k_all, v_all, valid)
+    h = h + o.reshape(B, 1, cfg.q_dim) @ lp["attn"]["wo"]
+
+    if cfg.d_ff > 0:
+        hf = L.apply_norm(h, lp["ln2"], cfg.norm_type)
+        f, _ = T.ffn_apply(lp["ffn"], cfg, hf, is_moe)
+        h = h + f
+    return h, kc2, vc2, ac2
+
+
+def hybrid_prefill(params, cfg: ModelConfig, batch, kv_cap: int, act_cap: int,
+                   kv_keep: int):
+    """Prefill storing the first ``kv_keep`` tokens as K/V and the remaining
+    prompt tokens as activation checkpoints (engine decides kv_keep from the
+    Algorithm-1 ratio)."""
+    if family(cfg) == "windowed":
+        return _hybrid_prefill_windowed(params, cfg, batch, kv_cap, act_cap,
+                                        kv_keep)
+    assert family(cfg) == "uniform"
+    x, positions = embed_input(params, cfg, batch)
+    sincos = T._rope_for(cfg, positions)
+    S = x.shape[1]
+    is_moe = cfg.is_moe and cfg.moe_every == 1
+
+    def body(carry, lp):
+        h, aux = carry
+        act_in = h                                       # A^i — the checkpoint
+        h, (k, v), a = T.layer_full(lp, cfg, h, sincos, kind="attn", is_moe=is_moe,
+                                    want_cache=True, q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        return (h, aux + a), (k, v, act_in)
+
+    (h, _), (K, V, ACT) = lax.scan(body, (x, 0.0), params["layers"])
+    h = L.apply_norm(h, params["final_norm"], cfg.norm_type)
+    logits = unembed(params, cfg, h[:, -1:])
+
+    B = x.shape[0]
+    cache = init_hybrid_cache(cfg, B, kv_cap, act_cap)
+    kfit = min(kv_keep, S)
+    cache["k"] = lax.dynamic_update_slice_in_dim(
+        cache["k"], K[:, :, :kfit].astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = lax.dynamic_update_slice_in_dim(
+        cache["v"], V[:, :, :kfit].astype(cache["v"].dtype), 0, axis=2)
+    cache["act"] = lax.dynamic_update_slice_in_dim(
+        cache["act"], ACT[:, :, kfit:].astype(cache["act"].dtype), 0, axis=2)
+    cache["act_pos"] = jnp.broadcast_to(
+        kfit + jnp.arange(cache["act_pos"].shape[1], dtype=jnp.int32)[None],
+        cache["act_pos"].shape)
+    cache["kv_len"] = jnp.full((B,), kfit, jnp.int32)
+    cache["act_len"] = jnp.full((B,), S - kfit, jnp.int32)
+    return logits, cache
+
+
+def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
+                       store_act):
+    """One generation step with the KV-Activation hybrid cache.
+
+    store_act: (B,) bool — whether this token's checkpoint goes to the ACT
+    region (True) or its K/V to the KV region (False); the engine keeps the
+    Algorithm-1 ratio per request (paper Eq. 11).
+
+    KV Gen (paper Fig. 7): K/V for the ACT region are recomputed per layer via
+    ``act @ [Wk Wv]`` — the projection + RoPE the paper overlaps with PCIe
+    weight streaming.
+    """
+    if family(cfg) == "windowed":
+        return _hybrid_decode_windowed(params, cfg, token, cache, store_act)
+    assert family(cfg) == "uniform"
+    B = token.shape[0]
+    kv_len, act_len = cache["kv_len"], cache["act_len"]
+    ctx = kv_len + act_len                                     # absolute position
+    sincos_new = T._rope_for(cfg, ctx[:, None]) if cfg.pos_type in ("rope",) else None
+    # ACT tokens carry their recorded absolute positions (appends interleave)
+    act_pos = cache["act_pos"].at[jnp.arange(B), act_len].set(
+        jnp.where(store_act, ctx, cache["act_pos"][jnp.arange(B), act_len]))
+    sincos_act = T._rope_for(cfg, act_pos) if cfg.pos_type in ("rope",) else None
+
+    x = _embed_tokens(params, cfg, token)
+    if cfg.pos_type == "learned":
+        x = x + jnp.take(params["pos_embed"], ctx, axis=0)[:, None]
+    is_moe = cfg.is_moe and cfg.moe_every == 1
+
+    def body(h, xs):
+        lp, kc, vc, ac = xs
+        h, kc2, vc2, ac2 = _hybrid_layer_step(
+            lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
+            sincos_new, sincos_act, is_moe)
+        return h, (kc2, vc2, ac2)
+
+    x, (K, V, ACT) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"], cache["act"]))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    new_cache = dict(cache)
+    new_cache.update(
+        k=K, v=V, act=ACT, act_pos=act_pos,
+        kv_len=kv_len + (~store_act).astype(jnp.int32),
+        act_len=act_len + store_act.astype(jnp.int32),
+    )
+    return unembed(params, cfg, x), new_cache
+
+
+# --- windowed (gemma) hybrid: global layers hybrid, local layers ring -------
+
+def _hybrid_prefill_windowed(params, cfg, batch, kv_cap, act_cap, kv_keep):
+    x, positions = embed_input(params, cfg, batch)
+    sincos = T._rope_for(cfg, positions)
+    S, B = x.shape[1], x.shape[0]
+    period, n_per, tail = _window_split(cfg)
+    W = cfg.sliding_window
+
+    def body(carry, pp):
+        h, aux = carry
+        lk, lv = [], []
+        for j in range(period - 1):
+            lp = jax.tree.map(lambda a: a[j], pp["local"])
+            h, c, a = T.layer_full(lp, cfg, h, sincos, window=W, want_cache=True,
+                                   q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+            lk.append(c[0]); lv.append(c[1]); aux += a
+        act_in = h                                  # checkpoint of global layer
+        h, cg, a = T.layer_full(pp["global"], cfg, h, sincos, window=0,
+                                want_cache=True, q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        aux += a
+        return (h, aux), (jnp.stack(lk, 0), jnp.stack(lv, 0), cg[0], cg[1], act_in)
+
+    (h, _), (LK, LV, GK, GV, ACT_IN) = lax.scan(body, (x, 0.0), params["periods"])
+
+    tail_caches = None
+    if tail:
+        def tbody(carry, lp):
+            h, aux = carry
+            h, c, a = T.layer_full(lp, cfg, h, sincos, window=W, want_cache=True,
+                                   q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+            return (h, aux + a), c
+        (h, _), tail_caches = lax.scan(tbody, (h, 0.0), params["tail"])
+
+    h = L.apply_norm(h, params["final_norm"], cfg.norm_type)
+    logits = unembed(params, cfg, h[:, -1:])
+
+    cache = init_hybrid_cache(cfg, B, kv_cap, act_cap)
+    kfit = min(kv_keep, S)
+    cache["local_k"] = _to_ring(LK, W).astype(cache["local_k"].dtype)
+    cache["local_v"] = _to_ring(LV, W).astype(cache["local_v"].dtype)
+    if tail:
+        cache["tail_k"] = _to_ring(tail_caches[0], W).astype(cache["tail_k"].dtype)
+        cache["tail_v"] = _to_ring(tail_caches[1], W).astype(cache["tail_v"].dtype)
+    up = lambda dst, src: lax.dynamic_update_slice_in_dim(
+        dst, src.astype(dst.dtype), 0, axis=2)
+    cache["k"] = up(cache["k"], GK[:, :, :kfit])
+    cache["v"] = up(cache["v"], GV[:, :, :kfit])
+    cache["act"] = up(cache["act"], ACT_IN[:, :, kfit:])
+    cache["act_pos"] = jnp.broadcast_to(
+        kfit + jnp.arange(cache["act_pos"].shape[1], dtype=jnp.int32)[None],
+        cache["act_pos"].shape)
+    cache["kv_len"] = jnp.full((B,), kfit, jnp.int32)
+    cache["act_len"] = jnp.full((B,), S - kfit, jnp.int32)
+    return logits, cache
+
+
+def _hybrid_decode_windowed(params, cfg, token, cache, store_act):
+    B = token.shape[0]
+    kv_len, act_len = cache["kv_len"], cache["act_len"]
+    ctx = kv_len + act_len
+    sincos_new = T._rope_for(cfg, ctx[:, None])
+    act_pos = cache["act_pos"].at[jnp.arange(B), act_len].set(
+        jnp.where(store_act, ctx, cache["act_pos"][jnp.arange(B), act_len]))
+    sincos_act = T._rope_for(cfg, act_pos)
+    period, n_per, tail = _window_split(cfg)
+    W = cfg.sliding_window
+
+    x = _embed_tokens(params, cfg, token)
+
+    def body(h, xs):
+        pp, lk, lv, gk, gv, ga = xs
+        nlk, nlv = [], []
+        for j in range(period - 1):
+            lp = jax.tree.map(lambda a: a[j], pp["local"])
+            h, (k2, v2) = T.layer_decode(lp, cfg, h, sincos_new, (lk[j], lv[j]),
+                                         ctx, window=W, ring=True)
+            nlk.append(k2); nlv.append(v2)
+        h, gk2, gv2, ga2 = _hybrid_layer_step(
+            pp["global"], cfg, h, gk, gv, ga, kv_len, act_len, store_act,
+            sincos_new, sincos_act, False)
+        return h, (jnp.stack(nlk, 0), jnp.stack(nlv, 0), gk2, gv2, ga2)
+
+    x, (LK, LV, GK, GV, ACT) = lax.scan(
+        body, x, (params["periods"], cache["local_k"], cache["local_v"],
+                  cache["k"], cache["v"], cache["act"]))
+    new_cache = dict(cache)
+    new_cache.update(local_k=LK, local_v=LV, k=GK, v=GV, act=ACT)
+    if tail:
+        def tbody(h, xs):
+            lp, k, v = xs
+            h, (k2, v2) = T.layer_decode(lp, cfg, h, sincos_new, (k, v), ctx,
+                                         window=W, ring=True)
+            return h, (k2, v2)
+        x, (TK, TV) = lax.scan(tbody, x, (params["tail"], cache["tail_k"],
+                                          cache["tail_v"]))
+        new_cache.update(tail_k=TK, tail_v=TV)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    new_cache.update(
+        act_pos=act_pos,
+        kv_len=kv_len + (~store_act).astype(jnp.int32),
+        act_len=act_len + store_act.astype(jnp.int32),
+    )
+    return unembed(params, cfg, x), new_cache

@@ -1,0 +1,102 @@
+"""OPTIONAL int8-quantized KV cache for memory-bound decode.
+
+NOT part of the paper reproduction (HybridServe is exact by design) — this is
+the standard production lever the roofline table points at for decode's
+memory term, provided as an off-by-default alternative cache format:
+
+  k, v stored int8 per (token, kv-head) with a float16 absmax scale.
+
+Error is bounded (~0.4% relative per element); tests check logits stay within
+a small tolerance of the fp cache.  Halves cache residency and HBM reads —
+takes grok-1-314B x decode_32k from 20.9 GiB/device to under the 16 GiB HBM
+line on one v5e pod (EXPERIMENTS.md §Perf, optional lever).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+def quantize(x, axis=-1):
+    """x (..., D) -> (int8 values, f16 scales) with per-slice absmax."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_cache_q8(cfg: ModelConfig, B: int, max_len: int) -> Dict[str, Any]:
+    """uniform-family decode cache, int8 K/V + f16 scales."""
+    assert M.family(cfg) == "uniform"
+    sh = (cfg.num_layers, B, max_len, cfg.num_kv_heads, cfg.head_dim)
+    ssh = (cfg.num_layers, B, max_len, cfg.num_kv_heads, 1)
+    return {
+        "k_q": jnp.zeros(sh, jnp.int8), "k_s": jnp.zeros(ssh, jnp.float16),
+        "v_q": jnp.zeros(sh, jnp.int8), "v_s": jnp.zeros(ssh, jnp.float16),
+        "kv_len": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def prefill_q8(params, cfg: ModelConfig, batch, max_len: int):
+    """Prefill then quantize the prompt K/V into the int8 cache."""
+    logits, cache = M.prefill(params, cfg, batch, max_len=max_len)
+    kq, ks = quantize(cache["k"])
+    vq, vs = quantize(cache["v"])
+    return logits, {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs,
+                    "kv_len": cache["kv_len"]}
+
+
+def decode_step_q8(params, cfg: ModelConfig, token, cache):
+    """One decode step over the int8 cache (uniform family)."""
+    assert M.family(cfg) == "uniform"
+    B = token.shape[0]
+    kv_len = cache["kv_len"]
+    sincos = T._rope_for(cfg, kv_len[:, None]) if cfg.pos_type == "rope" else None
+    x = M._embed_tokens(params, cfg, token)
+    if cfg.pos_type == "learned":
+        x = x + jnp.take(params["pos_embed"], kv_len, axis=0)[:, None]
+    is_moe = cfg.is_moe and cfg.moe_every == 1
+    arangeB = jnp.arange(B)
+
+    def body(h, xs):
+        lp, kq, ks, vq, vs = xs
+        hn = L.apply_norm(h, lp["ln1"], cfg.norm_type)
+        q, k, v = T._qk(lp["attn"], cfg, hn)
+        if sincos is not None:
+            q = L.apply_rope(q, *sincos)
+            k = L.apply_rope(k, *sincos)
+        nkq, nks = quantize(k[:, 0])
+        nvq, nvs = quantize(v[:, 0])
+        kq = kq.at[arangeB, kv_len].set(nkq)
+        ks = ks.at[arangeB, kv_len].set(nks)
+        vq = vq.at[arangeB, kv_len].set(nvq)
+        vs = vs.at[arangeB, kv_len].set(nvs)
+        kf = dequantize(kq, ks, cfg.dtype)
+        vf = dequantize(vq, vs, cfg.dtype)
+        o = L.decode_attention(q, kf, vf, kv_len=kv_len + 1)
+        h = h + o.reshape(B, 1, cfg.q_dim) @ lp["attn"]["wo"]
+        if cfg.d_ff > 0:
+            hf = L.apply_norm(h, lp["ln2"], cfg.norm_type)
+            f, _ = T.ffn_apply(lp["ffn"], cfg, hf, is_moe)
+            h = h + f
+        return h, (kq, ks, vq, vs)
+
+    x, (KQ, KS, VQ, VS) = lax.scan(
+        body, x, (params["layers"], cache["k_q"], cache["k_s"],
+                  cache["v_q"], cache["v_s"]))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    new_cache = dict(cache, k_q=KQ, k_s=KS, v_q=VQ, v_s=VS,
+                     kv_len=kv_len + 1)
+    return M.unembed(params, cfg, x), new_cache

@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, cosine_lr, init, update

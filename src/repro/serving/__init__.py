@@ -1,0 +1,3 @@
+from repro.serving.engine import (GenStats, HybridServeEngine,
+                                  exact_reference_generate)
+from repro.serving.scheduler import ContinuousBatchingServer, ServeStats

@@ -1,0 +1,230 @@
+"""HybridServe engine: end-to-end serving with the KV/ACT hybrid cache.
+
+Executable engine (CPU, reduced configs): real prompts in, real tokens out,
+with the paper's policy stack driving representation choices:
+
+  1. Algorithm 1 fixes the host ACT:KV ratio for the model + hardware.
+  2. Each request's prompt is split KV-prefix / ACT-suffix at that ratio
+     (Eq. 11); generated tokens keep the running ratio via next_block_kind.
+  3. Mini-batches are formed by the F_b bin packer; each mini-batch runs the
+     jitted hybrid_decode_step (KV Gen fused into the step).
+  4. The BlockManager accounts physical blocks on both tiers; the pipeline
+     simulator reports what the schedule would cost on the target hardware.
+
+Baselines: mode="kv" (FlexGen-style full-KV decode) and mode="act"
+(HybridServe-Act-Cache) run the same engine with the ratio pinned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (BLOCK_TOKENS, BlockManager, BlockType,
+                        HostAllocation, RequestBlocks, device_act_blocks,
+                        form_minibatches, host_block_allocation,
+                        next_block_kind, profile_cost_fns)
+from repro.core import costmodel as cm
+from repro.core.pipeline import MiniBatchSpec, simulate_step
+from repro.data.pipeline import Request
+from repro.models import model as M
+
+
+def _bucket(n: int, mult: int = 16) -> int:
+    return max(mult, (n + mult - 1) // mult * mult)
+
+
+@dataclass
+class GenStats:
+    generated_tokens: int = 0
+    steps: int = 0
+    sim_time: float = 0.0
+    sim_gpu_busy: float = 0.0
+    traffic: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def sim_throughput(self) -> float:
+        return self.generated_tokens / self.sim_time if self.sim_time else 0.0
+
+    @property
+    def sim_gpu_util(self) -> float:
+        return self.sim_gpu_busy / self.sim_time if self.sim_time else 0.0
+
+
+class HybridServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, hw: cm.HardwareSpec = cm.TPU_V5E,
+                 mode: str = "hybrid", max_minibatch: int = 4,
+                 kv_cap: int = 512, act_cap: int = 512, seed: int = 0,
+                 generalized: bool = False):
+        """generalized=True uses the byte-ratio-aware Algorithm-1 variant
+        (DESIGN.md §7) — recommended for GQA models; False reproduces the
+        paper's policy exactly."""
+        assert mode in ("hybrid", "kv", "act")
+        assert M.family(cfg) == "uniform", "engine drives uniform-family models"
+        self.cfg, self.params, self.hw, self.mode = cfg, params, hw, mode
+        self.max_minibatch = max_minibatch
+        self.kv_cap, self.act_cap = kv_cap, act_cap
+        self.rng = np.random.default_rng(seed)
+
+        self.fits = profile_cost_fns(cfg, hw)
+        self.alloc = host_block_allocation(cfg, hw, device_act_blocks(cfg, hw),
+                                           generalized=generalized)
+        if mode == "kv":
+            self.alloc = dataclasses.replace(self.alloc, act_blocks=0, kv_blocks=max(
+                self.alloc.kv_blocks, 1))
+        elif mode == "act":
+            self.alloc = dataclasses.replace(self.alloc, kv_blocks=0, act_blocks=max(
+                self.alloc.act_blocks, 1))
+        total = self.alloc.act_blocks + self.alloc.kv_blocks
+        self.act_frac = self.alloc.act_blocks / total if total else 0.0
+
+        self.blockman = BlockManager(
+            cfg,
+            host_kv_blocks=max(self.alloc.kv_blocks, 1),
+            host_act_blocks=max(self.alloc.act_blocks, 1),
+            dev_kv_blocks=64, dev_act_blocks=device_act_blocks(cfg, hw))
+
+        self._prefill_jit = functools.partial(
+            jax.jit, static_argnames=("kv_cap", "act_cap", "kv_keep"))(
+                self._prefill_impl)
+        self._decode_jit = jax.jit(self._decode_impl)
+
+    # --- jitted wrappers ------------------------------------------------------
+    def _prefill_impl(self, tokens, kv_cap, act_cap, kv_keep):
+        return M.hybrid_prefill(self.params, self.cfg, {"tokens": tokens},
+                                kv_cap=kv_cap, act_cap=act_cap, kv_keep=kv_keep)
+
+    def _decode_impl(self, token, cache, store_act):
+        return M.hybrid_decode_step(self.params, self.cfg, token, cache, store_act)
+
+    # --- public API ----------------------------------------------------------
+    def generate(self, requests: List[Request]) -> Tuple[Dict[int, np.ndarray], GenStats]:
+        cfg = self.cfg
+        stats = GenStats()
+
+        # Eq.11 request split + F_b mini-batch packing over block counts
+        reqs_blocks = []
+        for r in requests:
+            blocks = (len(r.prompt) + r.max_new_tokens + BLOCK_TOKENS - 1) // BLOCK_TOKENS
+            n_act = int(round(blocks * self.act_frac))
+            reqs_blocks.append(RequestBlocks(r.rid, n_act, blocks - n_act))
+        mbs = form_minibatches(
+            reqs_blocks, *self.fits,
+            act_max=max(self.max_minibatch * (self.act_cap // BLOCK_TOKENS), 1),
+            kv_max=max(self.max_minibatch * (self.kv_cap // BLOCK_TOKENS), 1))
+
+        by_rid = {r.rid: r for r in requests}
+        outputs: Dict[int, np.ndarray] = {}
+        for mb in mbs:
+            batch_reqs = [by_rid[rb.rid] for rb in mb.requests]
+            # chunk the packed mini-batch to the engine's jit width
+            for i in range(0, len(batch_reqs), self.max_minibatch):
+                group = batch_reqs[i: i + self.max_minibatch]
+                out, st = self._run_group(group)
+                outputs.update(out)
+                stats.generated_tokens += st.generated_tokens
+                stats.steps += st.steps
+                stats.sim_time += st.sim_time
+                stats.sim_gpu_busy += st.sim_gpu_busy
+                for k, v in st.traffic.items():
+                    stats.traffic[k] = stats.traffic.get(k, 0.0) + v
+        return outputs, stats
+
+    # --- one jit-width group of requests -------------------------------------
+    def _run_group(self, group: List[Request]) -> Tuple[Dict[int, np.ndarray], GenStats]:
+        cfg = self.cfg
+        stats = GenStats()
+        caches, logits_list = [], []
+        for r in group:
+            self.blockman.new_request(r.rid)
+            plen = len(r.prompt)
+            pb = _bucket(plen)
+            toks = np.zeros((1, pb), np.int32)
+            toks[0, :plen] = r.prompt
+            toks[0, plen:] = r.prompt[-1]           # pad with last token
+            kv_keep = int(round(pb * (1 - self.act_frac) / BLOCK_TOKENS)) * BLOCK_TOKENS
+            if self.mode == "kv":
+                kv_keep = pb
+            if self.mode == "act":
+                kv_keep = 0
+            lg, cache = self._prefill_jit(jnp.asarray(toks), kv_cap=self.kv_cap,
+                                          act_cap=self.act_cap, kv_keep=kv_keep)
+            for t in range(pb):
+                kind = BlockType.KV if t < kv_keep else BlockType.ACT
+                self.blockman.append_token(r.rid, kind)
+            caches.append(cache)
+            logits_list.append(lg)
+
+        B = len(group)
+        if B > 1:
+            batch0 = ("kv_len", "act_len", "act_pos")   # batch on axis 0
+            cache = {k: jnp.concatenate([c[k] for c in caches],
+                                        axis=0 if k in batch0 else 1)
+                     for k in caches[0]}
+        else:
+            cache = caches[0]
+        logits = jnp.concatenate(logits_list, axis=0)
+
+        max_new = max(r.max_new_tokens for r in group)
+        gen = np.zeros((B, max_new), np.int32)
+        cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+        counts = {r.rid: self.blockman.counts(r.rid) for r in group}
+        for step in range(max_new):
+            gen[:, step] = cur
+            store = np.zeros((B,), bool)
+            for bi, r in enumerate(group):
+                c = counts[r.rid]
+                kind = next_block_kind(self.alloc, c["act_blocks"], c["kv_blocks"])
+                store[bi] = (kind == "act")
+                blk = self.blockman.append_token(
+                    r.rid, BlockType.ACT if store[bi] else BlockType.KV)
+                counts[r.rid] = self.blockman.counts(r.rid)
+            lg, cache = self._decode_jit(jnp.asarray(cur[:, None]), cache,
+                                         jnp.asarray(store))
+            cur = np.asarray(jnp.argmax(lg[:, -1], -1), np.int32)
+            stats.steps += 1
+            stats.generated_tokens += B
+
+            # cost of this step on the target hardware (reporting)
+            kv_host = sum(counts[r.rid]["kv_tokens"] for r in group)
+            act_tok = sum(counts[r.rid]["act_tokens"] for r in group)
+            ctx = int(np.mean([self.blockman.context_len(r.rid) for r in group]))
+            spec = MiniBatchSpec(B, kv_host, act_tok, 0, ctx_tokens=ctx)
+            res = simulate_step(cfg, self.hw, [spec])
+            stats.sim_time += res.total
+            stats.sim_gpu_busy += res.gpu_busy
+            for k, v in res.traffic.items():
+                stats.traffic[k] = stats.traffic.get(k, 0.0) + v
+
+        out = {}
+        for bi, r in enumerate(group):
+            out[r.rid] = gen[bi, : r.max_new_tokens]
+            self.blockman.free_request(r.rid)
+        return out, stats
+
+
+def exact_reference_generate(cfg, params, requests: List[Request]) -> Dict[int, np.ndarray]:
+    """Oracle: plain full-KV incremental decode, one request at a time."""
+    out = {}
+    for r in requests:
+        plen = len(r.prompt)
+        pb = _bucket(plen)
+        toks = np.zeros((1, pb), np.int32)
+        toks[0, :plen] = r.prompt
+        toks[0, plen:] = r.prompt[-1]
+        lg, cache = M.prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                              max_len=pb + r.max_new_tokens + 8)
+        cur = int(np.asarray(jnp.argmax(lg[:, -1], -1))[0])
+        gen = []
+        for _ in range(r.max_new_tokens):
+            gen.append(cur)
+            lg, cache = M.decode_step(params, cfg, jnp.asarray([[cur]], jnp.int32), cache)
+            cur = int(np.asarray(jnp.argmax(lg[:, -1], -1))[0])
+        out[r.rid] = np.asarray(gen, np.int32)
+    return out

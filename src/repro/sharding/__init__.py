@@ -1,0 +1,2 @@
+from repro.sharding.rules import (batch_axes, batch_specs, cache_specs,
+                                  explain, param_spec, params_specs)

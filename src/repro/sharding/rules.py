@@ -1,0 +1,222 @@
+"""PartitionSpec rules for every architecture family and step kind.
+
+Strategy (DESIGN.md §6):
+  serve  — tensor parallel on 'model' (heads / ff / experts / vocab),
+           batch on 'data' (x 'pod'); batch=1 long-context decodes get
+           sequence-sharded caches instead (context-parallel decode).
+  train  — the serve TP specs + FSDP: the largest replicated weight dim is
+           additionally sharded over ('pod','data') when divisible, which the
+           optimizer state inherits (ZeRO-3 falls out of the pjit specs).
+
+A dim is sharded over an axis only when its size divides evenly; otherwise it
+stays replicated (whisper's 8 heads on a 16-way model axis, grok's 8 experts,
+...).  All decisions are recorded by `explain()` for the dry-run log.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axis):
+    return axis if axis is not None and _fits(dim, mesh, axis) else None
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh, *, fsdp=None) -> P:
+    """Spec for one parameter leaf; `path` is the key path in the tree."""
+    name = path[-1]
+    tp = "model"
+
+    def spec_for(dims_rules):
+        """dims_rules: list of preferred axis per trailing dim (None = repl)."""
+        n_lead = len(shape) - len(dims_rules)
+        out = [None] * n_lead
+        used = set()
+        for d, ax in zip(shape[n_lead:], dims_rules):
+            ax = _maybe(d, mesh, ax)
+            if ax in used:
+                ax = None
+            if ax is not None:
+                used.add(ax)
+            out.append(ax)
+        return P(*out)
+
+    if name in ("embed",):
+        return spec_for([tp, fsdp])
+    if name in ("unembed",):
+        return spec_for([fsdp, tp])
+    if name in ("pos_embed", "enc_pos"):
+        return spec_for([None, _maybe(shape[-1], mesh, tp)])
+    if name in ("scale", "bias", "qnorm", "knorm", "A_log", "D", "dt_bias", "norm"):
+        return P(*([None] * len(shape)))
+    if name == "wq":
+        return spec_for([fsdp, tp])
+    if name in ("wk", "wv"):
+        return spec_for([fsdp, tp])
+    if name == "wo":
+        return spec_for([tp, fsdp])
+    if name in ("w1", "w3"):
+        return spec_for([fsdp, tp])
+    if name == "w2":
+        return spec_for([tp, fsdp])
+    if name == "router":
+        return spec_for([fsdp, None])
+    if name in ("we1", "we3"):
+        # expert-parallel when E divides the model axis, else TP on d_ff
+        if _fits(shape[-3], mesh, tp):
+            return spec_for([tp, fsdp, None])
+        return spec_for([None, fsdp, tp])
+    if name == "we2":
+        if _fits(shape[-3], mesh, tp):
+            return spec_for([tp, None, fsdp])
+        return spec_for([None, tp, fsdp])
+    if name == "in_proj":
+        return spec_for([fsdp, tp])
+    if name == "conv_w":
+        return spec_for([tp, None])
+    if name == "out_proj":
+        return spec_for([tp, fsdp])
+    # fallback: replicate
+    return P(*([None] * len(shape)))
+
+
+def params_specs(cfg: ModelConfig, params_shape, mesh: Mesh, *, train: bool,
+                 weights_2d: bool = False):
+    """Tree of PartitionSpec matching the param tree (from eval_shape).
+
+    ``weights_2d`` (serve mode): additionally shard the non-TP weight dim over
+    'data' — 2D tensor parallelism.  Decode activations are tiny, so XLA
+    resolves the d-sharded contractions with partial sums + psum instead of
+    gathering weights; per-device weight residency drops by the data-axis
+    factor (§Perf iteration 1).
+    """
+    fsdp = None
+    if train or weights_2d:
+        fsdp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def walk(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        return param_spec(keys, tuple(leaf.shape), cfg, mesh, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(walk, params_shape)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    return str(k)
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    """Specs for the input batch dict (tokens/labels/frames/patches)."""
+    bx = batch_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        B = v.shape[0]
+        ax = bx if _fits(B, mesh, bx) else (
+            "data" if _fits(B, mesh, "data") else None)
+        out[k] = P(ax, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    """Decode-cache specs.
+
+    Batch dim shards over data (x pod); KV-head dim over 'model' when it
+    divides.  batch=1 long-context: the SEQUENCE dim of attention caches
+    shards over 'data' instead (context-parallel decode) — the attention
+    reductions over S then lower to psums.
+    """
+    bx = batch_axes(mesh)
+    tp = "model"
+    out = {}
+    for k, v in cache_shape.items():
+        shp = tuple(v.shape)
+        if k == "kv_len":
+            out[k] = P(_maybe(shp[0], mesh, bx))
+            continue
+        if k in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
+                 "global_k", "global_v", "attn_k", "attn_v"):
+            # (L?, B, S, KVH, D) — layer-stacked leading dim
+            L, B, S, KVH, D = shp
+            b_ax = _maybe(B, mesh, bx) or _maybe(B, mesh, "data")
+            kv_ax = _maybe(KVH, mesh, tp)
+            # sequence axis picks up whatever is left idle:
+            #  - batch=1 long-context: 'data' (context-parallel decode)
+            #  - kv heads too few for the model axis: 'model' (§Perf iter. 1)
+            s_axes = []
+            if b_ax is None:
+                s_axes.append("data")
+            if kv_ax is None:
+                s_axes.append(tp)
+            s_ax = tuple(s_axes) if len(s_axes) > 1 else (s_axes[0] if s_axes else None)
+            if s_ax is not None and not _fits(S, mesh, s_ax):
+                s_ax = None
+            out[k] = P(None, b_ax, s_ax, kv_ax, None)
+        elif k in ("local_k", "local_v", "tail_k", "tail_v"):
+            # (n, per, B, W, KVH, D) or (n, B, W, KVH, D)
+            B_idx = len(shp) - 4
+            b_ax = _maybe(shp[B_idx], mesh, bx) or _maybe(shp[B_idx], mesh, "data")
+            spec = [None] * len(shp)
+            spec[B_idx] = b_ax
+            spec[-2] = _maybe(shp[-2], mesh, tp)
+            out[k] = P(*spec)
+        elif k == "state":
+            # (L, B, H, Pd, N) or (n_per, n_ssd, B, H, Pd, N)
+            B_idx = len(shp) - 4
+            spec = [None] * len(shp)
+            spec[B_idx] = _maybe(shp[B_idx], mesh, bx) or _maybe(shp[B_idx], mesh, "data")
+            spec[-3] = _maybe(shp[-3], mesh, tp)    # SSD heads
+            out[k] = P(*spec)
+        elif k == "conv":
+            B_idx = len(shp) - 3
+            spec = [None] * len(shp)
+            spec[B_idx] = _maybe(shp[B_idx], mesh, bx) or _maybe(shp[B_idx], mesh, "data")
+            spec[-1] = _maybe(shp[-1], mesh, tp)    # conv channels
+            out[k] = P(*spec)
+        elif k in ("act",):
+            # ACT checkpoints: d_model shards over 'model' (KV-gen contracts
+            # over it -> psum); batch over data (§Perf iteration 5)
+            L, B, S, D = shp
+            b_ax = _maybe(B, mesh, bx) or _maybe(B, mesh, "data")
+            s_ax = "data" if (b_ax is None and _fits(S, mesh, "data")) else None
+            out[k] = P(None, b_ax, s_ax, _maybe(D, mesh, tp))
+        elif k in ("act_pos", "act_len"):
+            out[k] = P(_maybe(shp[0], mesh, bx))
+        else:
+            out[k] = P(*([None] * len(shp)))
+    return out
+
+
+def explain(cfg: ModelConfig, specs_tree) -> str:
+    lines = []
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+            specs_tree, is_leaf=lambda x: isinstance(x, P))[0]:
+        key = "/".join(_key_str(k) for k in path)
+        lines.append(f"  {key:60s} {spec}")
+    return "\n".join(lines)

@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests run on the single CPU device (smoke scale).  The 512-device forcing
+# happens ONLY inside launch/dryrun.py, never here.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    np.set_printoptions(precision=4, suppress=True)

@@ -1,0 +1,78 @@
+"""BlockManager: two-tier, two-type physical pools + block tables."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.blocks import (BLOCK_TOKENS, BlockManager, BlockType, Location,
+                               act_block_bytes, kv_block_bytes)
+
+CFG = get_config("opt-6.7b-reduced")
+
+
+def make_bm(**kw):
+    d = dict(host_kv_blocks=8, host_act_blocks=8, dev_kv_blocks=2, dev_act_blocks=4)
+    d.update(kw)
+    return BlockManager(CFG, **d)
+
+
+def test_block_sizes():
+    cfg = get_config("opt-6.7b")
+    assert act_block_bytes(cfg) * 2 == kv_block_bytes(cfg)   # MHA: ACT = KV/2
+    gqa = get_config("yi-6b")
+    assert act_block_bytes(gqa) > kv_block_bytes(gqa)        # GQA flips it
+
+
+def test_append_and_counts():
+    bm = make_bm()
+    bm.new_request(0)
+    for i in range(BLOCK_TOKENS + 1):
+        assert bm.append_token(0, BlockType.KV) is not None
+    c = bm.counts(0)
+    assert c["kv_blocks"] == 2 and c["kv_tokens"] == BLOCK_TOKENS + 1
+    assert bm.context_len(0) == BLOCK_TOKENS + 1
+
+
+def test_act_prefers_device():
+    bm = make_bm()
+    bm.new_request(1)
+    blk = bm.append_token(1, BlockType.ACT)
+    assert blk.location == Location.DEVICE
+    # exhaust device pool -> spills to host
+    for _ in range(4 * BLOCK_TOKENS):
+        blk = bm.append_token(1, BlockType.ACT)
+    assert blk.location == Location.HOST
+
+
+def test_kv_prefers_host():
+    bm = make_bm()
+    bm.new_request(2)
+    assert bm.append_token(2, BlockType.KV).location == Location.HOST
+
+
+def test_oom_returns_none():
+    bm = make_bm(host_kv_blocks=1, dev_kv_blocks=0)
+    bm.new_request(3)
+    for _ in range(BLOCK_TOKENS):
+        assert bm.append_token(3, BlockType.KV) is not None
+    assert bm.append_token(3, BlockType.KV) is None
+
+
+def test_free_request_recycles():
+    bm = make_bm(host_kv_blocks=1, dev_kv_blocks=0)
+    bm.new_request(4)
+    for _ in range(BLOCK_TOKENS):
+        bm.append_token(4, BlockType.KV)
+    bm.free_request(4)
+    bm.new_request(5)
+    assert bm.append_token(5, BlockType.KV) is not None
+
+
+def test_host_bytes_accounting():
+    bm = make_bm(dev_act_blocks=0)
+    bm.new_request(6)
+    for _ in range(BLOCK_TOKENS):
+        bm.append_token(6, BlockType.KV)
+    for _ in range(BLOCK_TOKENS):
+        bm.append_token(6, BlockType.ACT)
+    kv_b, act_b = bm.host_bytes_to_load(6)
+    assert kv_b == BLOCK_TOKENS * CFG.kv_bytes_per_token() * CFG.num_layers
+    assert act_b == BLOCK_TOKENS * CFG.act_bytes_per_token() * CFG.num_layers

@@ -1,0 +1,82 @@
+"""Config registry: exact assigned hyperparameters + reduced-variant rules."""
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES, applicable, get_config, reduced
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+    "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+}
+
+PARAM_TARGETS = {  # billions, generous tolerance (analytic count)
+    "gemma3-27b": (27.0, 0.15), "grok-1-314b": (314, 0.1), "yi-6b": (6.1, 0.1),
+    "dbrx-132b": (132, 0.1), "jamba-1.5-large-398b": (398, 0.12),
+    "minitron-4b": (4.2, 0.15), "mamba2-2.7b": (2.7, 0.15),
+    "gemma3-1b": (1.0, 0.2), "qwen2-vl-2b": (1.5, 0.2),
+}
+
+
+@pytest.mark.parametrize("name", list(EXPECTED))
+def test_assigned_hparams(name):
+    cfg = get_config(name)
+    L, d, h, kv, f, v = EXPECTED[name]
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, f, v)
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("name", list(PARAM_TARGETS))
+def test_param_counts(name):
+    target, tol = PARAM_TARGETS[name]
+    n = get_config(name).num_params() / 1e9
+    assert abs(n - target) / target < tol, f"{name}: {n:.1f}B vs {target}B"
+
+
+def test_moe_active_params():
+    grok = get_config("grok-1-314b")
+    assert grok.active_params() < 0.35 * grok.num_params()
+
+
+@pytest.mark.parametrize("name", list(ASSIGNED))
+def test_reduced_constraints(name):
+    cfg = get_config(name + "-reduced")
+    assert cfg.d_model <= 512
+    assert cfg.num_layers <= max(2, cfg.attn_period)
+    assert cfg.moe_num_experts <= 4
+    # GQA structure preserved
+    full = get_config(name)
+    if full.num_kv_heads:
+        assert cfg.num_heads % cfg.num_kv_heads == 0
+
+
+def test_shapes_and_skips():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert applicable("mamba2-2.7b", SHAPES["long_500k"])
+    assert applicable("gemma3-27b", SHAPES["long_500k"])
+    assert not applicable("yi-6b", SHAPES["long_500k"])       # pure full attn
+    assert not applicable("whisper-base", SHAPES["long_500k"])
+    assert applicable("yi-6b", SHAPES["decode_32k"])
+
+
+def test_registry_lookup_errors():
+    with pytest.raises(KeyError):
+        get_config("nonexistent-model")
+
+
+def test_layer_patterns():
+    g = get_config("gemma3-27b")
+    kinds = g.layer_is_global()
+    assert sum(kinds) == 10 and len(kinds) == 62   # 5:1 local:global
+    j = get_config("jamba-1.5-large-398b")
+    lk = j.layer_kinds()
+    assert lk.count("attn") == 9 and lk.count("ssd") == 63  # 1:7 interleave
+    assert sum(j.layer_is_moe()) == 36             # MoE every 2 layers

@@ -1,0 +1,64 @@
+"""Property tests: cost model & pipeline timeline invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.pipeline import LaneTask, MiniBatchSpec, run_timeline, simulate_step
+
+CFG = get_config("opt-13b")
+HW = cm.RTX4090
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 20), seed=st.integers(0, 999))
+def test_timeline_respects_dependencies(n, seed):
+    rng = np.random.default_rng(seed)
+    tasks, deps = [], []
+    for i in range(n):
+        d = tuple(rng.choice(i, size=min(i, int(rng.integers(0, 3))),
+                             replace=False)) if i else ()
+        tasks.append(LaneTask(lane=rng.choice(["pcie", "gpu", "pcie_up"]),
+                              dur=float(rng.uniform(0.001, 1.0)), deps=d))
+        deps.append(d)
+    res = run_timeline(tasks)
+    starts = [res.finish[i] - tasks[i].dur for i in range(n)]
+    for i, d in enumerate(deps):
+        for j in d:
+            assert starts[i] >= res.finish[j] - 1e-9        # dep ordering
+    # lane serialization: same-lane tasks never overlap
+    for lane in ("pcie", "gpu", "pcie_up"):
+        iv = sorted((starts[i], res.finish[i]) for i in range(n)
+                    if tasks[i].lane == lane)
+        for (s1, e1), (s2, e2) in zip(iv, iv[1:]):
+            assert s2 >= e1 - 1e-9
+    assert res.total == pytest.approx(max(res.finish), abs=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(kv=st.integers(0, 50_000), act=st.integers(0, 50_000),
+       nreq=st.integers(1, 64))
+def test_step_monotone_in_tokens(kv, act, nreq):
+    """More host tokens never make the step faster."""
+    base = simulate_step(CFG, HW, [MiniBatchSpec(nreq, kv, act, 0,
+                                                 ctx_tokens=1024)])
+    more = simulate_step(CFG, HW, [MiniBatchSpec(nreq, kv + 1000, act + 1000, 0,
+                                                 ctx_tokens=1024)])
+    assert more.total >= base.total - 1e-9
+    assert more.traffic["kv_load"] >= base.traffic["kv_load"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(100, 100_000))
+def test_cost_fns_linear_and_positive(n):
+    t_gen, t_kv, t_act = cm.make_cost_fns(CFG, HW)
+    assert t_gen(n) > 0 and t_kv(n) > 0 and t_act(n) > 0
+    assert t_gen(2 * n) == pytest.approx(2 * t_gen(n))
+    # MHA: ACT loads exactly half the bytes of KV
+    assert t_act(n) == pytest.approx(t_kv(n) / 2)
+
+
+def test_gqa_act_costlier_than_kv():
+    t_gen, t_kv, t_act = cm.make_cost_fns(get_config("yi-6b"), HW)
+    assert t_act(1000) > t_kv(1000)        # r = 4.0: ACT loads cost MORE

@@ -1,0 +1,200 @@
+"""Layer primitives: attention (fwd+custom VJP), MoE dispatch, SSD, conv."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, S, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k.astype(jnp.float32)) / np.sqrt(D)
+    i = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window:
+        mask &= i[None, :] > i[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+@pytest.mark.parametrize("causal,window,qc,kc", [
+    (True, 0, 32, 32), (True, 24, 16, 16), (False, 0, 64, 32),
+    (True, 0, 128, 128),   # chunk > seq
+])
+def test_blockwise_attention_forward(causal, window, qc, kc):
+    rng = jax.random.PRNGKey(0)
+    B, S, H, KVH, D = 2, 80, 4, 2, 16
+    q = jax.random.normal(rng, (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, D))
+    o1 = L.blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=qc, k_chunk=kc)
+    o2 = naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_blockwise_attention_grad():
+    rng = jax.random.PRNGKey(3)
+    B, S, H, KVH, D = 2, 64, 4, 2, 8
+    q = jax.random.normal(rng, (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, S, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, KVH, D))
+    w = jnp.arange(D, dtype=jnp.float32)
+    f1 = lambda *a: (L.blockwise_attention(*a, q_chunk=16, k_chunk=16)
+                     .astype(jnp.float32) * w).sum()
+    f2 = lambda *a: (naive_attention(*a).astype(jnp.float32) * w).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_decode_attention_matches_full():
+    rng = jax.random.PRNGKey(6)
+    B, S, H, KVH, D = 3, 40, 4, 4, 16
+    q = jax.random.normal(rng, (B, 1, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(7), (B, S, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(8), (B, S, KVH, D))
+    kv_len = jnp.array([S, S - 5, 8])
+    o = L.decode_attention(q, k, v, kv_len=kv_len)
+    for b in range(B):
+        n = int(kv_len[b])
+        ref = naive_attention(
+            jnp.concatenate([jnp.zeros((1, n - 1, H, D), q.dtype), q[b:b+1]], 1),
+            k[b:b+1, :n], v[b:b+1, :n], causal=True)[:, -1:]
+        np.testing.assert_allclose(np.asarray(o[b:b+1]), np.asarray(ref), atol=2e-5)
+
+
+def test_mrope_degenerates_to_rope():
+    pos = jnp.arange(12)[None]                     # (1, 12)
+    pos3 = jnp.broadcast_to(pos[..., None], (1, 12, 3))
+    s1, c1 = L.rope_sin_cos(pos, 32, 1e4)
+    s3, c3 = L.mrope_sin_cos(pos3, 32, 1e4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s3), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c3), atol=1e-6)
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 8, 4, 32))
+    sin, cos = L.rope_sin_cos(jnp.arange(8)[None].repeat(2, 0), 32, 1e4)
+    y = L.apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(8, 64), E=st.sampled_from([2, 4, 8]),
+       k=st.integers(1, 2), seed=st.integers(0, 10_000))
+def test_moe_dispatch_properties(T, E, k, seed):
+    """Property: with ample capacity, MoE == exact dense top-k mixture."""
+    d, f = 16, 32
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (T, d))
+    keys = jax.random.split(rng, 4)
+    params = {
+        "router": jax.random.normal(keys[0], (d, E)),
+        "we1": jax.random.normal(keys[1], (E, d, f)) * 0.1,
+        "we2": jax.random.normal(keys[2], (E, f, d)) * 0.1,
+        "we3": jax.random.normal(keys[3], (E, d, f)) * 0.1,
+    }
+    y, aux = L.moe_ffn(params, x, num_experts=E, top_k=k,
+                       capacity_factor=float(E), ffn_type="gated_silu")
+    # dense reference
+    probs = jax.nn.softmax(x @ params["router"], -1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for e in range(E):
+        h = jax.nn.silu(x @ params["we1"][e]) * (x @ params["we3"][e])
+        out_e = h @ params["we2"][e]
+        for j in range(k):
+            ref += jnp.where((idx[:, j] == e)[:, None], gate[:, j:j+1] * out_e, 0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4)
+    # Switch-style load-balance loss: >= ~1 holds only for top-1 routing
+    # (for k>1 the dispatch fractions spread over k slots and the bound
+    # loosens — found by hypothesis at E=4, k=2)
+    if k == 1:
+        assert float(aux) >= 0.99
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity < demand some tokens are dropped, never corrupted.
+    (T large enough that the per-group capacity floor C>=8 still binds.)"""
+    T, E, d, f = 1024, 2, 8, 16
+    rng = jax.random.PRNGKey(1)
+    x = jax.random.normal(rng, (T, d))
+    params = {
+        "router": jnp.stack([jnp.ones(d), -jnp.ones(d)], 1),  # all to expert 0
+        "we1": jnp.ones((E, d, f)) * 0.01,
+        "we2": jnp.ones((E, f, d)) * 0.01,
+        "we3": jnp.ones((E, d, f)) * 0.01,
+    }
+    y, _ = L.moe_ffn(params, x, num_experts=E, top_k=1,
+                     capacity_factor=0.25, ffn_type="gated_silu")
+    assert np.isfinite(np.asarray(y)).all()
+    # dropped tokens produce zero output rows
+    zero_rows = (np.abs(np.asarray(y)).sum(-1) < 1e-9).sum()
+    assert zero_rows > 0
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [(2, 48, 2, 8, 16, 16), (1, 64, 3, 16, 32, 32)])
+def test_ssd_chunked_vs_sequential(b, s, h, p, n, chunk):
+    from repro.kernels.ssd_scan.ref import ssd_ref_sequential
+    rng = lambda i: jax.random.PRNGKey(i)
+    x = jax.random.normal(rng(0), (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(rng(1), (b, s, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(rng(2), (h,)) * 0.3)
+    B = jax.random.normal(rng(3), (b, s, n)) * 0.3
+    C = jax.random.normal(rng(4), (b, s, n)) * 0.3
+    y1, _ = L.ssd_chunked(x, dt, A, B[:, :, None], C[:, :, None], chunk=chunk)
+    y2 = ssd_ref_sequential(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-3)
+
+
+def test_ssd_decode_step_matches_chunked():
+    b, s, h, p, n = 2, 17, 2, 8, 16
+    rng = lambda i: jax.random.PRNGKey(i)
+    x = jax.random.normal(rng(0), (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(rng(1), (b, s, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(rng(2), (h,)) * 0.3)
+    B = jax.random.normal(rng(3), (b, s, n)) * 0.3
+    C = jax.random.normal(rng(4), (b, s, n)) * 0.3
+    # full pass over s-1, then one decode step == full pass over s
+    y_full, _ = L.ssd_chunked(x, dt, A, B[:, :, None], C[:, :, None], chunk=8)
+    _, state = L.ssd_chunked(x[:, :-1], dt[:, :-1], A, B[:, :-1, None],
+                             C[:, :-1, None], chunk=8)
+    y_t, _ = L.ssd_decode_step(state, x[:, -1], dt[:, -1], A, B[:, -1:, :][:, 0][:, None, :].reshape(b, 1, n), C[:, -1].reshape(b, 1, n))
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, -1]), atol=1e-3)
+
+
+def test_causal_conv_streaming():
+    b, s, ch, w = 2, 12, 6, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, ch))
+    wgt = jax.random.normal(jax.random.PRNGKey(1), (ch, w))
+    y_full, _ = L.causal_conv1d(x, wgt)
+    cache = jnp.zeros((b, w - 1, ch))
+    ys = []
+    for t in range(s):
+        yt, cache = L.causal_conv1d(x[:, t:t+1], wgt, cache)
+        ys.append(yt)
+    y_inc = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_inc), atol=1e-5)
+
+
+def test_norms():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 3 + 1
+    y = L.rms_norm(x, jnp.zeros(16))
+    rms = np.sqrt((np.asarray(y) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+    z = L.layer_norm(x, jnp.ones(16), jnp.zeros(16))
+    np.testing.assert_allclose(np.asarray(z).mean(-1), 0.0, atol=1e-5)
