@@ -1,13 +1,28 @@
 """Kernel micro-bench: wall-clock of the pure-jnp oracle vs the Pallas
 interpreter on CPU.  Interpreter timings are NOT TPU performance — this
 exists to (a) exercise the kernels end-to-end and (b) report the analytic
-MXU-time estimate for the target chip."""
+MXU-time estimate for the target chip.
+
+Emits ``BENCH_kernels.json`` (cwd) so the perf trajectory — hybrid-attention
+page-grid behaviour and the engine's host<->device sync count per request —
+is tracked across PRs.
+"""
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import CHIP_FLOPS, emit
+
+RECORDS = []
+
+
+def _emit(name, us_per_call, derived="", **extra):
+    emit(name, us_per_call, derived)
+    RECORDS.append(dict(name=name, us_per_call=us_per_call, derived=derived,
+                        **extra))
 
 
 def _time(f, *args, reps=3):
@@ -19,7 +34,7 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run():
+def _bench_kv_gen():
     from repro.kernels.kv_gen.kernel import kv_gen
     from repro.kernels.kv_gen.ref import kv_gen_ref
     d, kvh, hd, n = 512, 4, 128, 8
@@ -30,9 +45,11 @@ def run():
     us_ref = _time(lambda *a: kv_gen_ref(*a), act, sc, wk, wv)
     flops = 2 * n * 16 * d * 2 * kvh * hd
     tpu_us = flops / CHIP_FLOPS * 1e6
-    emit("kernel.kv_gen.ref_cpu", us_ref,
-         f"analytic_tpu_v5e={tpu_us:.3f}us_per_call flops={flops:.2e}")
+    _emit("kernel.kv_gen.ref_cpu", us_ref,
+          f"analytic_tpu_v5e={tpu_us:.3f}us_per_call flops={flops:.2e}")
 
+
+def _bench_ssd():
     from repro.kernels.ssd_scan.kernel import ssd_scan
     from repro.kernels.ssd_scan.ref import ssd_ref_chunked
     b, s, h, p, nn, c = 1, 256, 4, 32, 64, 32
@@ -43,6 +60,109 @@ def run():
     C = jax.random.normal(jax.random.PRNGKey(7), (b, s, nn)) * 0.3
     us_ref = _time(lambda *a: ssd_ref_chunked(*a, chunk=c), x, dt, A, B, C)
     us_ker = _time(lambda *a: ssd_scan(*a, chunk=c), x, dt, A, B, C)
-    emit("kernel.ssd_scan.ref_cpu", us_ref, "pure-jnp chunked")
-    emit("kernel.ssd_scan.interp_cpu", us_ker,
-         "pallas interpreter (correctness mode, not perf)")
+    _emit("kernel.ssd_scan.ref_cpu", us_ref, "pure-jnp chunked")
+    _emit("kernel.ssd_scan.interp_cpu", us_ker,
+          "pallas interpreter (correctness mode, not perf)")
+
+
+def _hybrid_tables(kind, B, MAXP, used, rng):
+    """Page tables for the two decode regimes the kernel must not waste grid
+    iterations on: mostly-empty tables (long MAXP, short requests) and
+    ACT-heavy tables (deep into a hybrid-cached generation)."""
+    pt = np.zeros((B, MAXP), np.int32)
+    pty = np.full((B, MAXP), 2, np.int32)
+    pn = np.zeros((B, MAXP), np.int32)
+    n_kv = n_act = 0
+    for b in range(B):
+        slots = sorted(rng.choice(MAXP, size=used, replace=False))
+        for j, p in enumerate(slots):
+            is_act = (j % 4 != 3) if kind == "act_heavy" else (j % 4 == 3)
+            pty[b, p] = 1 if is_act else 0
+            if is_act:
+                pt[b, p] = n_act % 8
+                n_act += 1
+            else:
+                pt[b, p] = n_kv % 8
+                n_kv += 1
+            pn[b, p] = 16 if j < used - 1 else int(rng.integers(1, 17))
+    return jnp.asarray(pt), jnp.asarray(pty), jnp.asarray(pn)
+
+
+def _bench_hybrid_attention():
+    from repro.kernels.hybrid_attention.kernel import hybrid_paged_attention
+    from repro.kernels.hybrid_attention.ref import hybrid_paged_attention_ref
+    B, kvh, G, D, T, d_model = 4, 2, 4, 64, 16, 256
+    rng = np.random.default_rng(0)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, kvh, G, D))
+    ks = jax.random.normal(jax.random.PRNGKey(1), (8, T, kvh, D)) * 0.3
+    vs = jax.random.normal(jax.random.PRNGKey(2), (8, T, kvh, D)) * 0.3
+    ap = jax.random.normal(jax.random.PRNGKey(3), (8, T, d_model)) * 0.5
+    sc = jnp.ones((d_model,))
+    wk = jax.random.normal(jax.random.PRNGKey(4), (d_model, kvh, D)) * 0.05
+    wv = jax.random.normal(jax.random.PRNGKey(5), (d_model, kvh, D)) * 0.05
+
+    for kind, MAXP, used in (("empty_heavy", 48, 6), ("act_heavy", 12, 10)):
+        pt, pty, pn = _hybrid_tables(kind, B, MAXP, used, rng)
+        args = (q, ks, vs, ap, sc, wk, wv, pt, pty, pn)
+        us_full = _time(lambda *a: hybrid_paged_attention(
+            *a, norm_type="layernorm"), *args, reps=2)
+        us_bound = _time(lambda *a: hybrid_paged_attention(
+            *a, norm_type="layernorm", pages_bound=used), *args, reps=2)
+        us_ref = _time(lambda *a: hybrid_paged_attention_ref(
+            *a, norm_type="layernorm"), *args, reps=2)
+        # analytic TPU estimate: QK^T+PV over used pages + one Eq.7
+        # projection per ACT page (norm hoisted: counted once per page)
+        n_act_pages = int((np.asarray(pty) == 1).sum())
+        attn_flops = 2 * 2 * B * used * T * kvh * G * D
+        gen_flops = 2 * n_act_pages * T * d_model * 2 * kvh * D
+        tpu_us = (attn_flops + gen_flops) / CHIP_FLOPS * 1e6
+        _emit(f"kernel.hybrid_attention.{kind}.interp_cpu", us_full,
+              f"grid=(B,{MAXP},{kvh}) used={used}", maxp=MAXP, used=used)
+        _emit(f"kernel.hybrid_attention.{kind}.interp_cpu_bound", us_bound,
+              f"grid=(B,{used},{kvh}) pages_bound={used} "
+              f"analytic_tpu_v5e={tpu_us:.3f}us", maxp=MAXP, used=used,
+              grid_iters_full=B * MAXP * kvh, grid_iters_bound=B * used * kvh)
+        _emit(f"kernel.hybrid_attention.{kind}.ref_cpu", us_ref, "pure-jnp")
+
+
+def _bench_engine_syncs():
+    """Host<->device round trips per request: the scan-based engine does ONE
+    batched prefill + ONE decode-loop dispatch per group, vs (B prefills +
+    max_new decode steps + max_new argmax pulls) for the seed's per-token
+    loop — the Fig. 12 hot-path overhead the tentpole removes."""
+    from repro.configs import get_config
+    from repro.data import request_trace
+    from repro.models import model as M
+    from repro.serving import HybridServeEngine
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    gen_tokens, n_req = 12, 4
+    reqs = request_trace(cfg.vocab_size, n_req, prompt_mean=40,
+                         gen_tokens=gen_tokens, seed=3)
+    eng = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=4,
+                            kv_cap=128, act_cap=128)
+    n_groups = len(eng.plan_groups(reqs))    # independent of measured stats
+    out, stats = eng.generate(reqs)          # compile
+    t0 = time.perf_counter()
+    out, stats = eng.generate(reqs)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    # seed engine: one prefill per request + one decode dispatch per token
+    # per group; the scan engine does 2 dispatches per group
+    seed_calls = n_req + n_groups * gen_tokens
+    ratio = seed_calls / max(stats.device_calls, 1)
+    _emit("engine.decode.device_calls", float(stats.device_calls),
+          f"per_group seed_equiv={seed_calls} reduction={ratio:.1f}x "
+          f"wall={wall_us:.0f}us gen_tokens={stats.generated_tokens}",
+          seed_equiv_calls=seed_calls, reduction=ratio,
+          generated_tokens=stats.generated_tokens, wall_us=wall_us)
+
+
+def run():
+    RECORDS.clear()
+    _bench_kv_gen()
+    _bench_ssd()
+    _bench_hybrid_attention()
+    _bench_engine_syncs()
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(RECORDS, f, indent=2)
+    print("wrote BENCH_kernels.json")

@@ -8,7 +8,8 @@ from repro.core.minibatch import (MiniBatch, RequestBlocks, balance_metric,
                                   f_b, form_minibatches)
 from repro.core.pipeline import (GenerationResult, MiniBatchSpec, StepConfig,
                                  TimelineResult, simulate_generation,
-                                 simulate_step)
+                                 simulate_step, simulate_steps)
 from repro.core.policy import (HostAllocation, host_block_allocation,
                                next_block_kind, policy_act_ratio,
-                               request_block_split, device_act_blocks)
+                               request_block_split, device_act_blocks,
+                               store_act_schedule)

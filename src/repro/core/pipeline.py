@@ -103,17 +103,68 @@ class StepConfig:
     prefetch_depth: int = 2          # double buffering
 
 
+def _run_timeline_arrays(tasks: List[LaneTask], n: int):
+    """``run_timeline`` with every task duration an (n,) array — the same
+    per-lane serialisation and cross-lane dep resolution, computed for n
+    independent timelines at once.  -> (total, busy, finish), all (n,)."""
+    lane_free = {"pcie": np.zeros(n), "pcie_up": np.zeros(n), "gpu": np.zeros(n)}
+    busy = {"pcie": np.zeros(n), "pcie_up": np.zeros(n), "gpu": np.zeros(n)}
+    finish: List[np.ndarray] = [np.zeros(n)] * len(tasks)
+    for i, t in enumerate(tasks):
+        ready = np.zeros(n)
+        for d in t.deps:
+            ready = np.maximum(ready, finish[d])
+        start = np.maximum(lane_free[t.lane], ready)
+        end = start + t.dur
+        lane_free[t.lane] = end
+        busy[t.lane] = busy[t.lane] + t.dur
+        finish[i] = end
+    total = np.maximum(np.maximum(lane_free["pcie"], lane_free["pcie_up"]),
+                       lane_free["gpu"])
+    return total, busy, finish
+
+
 def simulate_step(cfg: ModelConfig, hw: cm.HardwareSpec,
                   minibatches: List[MiniBatchSpec],
                   step_cfg: StepConfig = StepConfig()) -> TimelineResult:
     """One token-generation iteration across all layers x mini-batches."""
+    return simulate_steps(cfg, hw, [minibatches], step_cfg)[0]
+
+
+def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
+                   steps: List[List[MiniBatchSpec]],
+                   step_cfg: StepConfig = StepConfig()) -> List[TimelineResult]:
+    """Vectorized ``simulate_step`` over a whole decode schedule.
+
+    All steps must share the same mini-batch count (the task graph is
+    structural); per-task durations are carried as (n_steps,) arrays so the
+    timeline recurrence runs once instead of once per generated token.  The
+    engine calls this with the precomputed store_act schedule's per-step token
+    totals; results are element-for-element identical to calling
+    ``simulate_step`` per step.
+    """
+    n = len(steps)
+    if n == 0:
+        return []
+    M = len(steps[0])
+    assert all(len(s) == M for s in steps), "steps must share minibatch count"
     eff = hw.flops * hw.mfu
     L = cfg.num_layers
     w_bytes = cm.layer_weight_bytes(cfg) * step_cfg.weight_host_frac
-    t_w = w_bytes / hw.host_link_bw
+    t_w = np.full((n,), w_bytes / hw.host_link_bw)
     kvB, actB = cfg.kv_bytes_per_token(), cfg.act_bytes_per_token()
 
-    tasks: List[LaneTask] = []
+    # (n, M) per-step spec fields
+    f = lambda attr: np.array([[getattr(mb, attr) for mb in s] for s in steps],
+                              float)
+    kv_host = f("kv_host_tokens")
+    act_host = f("act_host_tokens")
+    act_dev = f("act_dev_tokens")
+    tok_rec = f("tok_recompute_tokens")
+    n_req = f("n_requests")
+    ctx = f("ctx_tokens")
+
+    tasks: List[LaneTask] = []          # dur as (n,) arrays
     idx: Dict[Tuple, int] = {}
 
     def add(key, lane, dur, deps=(), tag=""):
@@ -121,7 +172,8 @@ def simulate_step(cfg: ModelConfig, hw: cm.HardwareSpec,
         idx[key] = len(tasks) - 1
         return idx[key]
 
-    traffic = {"weights": 0.0, "kv_load": 0.0, "act_load": 0.0, "store": 0.0}
+    traffic = {"weights": np.zeros(n), "kv_load": np.zeros(n),
+               "act_load": np.zeros(n), "store": np.zeros(n)}
 
     # task emission order = schedule order: layer-major; within a layer all
     # loads queue before compute so mini-batch m+1's transfers overlap mini-
@@ -129,44 +181,50 @@ def simulate_step(cfg: ModelConfig, hw: cm.HardwareSpec,
     # upstream direction and never block loads.
     for l in range(L):
         # weight prefetch for layer l (double buffered against l-depth fwd)
-        dep = [("fwd", l - step_cfg.prefetch_depth, len(minibatches) - 1)]
+        dep = [("fwd", l - step_cfg.prefetch_depth, M - 1)]
         add(("w", l), "pcie", t_w, deps=dep, tag="w")
         traffic["weights"] += w_bytes
         kv_bw = hw.host_link_bw * hw.gather_eff     # scattered page gathers
-        for m, mb in enumerate(minibatches):
-            kv_bytes = mb.kv_host_tokens * kvB
-            act_bytes = mb.act_host_tokens * actB
+        for m in range(M):
+            kv_bytes = kv_host[:, m] * kvB
+            act_bytes = act_host[:, m] * actB
             add(("kv", l, m), "pcie", kv_bytes / kv_bw,
                 deps=[("fwd", l - step_cfg.prefetch_depth, m)], tag="kv")
             add(("act", l, m), "pcie", act_bytes / kv_bw,
                 deps=[("fwd", l - step_cfg.prefetch_depth, m)], tag="act")
             traffic["kv_load"] += kv_bytes
             traffic["act_load"] += act_bytes
-        for m, mb in enumerate(minibatches):
+        for m in range(M):
             # GPU: KV-gen for ACT tokens (Eq. 7) ... or full-layer forward for
             # token-ID recomputation
-            act_tokens = mb.act_host_tokens + mb.act_dev_tokens
+            act_tokens = act_host[:, m] + act_dev[:, m]
             t_gen = (act_tokens * cm.kv_gen_flops_per_token(cfg)
                      / (hw.flops * hw.gen_mfu))
-            t_gen += (mb.tok_recompute_tokens * cm.forward_flops_per_token(
-                cfg, mb.tok_recompute_tokens) / eff)
+            t_gen = t_gen + (tok_rec[:, m] * cm.forward_flops_per_token(
+                cfg, tok_rec[:, m]) / eff)
             add(("gen", l, m), "gpu", t_gen,
                 deps=[("act", l, m)], tag="gen")
 
             # GPU: forward for the new token of every request in the mb
-            fwd_flops = mb.n_requests * cm.forward_flops_per_token(cfg, mb.ctx_tokens)
+            fwd_flops = n_req[:, m] * cm.forward_flops_per_token(cfg, ctx[:, m])
             add(("fwd", l, m), "gpu", fwd_flops / eff,
                 deps=[("w", l), ("kv", l, m), ("gen", l, m)], tag="fwd")
 
             # PCIe upstream: store the new token's KV/ACT back to host
-            st_bytes = mb.n_requests * max(kvB, actB)
+            st_bytes = n_req[:, m] * max(kvB, actB)
             add(("st", l, m), "pcie_up", st_bytes / hw.host_link_bw,
                 deps=[("fwd", l, m)], tag="st")
             traffic["store"] += st_bytes
 
-    res = run_timeline(tasks)
-    res.traffic.update(traffic)
-    return res
+    total, busy, finish = _run_timeline_arrays(tasks, n)
+    return [
+        TimelineResult(
+            total=float(total[s]), pcie_busy=float(busy["pcie"][s]),
+            gpu_busy=float(busy["gpu"][s]),
+            traffic={k: float(v[s]) for k, v in traffic.items()},
+            finish=[float(fi[s]) for fi in finish])
+        for s in range(n)
+    ]
 
 
 # =============================================================================

@@ -145,3 +145,42 @@ def next_block_kind(alloc: HostAllocation, n_act: int, n_kv: int) -> str:
     r_act = (n_act + 1) / max(n_kv, 1)
     r_kv = (n_act) / (n_kv + 1)
     return "act" if abs(r_act - target) <= abs(r_kv - target) else "kv"
+
+
+def store_act_schedule(alloc: HostAllocation, act_tokens0, kv_tokens0,
+                       n_steps: int) -> np.ndarray:
+    """Precompute the per-token ``store_act`` decisions for a whole decode.
+
+    ``next_block_kind`` is deterministic given the Algorithm-1 allocation and
+    the running block counts, and block counts are a pure function of token
+    counts (a new block opens exactly when the previous block of that kind is
+    full), so the entire generation schedule is known before the first decode
+    step.  The engine feeds the resulting (B, n_steps) bool array into the
+    jitted ``lax.scan`` decode loop and replays it through the BlockManager
+    afterwards — identical accounting with zero per-token host work on the
+    hot path.
+
+    act_tokens0 / kv_tokens0: (B,) token counts right after prefill.
+    Returns (B, n_steps) bool — True where the token's checkpoint goes to the
+    ACT region (assumes block allocation never fails, as the engine does).
+    """
+    at = np.asarray(act_tokens0, np.int64).copy()
+    kt = np.asarray(kv_tokens0, np.int64).copy()
+    B = at.shape[0]
+    out = np.zeros((B, n_steps), bool)
+    if alloc.kv_blocks == 0:
+        out[:] = True
+        return out
+    if alloc.act_blocks == 0:
+        return out
+    target = alloc.ratio
+    for s in range(n_steps):                      # vectorized over B
+        ab = -(-at // BLOCK_TOKENS)               # ceil: blocks of each kind
+        kb = -(-kt // BLOCK_TOKENS)
+        r_act = (ab + 1) / np.maximum(kb, 1)
+        r_kv = ab / (kb + 1)
+        store = np.abs(r_act - target) <= np.abs(r_kv - target)
+        out[:, s] = store
+        at += store
+        kt += ~store
+    return out

@@ -9,6 +9,32 @@ online-softmax accumulator without a round trip of the recomputed K/V through
 HBM.  On a GPU the paper runs KV-Gen as a separate GEMM; on TPU the fusion
 removes 2 * T * kv_dim bytes of HBM traffic per page.
 
+Page-blocked grid (DESIGN.md §7.4): page tables are COMPACTED before launch —
+``argsort(page_type == 2)`` moves every used page of a request to the front,
+and the per-request used-page count rides the scalar-prefetch channel.  The
+grid is (B, PB, KVH) with the KV-head dimension innermost so that
+
+  * iterations past a request's used-page count skip all compute AND clamp
+    EVERY coordinate of their block index maps (page -> physical 0, head
+    -> 0) — after compaction the dead tail is contiguous, so from the second
+    dead iteration on no index changes and Pallas elides the copies (at most
+    one page-0 DMA per operand per request is wasted), and
+  * an ACT page is loaded + normed ONCE per (request, page) into VMEM scratch
+    and re-projected per KV head from there, instead of re-loading and
+    re-norming it KVH times as the (B, KVH, MAXP) grid did.
+
+A static ``pages_bound`` (the scheduler knows the longest request's page
+count) shrinks the grid itself below MAXP.
+
+Trade-off of the h-innermost order: the per-head wk/wv slices (d_model, D)
+re-stream once per LIVE page instead of once per head, while ACT pages
+(T, d_model) stream once per page instead of once per head.  That wins for
+ACT-heavy tables with few KV heads (GQA) and for every dead iteration; for
+MHA models with many KV heads over KV-heavy tables the weight restreaming
+dominates and the (B, KVH, pages) order is preferable — keeping the per-head
+weights resident in VMEM via manual DMA would remove the trade-off entirely
+and is listed as future work (DESIGN.md §7.5).
+
 Layout:
   q            (B, KVH, G, D)    one query token per request (GQA grouped)
   k/v_pages    (P_kv, T, KVH, D) physical KV page pools (post-positional)
@@ -16,10 +42,9 @@ Layout:
   page_table   (B, MAXP) int32   physical index into the type's pool
   page_type    (B, MAXP) int32   0 = KV page, 1 = ACT page, 2 = empty
   page_ntok    (B, MAXP) int32   valid tokens in page
-Grid (B, KVH, MAXP); the page dimension accumulates online-softmax state in
-VMEM scratch.  Positions are assumed already applied to q and k_pages
-(learned-positional models — OPT — need nothing for ACT pages; RoPE models use
-the ops.py XLA path, see DESIGN.md).
+Positions are assumed already applied to q and k_pages (learned-positional
+models — OPT — need nothing for ACT pages; RoPE models use the ops.py XLA
+path, see DESIGN.md §7.5).
 """
 from __future__ import annotations
 
@@ -37,19 +62,20 @@ NEG_INF = -1e30
 
 def _hybrid_attn_kernel(
         # scalar prefetch
-        page_table, page_type, page_ntok,
+        page_table, page_type, page_ntok, n_used,
         # inputs
         q_ref, k_ref, v_ref, act_ref, scale_ref, wk_ref, wv_ref,
         # outputs
         o_ref,
         # scratch
-        acc, m_s, l_s,
+        acc, m_s, l_s, a_norm,
         *, norm_type: str, eps: float, sm_scale: float):
     b = pl.program_id(0)
-    p = pl.program_id(2)
-    n_pages = pl.num_programs(2)
+    p = pl.program_id(1)
+    h = pl.program_id(2)
+    n_pages = pl.num_programs(1)
 
-    @pl.when(p == 0)
+    @pl.when((p == 0) & (h == 0))
     def _init():
         acc[...] = jnp.zeros_like(acc)
         m_s[...] = jnp.full_like(m_s, NEG_INF)
@@ -57,8 +83,23 @@ def _hybrid_attn_kernel(
 
     ptype = page_type[b, p]
     ntok = page_ntok[b, p]
+    live = p < n_used[b]
 
-    @pl.when(ptype != 2)
+    # --- ACT norm hoist: once per (request, page), NOT once per KV head -----
+    @pl.when(live & (ptype == 1) & (h == 0))
+    def _norm_act():
+        a = act_ref[0].astype(jnp.float32)               # (T, d_model)
+        s = scale_ref[...].astype(jnp.float32)           # (1, d_model)
+        if norm_type == "rmsnorm":
+            var = jnp.mean(a * a, axis=-1, keepdims=True)
+            a = a * lax.rsqrt(var + eps) * (1.0 + s)
+        elif norm_type == "layernorm":
+            mu = jnp.mean(a, axis=-1, keepdims=True)
+            var = jnp.mean((a - mu) ** 2, axis=-1, keepdims=True)
+            a = (a - mu) * lax.rsqrt(var + eps) * s
+        a_norm[...] = a
+
+    @pl.when(live)
     def _attend():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (G, D)
 
@@ -67,17 +108,9 @@ def _hybrid_attn_kernel(
                     v_ref[0, :, 0, :].astype(jnp.float32))   # (T, D)
 
         def act_path():
-            a = act_ref[0].astype(jnp.float32)               # (T, d_model)
-            s = scale_ref[...].astype(jnp.float32)           # (1, d_model)
-            if norm_type == "rmsnorm":
-                var = jnp.mean(a * a, axis=-1, keepdims=True)
-                a = a * lax.rsqrt(var + eps) * (1.0 + s)
-            elif norm_type == "layernorm":
-                mu = jnp.mean(a, axis=-1, keepdims=True)
-                var = jnp.mean((a - mu) ** 2, axis=-1, keepdims=True)
-                a = (a - mu) * lax.rsqrt(var + eps) * s
             wk = wk_ref[:, 0, :].astype(jnp.float32)         # (d_model, D)
             wv = wv_ref[:, 0, :].astype(jnp.float32)
+            a = a_norm[...]
             return (jnp.dot(a, wk, preferred_element_type=jnp.float32),
                     jnp.dot(a, wv, preferred_element_type=jnp.float32))
 
@@ -87,58 +120,96 @@ def _hybrid_attn_kernel(
         valid = lax.broadcasted_iota(jnp.int32, s.shape, 1) < ntok
         s = jnp.where(valid, s, NEG_INF)
 
-        m_prev, l_prev = m_s[...], l_s[...]                   # (G, 1)
+        m_prev, l_prev = m_s[h], l_s[h]                       # (G, 1)
         m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
         corr = jnp.exp(m_prev - m_cur)
         pexp = jnp.exp(s - m_cur)
         pexp = jnp.where(valid, pexp, 0.0)
-        l_s[...] = l_prev * corr + pexp.sum(axis=-1, keepdims=True)
-        m_s[...] = m_cur
-        acc[...] = acc[...] * corr + jnp.dot(
+        l_s[h] = l_prev * corr + pexp.sum(axis=-1, keepdims=True)
+        m_s[h] = m_cur
+        acc[h] = acc[h] * corr + jnp.dot(
             pexp, v, preferred_element_type=jnp.float32)
 
     @pl.when(p == n_pages - 1)
     def _finalize():
-        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc[h] / jnp.maximum(l_s[h], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("norm_type", "eps", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("norm_type", "eps", "pages_bound",
+                                    "interpret"))
 def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
                            page_table, page_type, page_ntok, *,
                            norm_type: str = "layernorm", eps: float = 1e-5,
+                           pages_bound: int | None = None,
                            interpret: bool = True):
-    """-> (B, KVH, G, D) attention output over the hybrid paged cache."""
+    """-> (B, KVH, G, D) attention output over the hybrid paged cache.
+
+    pages_bound: static upper bound on any request's USED page count; the
+    page grid dimension shrinks to it (default: MAXP).  The caller (which
+    owns the page tables) knows this bound exactly.
+    """
     B, KVH, G, D = q.shape
     P_kv, T, _, _ = k_pages.shape
     d_model = act_pages.shape[-1]
     MAXP = page_table.shape[1]
+    PB = MAXP if pages_bound is None else min(pages_bound, MAXP)
+    PB = max(PB, 1)
     sm_scale = 1.0 / (D ** 0.5)
     scale2d = norm_scale.reshape(1, d_model)
 
-    def k_index(b, h, p, pt, pty, pn):
-        # invalid/ACT pages clamp to physical page 0 (loaded but unused)
-        return (jnp.where(pty[b, p] == 0, pt[b, p], 0), 0, h, 0)
+    # page compaction: used pages first (stable), empty tail clamps its block
+    # index maps so no fresh page DMA is issued for dead grid iterations
+    order = jnp.argsort((page_type == 2).astype(jnp.int32), axis=1,
+                        stable=True)
+    pt = jnp.take_along_axis(page_table, order, axis=1)
+    pty = jnp.take_along_axis(page_type, order, axis=1)
+    pn = jnp.take_along_axis(page_ntok, order, axis=1)
+    n_used = jnp.sum((page_type != 2).astype(jnp.int32), axis=1)
 
-    def act_index(b, h, p, pt, pty, pn):
-        return (jnp.where(pty[b, p] == 1, pt[b, p], 0), 0, 0)
+    def k_index(b, p, h, pt, pty, pn, nu):
+        # ACT/dead pages clamp to physical page 0 (loaded but unused); dead
+        # iterations ALSO clamp the head coordinate — h is the innermost grid
+        # dim, so leaving it live would change the block index every dead
+        # iteration and re-issue the page-0 DMA KVH times per dead page
+        live = p < nu[b]
+        return (jnp.where(live & (pty[b, p] == 0), pt[b, p], 0), 0,
+                jnp.where(live, h, 0), 0)
+
+    def act_index(b, p, h, pt, pty, pn, nu):
+        return (jnp.where((p < nu[b]) & (pty[b, p] == 1), pt[b, p], 0), 0, 0)
+
+    def w_index(b, p, h, pt, pty, pn, nu):
+        return (0, jnp.where(p < nu[b], h, 0), 0)
+
+    def q_index(b, p, h, pt, pty, pn, nu):
+        return (b, jnp.where(p < nu[b], h, 0), 0, 0)
+
+    def o_index(b, p, h, pt, pty, pn, nu):
+        # dead iterations clamp h like every other operand, EXCEPT on the
+        # finalize page (p == PB-1): each head must flush to its own block
+        # there.  Intermediate flushes of stale content to a clamped block
+        # are always overwritten by that block's later finalize flush.
+        return (b, jnp.where((p < nu[b]) | (p == PB - 1), h, 0), 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(B, KVH, MAXP),
+        num_scalar_prefetch=4,
+        grid=(B, PB, KVH),
         in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, pty, pn: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, D), q_index),
             pl.BlockSpec((1, T, 1, D), k_index),
             pl.BlockSpec((1, T, 1, D), k_index),
             pl.BlockSpec((1, T, d_model), act_index),
-            pl.BlockSpec((1, d_model), lambda b, h, p, pt, pty, pn: (0, 0)),
-            pl.BlockSpec((d_model, 1, D), lambda b, h, p, pt, pty, pn: (0, h, 0)),
-            pl.BlockSpec((d_model, 1, D), lambda b, h, p, pt, pty, pn: (0, h, 0)),
+            pl.BlockSpec((1, d_model), lambda b, p, h, pt, pty, pn, nu: (0, 0)),
+            pl.BlockSpec((d_model, 1, D), w_index),
+            pl.BlockSpec((d_model, 1, D), w_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, pty, pn: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, G, D), o_index),
         scratch_shapes=[
-            pltpu.VMEM((G, D), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((KVH, G, D), jnp.float32),
+            pltpu.VMEM((KVH, G, 1), jnp.float32),
+            pltpu.VMEM((KVH, G, 1), jnp.float32),
+            pltpu.VMEM((T, d_model), jnp.float32),
         ],
     )
     out = pl.pallas_call(
@@ -147,6 +218,6 @@ def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
         interpret=interpret,
-    )(page_table, page_type, page_ntok,
+    )(pt, pty, pn, n_used,
       q, k_pages, v_pages, act_pages, scale2d, wk, wv)
     return out

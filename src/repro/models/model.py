@@ -732,6 +732,122 @@ def hybrid_prefill(params, cfg: ModelConfig, batch, kv_cap: int, act_cap: int,
     return logits, cache
 
 
+def decode_loop(params, cfg: ModelConfig, cur, cache: Cache, n_steps: int):
+    """Device-resident greedy generation over the plain decode cache.
+
+    One jit call replaces ``n_steps`` host-driven ``decode_step`` calls: the
+    ``lax.scan`` carries (current token, cache), samples greedily on-device
+    and returns every generated token at once.
+
+    cur: (B,) int32 — first token to emit (argmax of the prefill logits).
+    -> (tokens (B, n_steps) int32, final cache).
+    """
+    def step(carry, _):
+        tok, c = carry
+        lg, c = decode_step(params, cfg, tok[:, None], c)
+        nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+        return (nxt, c), tok
+
+    (_, cache), toks = lax.scan(step, (cur, cache), None, length=n_steps)
+    return jnp.swapaxes(toks, 0, 1), cache
+
+
+def hybrid_decode_loop(params, cfg: ModelConfig, cur, cache: Cache,
+                       store_sched):
+    """Device-resident greedy generation over the hybrid KV/ACT cache.
+
+    The engine's decode hot path (DESIGN.md §7): the per-token store_act
+    decisions are a pure function of the Algorithm-1 allocation, so the whole
+    schedule is precomputed host-side (core.policy.store_act_schedule) and
+    scanned over on-device — one jit call and one host<->device round trip for
+    the entire generation instead of one per token.  Pair with
+    ``donate_argnums`` on the cache so each scan step updates the KV/ACT pools
+    in place.
+
+    cur:         (B,) int32 — first token to emit (argmax of prefill logits).
+    store_sched: (n_steps, B) bool — per-step store_act flags.
+    -> (tokens (B, n_steps) int32, final cache).
+    """
+    def step(carry, store):
+        tok, c = carry
+        lg, c = hybrid_decode_step(params, cfg, tok[:, None], c, store)
+        nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+        return (nxt, c), tok
+
+    (_, cache), toks = lax.scan(step, (cur, cache), store_sched)
+    return jnp.swapaxes(toks, 0, 1), cache
+
+
+def hybrid_prefill_batched(params, cfg: ModelConfig, batch, kv_cap: int,
+                           act_cap: int, kv_keep, last_pos):
+    """Group-batched hybrid prefill with PER-REQUEST KV/ACT split points.
+
+    The engine pads every request in a jit group to one common bucket and
+    runs a single forward (instead of one jit call per request).  Because the
+    forward is causal, positions < last_pos[b] see exactly the same context
+    as in a per-request prefill; the per-request split is applied when
+    placing the caches:
+
+      kv region  <- K/V of positions [0, kv_keep[b])   (kv_len masks the rest)
+      act region <- checkpoints of [kv_keep[b], last_pos[b])  (gathered)
+
+    kv_keep:  (B,) int32 — tokens kept as K/V (block-aligned by the engine).
+    last_pos: (B,) int32 — the request's padded prompt length; logits are
+              taken at last_pos-1 rather than the common bucket's last slot.
+    -> (last_logits (B, 1, V), hybrid cache).
+
+    Regions are placed by masking, so an overfull region cannot fail at
+    trace time the way the per-request path does; when the split arrays are
+    concrete (eager callers) the capacity check happens here, and inside a
+    jit the caller must pre-validate (HybridServeEngine does, loudly).
+    """
+    assert family(cfg) == "uniform"
+    if not isinstance(kv_keep, jax.core.Tracer):
+        if int(jnp.max(kv_keep)) > kv_cap:
+            raise ValueError(f"kv_keep={int(jnp.max(kv_keep))} exceeds "
+                             f"kv_cap={kv_cap}")
+        if int(jnp.max(last_pos - kv_keep)) > act_cap:
+            raise ValueError(
+                f"ACT span {int(jnp.max(last_pos - kv_keep))} exceeds "
+                f"act_cap={act_cap}")
+    x, positions = embed_input(params, cfg, batch)
+    sincos = T._rope_for(cfg, positions)
+    B, S = x.shape[0], x.shape[1]
+    is_moe = cfg.is_moe and cfg.moe_every == 1
+
+    def body(carry, lp):
+        h, aux = carry
+        act_in = h                                       # A^i — the checkpoint
+        h, (k, v), a = T.layer_full(lp, cfg, h, sincos, kind="attn", is_moe=is_moe,
+                                    want_cache=True, q_chunk=Q_CHUNK, k_chunk=K_CHUNK)
+        return (h, aux + a), (k, v, act_in)
+
+    (h, _), (K, V, ACT) = lax.scan(body, (x, 0.0), params["layers"])
+    h = L.apply_norm(h, params["final_norm"], cfg.norm_type)
+    arangeB = jnp.arange(B)
+    logits = unembed(params, cfg, h[arangeB, last_pos - 1][:, None])
+
+    cache = init_hybrid_cache(cfg, B, kv_cap, act_cap)
+    kfit = min(S, kv_cap)
+    # kv region: positions < kv_keep[b] are the real prefix; slots beyond are
+    # masked by kv_len and overwritten as decode appends.
+    cache["k"] = lax.dynamic_update_slice_in_dim(
+        cache["k"], K[:, :, :kfit].astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = lax.dynamic_update_slice_in_dim(
+        cache["v"], V[:, :, :kfit].astype(cache["v"].dtype), 0, axis=2)
+    # act region slot j of request b holds position kv_keep[b] + j
+    act_idx = jnp.clip(kv_keep[:, None] +
+                       jnp.arange(act_cap, dtype=jnp.int32)[None], 0, S - 1)
+    cache["act"] = jnp.take_along_axis(
+        ACT, act_idx[None, :, :, None], axis=2).astype(cache["act"].dtype)
+    cache["act_pos"] = kv_keep[:, None] + jnp.arange(act_cap, dtype=jnp.int32)[None]
+    # lengths clamped to what was actually stored: attention must never
+    # claim validity for slots the placement above could not write
+    cache["kv_len"] = jnp.minimum(kv_keep, kfit).astype(jnp.int32)
+    cache["act_len"] = jnp.minimum(last_pos - kv_keep, act_cap).astype(jnp.int32)
+    return logits, cache
+
+
 def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
                        store_act):
     """One generation step with the KV-Activation hybrid cache.

@@ -5,9 +5,11 @@ with the paper's policy stack driving representation choices:
 
   1. Algorithm 1 fixes the host ACT:KV ratio for the model + hardware.
   2. Each request's prompt is split KV-prefix / ACT-suffix at that ratio
-     (Eq. 11); generated tokens keep the running ratio via next_block_kind.
-  3. Mini-batches are formed by the F_b bin packer; each mini-batch runs the
-     jitted hybrid_decode_step (KV Gen fused into the step).
+     (Eq. 11); generated tokens keep the running ratio via the precomputed
+     store_act_schedule (next_block_kind unrolled host-side, DESIGN.md §5).
+  3. Mini-batches are formed by the F_b bin packer; each jit group runs ONE
+     batched hybrid prefill + ONE lax.scan decode loop (KV Gen fused into
+     the step, greedy sampling on-device, cache buffers donated).
   4. The BlockManager accounts physical blocks on both tiers; the pipeline
      simulator reports what the schedule would cost on the target hardware.
 
@@ -29,9 +31,9 @@ from repro.configs.base import ModelConfig
 from repro.core import (BLOCK_TOKENS, BlockManager, BlockType,
                         HostAllocation, RequestBlocks, device_act_blocks,
                         form_minibatches, host_block_allocation,
-                        next_block_kind, profile_cost_fns)
+                        profile_cost_fns, store_act_schedule)
 from repro.core import costmodel as cm
-from repro.core.pipeline import MiniBatchSpec, simulate_step
+from repro.core.pipeline import MiniBatchSpec, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
 
@@ -46,6 +48,7 @@ class GenStats:
     steps: int = 0
     sim_time: float = 0.0
     sim_gpu_busy: float = 0.0
+    device_calls: int = 0          # jit dispatches (host<->device round trips)
     traffic: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -90,25 +93,33 @@ class HybridServeEngine:
             host_act_blocks=max(self.alloc.act_blocks, 1),
             dev_kv_blocks=64, dev_act_blocks=device_act_blocks(cfg, hw))
 
-        self._prefill_jit = functools.partial(
-            jax.jit, static_argnames=("kv_cap", "act_cap", "kv_keep"))(
-                self._prefill_impl)
-        self._decode_jit = jax.jit(self._decode_impl)
+        self._prefill_batch_jit = functools.partial(
+            jax.jit, static_argnames=("kv_cap", "act_cap"))(
+                self._prefill_batch_impl)
+        # cache pools are donated: each scan iteration updates the KV/ACT
+        # buffers in place instead of copying the full pools
+        self._decode_loop_jit = jax.jit(self._decode_loop_impl,
+                                        donate_argnums=(1,))
 
     # --- jitted wrappers ------------------------------------------------------
-    def _prefill_impl(self, tokens, kv_cap, act_cap, kv_keep):
-        return M.hybrid_prefill(self.params, self.cfg, {"tokens": tokens},
-                                kv_cap=kv_cap, act_cap=act_cap, kv_keep=kv_keep)
+    def _prefill_batch_impl(self, tokens, kv_keep, last_pos, kv_cap, act_cap):
+        lg, cache = M.hybrid_prefill_batched(
+            self.params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
+            act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos)
+        # fold the greedy sample of the prefill logits into the same dispatch
+        return jnp.argmax(lg[:, -1], -1).astype(jnp.int32), cache
 
-    def _decode_impl(self, token, cache, store_act):
-        return M.hybrid_decode_step(self.params, self.cfg, token, cache, store_act)
+    def _decode_loop_impl(self, cur, cache, store_sched):
+        return M.hybrid_decode_loop(self.params, self.cfg, cur, cache,
+                                    store_sched)
 
     # --- public API ----------------------------------------------------------
-    def generate(self, requests: List[Request]) -> Tuple[Dict[int, np.ndarray], GenStats]:
-        cfg = self.cfg
-        stats = GenStats()
-
-        # Eq.11 request split + F_b mini-batch packing over block counts
+    def plan_groups(self, requests: List[Request]) -> List[List[Request]]:
+        """Deterministic jit-group plan for a request batch: Eq. 11 request
+        split + F_b mini-batch packing over block counts, chunked to the
+        engine's jit width.  Each group costs exactly TWO device dispatches
+        (batched prefill + scan decode loop); tests and benchmarks use this
+        to predict dispatch counts independently of the measured stats."""
         reqs_blocks = []
         for r in requests:
             blocks = (len(r.prompt) + r.max_new_tokens + BLOCK_TOKENS - 1) // BLOCK_TOKENS
@@ -118,100 +129,153 @@ class HybridServeEngine:
             reqs_blocks, *self.fits,
             act_max=max(self.max_minibatch * (self.act_cap // BLOCK_TOKENS), 1),
             kv_max=max(self.max_minibatch * (self.kv_cap // BLOCK_TOKENS), 1))
-
         by_rid = {r.rid: r for r in requests}
-        outputs: Dict[int, np.ndarray] = {}
+        groups: List[List[Request]] = []
         for mb in mbs:
             batch_reqs = [by_rid[rb.rid] for rb in mb.requests]
             # chunk the packed mini-batch to the engine's jit width
             for i in range(0, len(batch_reqs), self.max_minibatch):
-                group = batch_reqs[i: i + self.max_minibatch]
-                out, st = self._run_group(group)
-                outputs.update(out)
-                stats.generated_tokens += st.generated_tokens
-                stats.steps += st.steps
-                stats.sim_time += st.sim_time
-                stats.sim_gpu_busy += st.sim_gpu_busy
-                for k, v in st.traffic.items():
-                    stats.traffic[k] = stats.traffic.get(k, 0.0) + v
+                groups.append(batch_reqs[i: i + self.max_minibatch])
+        return groups
+
+    def generate(self, requests: List[Request]) -> Tuple[Dict[int, np.ndarray], GenStats]:
+        stats = GenStats()
+        outputs: Dict[int, np.ndarray] = {}
+        for group in self.plan_groups(requests):
+            out, st = self._run_group(group)
+            outputs.update(out)
+            stats.generated_tokens += st.generated_tokens
+            stats.steps += st.steps
+            stats.sim_time += st.sim_time
+            stats.sim_gpu_busy += st.sim_gpu_busy
+            stats.device_calls += st.device_calls
+            for k, v in st.traffic.items():
+                stats.traffic[k] = stats.traffic.get(k, 0.0) + v
         return outputs, stats
 
     # --- one jit-width group of requests -------------------------------------
     def _run_group(self, group: List[Request]) -> Tuple[Dict[int, np.ndarray], GenStats]:
+        """Device-resident hot path: ONE batched prefill dispatch + ONE
+        lax.scan decode dispatch for the whole group's generation.
+
+        The per-token Python of the seed engine (a jit call, two host<->device
+        syncs and a cost-model invocation per generated token) is replaced by
+        (1) the precomputed store_act schedule (policy.store_act_schedule),
+        (2) an on-device greedy scan over it (M.hybrid_decode_loop, cache
+        donated so the pools update in place), and (3) a post-hoc replay of
+        the schedule through the BlockManager plus one vectorized
+        simulate_steps call — identical accounting and identical tokens, with
+        host<->device round trips per group dropping from O(max_new) to 2.
+        """
         cfg = self.cfg
         stats = GenStats()
-        caches, logits_list = [], []
-        for r in group:
-            self.blockman.new_request(r.rid)
-            plen = len(r.prompt)
-            pb = _bucket(plen)
-            toks = np.zeros((1, pb), np.int32)
-            toks[0, :plen] = r.prompt
-            toks[0, plen:] = r.prompt[-1]           # pad with last token
-            kv_keep = int(round(pb * (1 - self.act_frac) / BLOCK_TOKENS)) * BLOCK_TOKENS
-            if self.mode == "kv":
-                kv_keep = pb
-            if self.mode == "act":
-                kv_keep = 0
-            lg, cache = self._prefill_jit(jnp.asarray(toks), kv_cap=self.kv_cap,
-                                          act_cap=self.act_cap, kv_keep=kv_keep)
-            for t in range(pb):
-                kind = BlockType.KV if t < kv_keep else BlockType.ACT
-                self.blockman.append_token(r.rid, kind)
-            caches.append(cache)
-            logits_list.append(lg)
-
         B = len(group)
-        if B > 1:
-            batch0 = ("kv_len", "act_len", "act_pos")   # batch on axis 0
-            cache = {k: jnp.concatenate([c[k] for c in caches],
-                                        axis=0 if k in batch0 else 1)
-                     for k in caches[0]}
-        else:
-            cache = caches[0]
-        logits = jnp.concatenate(logits_list, axis=0)
+        plens = [len(r.prompt) for r in group]
+        pbs = [_bucket(p) for p in plens]
+        Smax = max(pbs)
 
-        max_new = max(r.max_new_tokens for r in group)
-        gen = np.zeros((B, max_new), np.int32)
-        cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
-        counts = {r.rid: self.blockman.counts(r.rid) for r in group}
-        for step in range(max_new):
-            gen[:, step] = cur
-            store = np.zeros((B,), bool)
+        # batched prefill: pad every request to the group bucket (causality
+        # keeps positions < pb identical to the per-request prefill)
+        toks = np.zeros((B, Smax), np.int32)
+        kv_keep = np.zeros((B,), np.int32)
+        for i, r in enumerate(group):
+            toks[i, :plens[i]] = r.prompt
+            toks[i, plens[i]:] = r.prompt[-1]       # pad with last token
+            kk = int(round(pbs[i] * (1 - self.act_frac) / BLOCK_TOKENS)) * BLOCK_TOKENS
+            if self.mode == "kv":
+                kk = pbs[i]
+            if self.mode == "act":
+                kk = 0
+            kv_keep[i] = kk
+        # the batched prefill places per-request prefixes by masking, so an
+        # overfull region would truncate SILENTLY — fail loudly here instead
+        # (the seed per-request path failed at trace time)
+        if int(kv_keep.max()) > self.kv_cap:
+            raise ValueError(f"kv_keep={int(kv_keep.max())} exceeds "
+                             f"kv_cap={self.kv_cap}; raise kv_cap")
+        if int((np.asarray(pbs) - kv_keep).max()) > self.act_cap:
+            raise ValueError(f"ACT prefix {int((np.asarray(pbs) - kv_keep).max())} "
+                             f"exceeds act_cap={self.act_cap}; raise act_cap")
+        cur, cache = self._prefill_batch_jit(
+            jnp.asarray(toks), jnp.asarray(kv_keep),
+            jnp.asarray(np.asarray(pbs, np.int32)),
+            kv_cap=self.kv_cap, act_cap=self.act_cap)
+        stats.device_calls += 1
+
+        # all block accounting under try/finally: a fail-loud raise below must
+        # not leak the group's rids/blocks and poison the engine for retries
+        # (free_request is a no-op for already-freed or unregistered rids)
+        try:
+            for i, r in enumerate(group):
+                self.blockman.new_request(r.rid)
+                for t in range(pbs[i]):
+                    kind = BlockType.KV if t < kv_keep[i] else BlockType.ACT
+                    if self.blockman.append_token(r.rid, kind) is None:
+                        raise RuntimeError(
+                            f"{kind.value} block pool exhausted during "
+                            f"prefill of request {r.rid}")
+
+            # precomputed store schedule -> one on-device scan for all tokens
+            max_new = max(r.max_new_tokens for r in group)
+            act0 = np.asarray(pbs) - kv_keep
+            sched = store_act_schedule(self.alloc, act0, kv_keep, max_new)
+            if max_new:
+                gen_dev, _ = self._decode_loop_jit(cur, cache,
+                                                   jnp.asarray(sched.T))
+                gen = np.asarray(gen_dev, np.int32)
+                stats.device_calls += 1
+            else:
+                gen = np.zeros((B, 0), np.int32)
+            stats.steps += max_new
+            stats.generated_tokens += B * max_new
+
+            # replay the schedule through the BlockManager (same accounting
+            # the per-token loop performed, now off the device hot path).
+            # The schedule assumes allocation never fails; if a pool empties
+            # the decisions would silently diverge from a count-driven loop,
+            # so fail loudly instead.
+            for step in range(max_new):
+                for bi, r in enumerate(group):
+                    kind = BlockType.ACT if sched[bi, step] else BlockType.KV
+                    if self.blockman.append_token(r.rid, kind) is None:
+                        raise RuntimeError(
+                            f"{kind.value} block pool exhausted at decode "
+                            f"step {step} of request {r.rid}; the precomputed "
+                            "store_act schedule requires allocation to succeed")
+
+            # cost of every step on the target hardware (vectorized reporting)
+            steps_ahead = np.arange(1, max_new + 1)
+            kv_tok = int(kv_keep.sum()) + np.cumsum((~sched).sum(0))
+            act_tok = int(act0.sum()) + np.cumsum(sched.sum(0))
+            specs = [[MiniBatchSpec(B, int(kv_tok[s]), int(act_tok[s]), 0,
+                                    ctx_tokens=int(np.mean(np.asarray(pbs)
+                                                           + steps_ahead[s])))]
+                     for s in range(max_new)]
+            for res in simulate_steps(cfg, self.hw, specs):
+                stats.sim_time += res.total
+                stats.sim_gpu_busy += res.gpu_busy
+                for k, v in res.traffic.items():
+                    stats.traffic[k] = stats.traffic.get(k, 0.0) + v
+
+            out = {}
             for bi, r in enumerate(group):
-                c = counts[r.rid]
-                kind = next_block_kind(self.alloc, c["act_blocks"], c["kv_blocks"])
-                store[bi] = (kind == "act")
-                blk = self.blockman.append_token(
-                    r.rid, BlockType.ACT if store[bi] else BlockType.KV)
-                counts[r.rid] = self.blockman.counts(r.rid)
-            lg, cache = self._decode_jit(jnp.asarray(cur[:, None]), cache,
-                                         jnp.asarray(store))
-            cur = np.asarray(jnp.argmax(lg[:, -1], -1), np.int32)
-            stats.steps += 1
-            stats.generated_tokens += B
-
-            # cost of this step on the target hardware (reporting)
-            kv_host = sum(counts[r.rid]["kv_tokens"] for r in group)
-            act_tok = sum(counts[r.rid]["act_tokens"] for r in group)
-            ctx = int(np.mean([self.blockman.context_len(r.rid) for r in group]))
-            spec = MiniBatchSpec(B, kv_host, act_tok, 0, ctx_tokens=ctx)
-            res = simulate_step(cfg, self.hw, [spec])
-            stats.sim_time += res.total
-            stats.sim_gpu_busy += res.gpu_busy
-            for k, v in res.traffic.items():
-                stats.traffic[k] = stats.traffic.get(k, 0.0) + v
-
-        out = {}
-        for bi, r in enumerate(group):
-            out[r.rid] = gen[bi, : r.max_new_tokens]
-            self.blockman.free_request(r.rid)
-        return out, stats
+                out[r.rid] = gen[bi, : r.max_new_tokens]
+            return out, stats
+        finally:
+            for r in group:
+                self.blockman.free_request(r.rid)
 
 
 def exact_reference_generate(cfg, params, requests: List[Request]) -> Dict[int, np.ndarray]:
-    """Oracle: plain full-KV incremental decode, one request at a time."""
+    """Oracle: plain full-KV incremental decode, one request at a time.
+
+    Uses the same scan-based device-resident loop as the engine (M.decode_loop)
+    so the oracle is a single decode dispatch per request rather than one per
+    token; the prefill cache is donated into the loop."""
     out = {}
+    loop = functools.partial(jax.jit, static_argnames=("n_steps",),
+                             donate_argnums=(1,))(
+        functools.partial(M.decode_loop, params, cfg))
     for r in requests:
         plen = len(r.prompt)
         pb = _bucket(plen)
@@ -220,11 +284,7 @@ def exact_reference_generate(cfg, params, requests: List[Request]) -> Dict[int, 
         toks[0, plen:] = r.prompt[-1]
         lg, cache = M.prefill(params, cfg, {"tokens": jnp.asarray(toks)},
                               max_len=pb + r.max_new_tokens + 8)
-        cur = int(np.asarray(jnp.argmax(lg[:, -1], -1))[0])
-        gen = []
-        for _ in range(r.max_new_tokens):
-            gen.append(cur)
-            lg, cache = M.decode_step(params, cfg, jnp.asarray([[cur]], jnp.int32), cache)
-            cur = int(np.asarray(jnp.argmax(lg[:, -1], -1))[0])
-        out[r.rid] = np.asarray(gen, np.int32)
+        cur = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+        gen, _ = loop(cur, cache, n_steps=r.max_new_tokens)
+        out[r.rid] = np.asarray(gen, np.int32)[0]
     return out

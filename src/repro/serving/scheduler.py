@@ -73,9 +73,11 @@ class ContinuousBatchingServer:
         self.act_frac = self.alloc.act_blocks / total if total else 0.0
         self.cache = M.init_hybrid_cache(cfg, slots, kv_cap, act_cap)
         self.slots = [SlotState() for _ in range(slots)]
+        # cache donated: the slot pools update in place every iteration
         self._decode = jax.jit(
             lambda tok, cache, store: M.hybrid_decode_step(
-                params, cfg, tok, cache, store))
+                params, cfg, tok, cache, store),
+            donate_argnums=(1,))
         self._cur_tok = np.zeros((slots,), np.int32)
 
     # ------------------------------------------------------------- admission

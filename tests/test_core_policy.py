@@ -4,14 +4,15 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import costmodel as cm
 from repro.core.blocks import BLOCK_TOKENS, act_block_bytes, kv_block_bytes
 from repro.core.minibatch import RequestBlocks, f_b, form_minibatches
 from repro.core.policy import (host_block_allocation, next_block_kind,
-                               request_block_split, device_act_blocks)
+                               request_block_split, device_act_blocks,
+                               store_act_schedule)
 
 
 def test_regression_is_linear_r2():
@@ -102,6 +103,60 @@ def test_next_block_kind_converges(a, k, seed):
         else:
             nk += 1
     assert abs(na / (na + nk) - ta / (ta + tk)) < 0.15
+
+
+@settings(max_examples=30, deadline=None)
+@given(ta=st.integers(0, 9), tk=st.integers(0, 9), n_steps=st.integers(1, 80),
+       seed=st.integers(0, 10_000))
+def test_store_act_schedule_matches_stepwise_replay(ta, tk, n_steps, seed):
+    """The precomputed (B, n_steps) schedule equals a token-by-token
+    next_block_kind replay over the BlockManager's block-count rule, for
+    random allocations and random per-request prefill splits."""
+    from repro.core.policy import HostAllocation
+    alloc = HostAllocation(act_blocks=ta, kv_blocks=tk, act_init=0, kv_init=0)
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 6))
+    act0 = rng.integers(0, 200, size=B)
+    kv0 = rng.integers(0, 200, size=B)
+    sched = store_act_schedule(alloc, act0, kv0, n_steps)
+    assert sched.shape == (B, n_steps)
+    for b in range(B):
+        at, kt = int(act0[b]), int(kv0[b])
+        for s in range(n_steps):
+            # BlockManager invariant: a new block of a kind opens exactly when
+            # the previous one fills, so block count = ceil(tokens / BLOCK)
+            ab = -(-at // BLOCK_TOKENS)
+            kb = -(-kt // BLOCK_TOKENS)
+            kind = next_block_kind(alloc, ab, kb)
+            assert sched[b, s] == (kind == "act"), (b, s, at, kt)
+            if sched[b, s]:
+                at += 1
+            else:
+                kt += 1
+
+
+def test_store_act_schedule_matches_blockmanager_counts():
+    """End-to-end against the real BlockManager accounting (not just the
+    ceil-rule model): replaying the schedule through append_token keeps the
+    counts the stepwise engine loop would have produced."""
+    from repro.configs import get_config
+    from repro.core.blocks import BlockManager, BlockType
+    from repro.core.policy import HostAllocation
+    cfg = get_config("opt-6.7b-reduced")
+    alloc = HostAllocation(act_blocks=3, kv_blocks=2, act_init=0, kv_init=0)
+    bm = BlockManager(cfg, host_kv_blocks=512, host_act_blocks=512,
+                      dev_kv_blocks=64, dev_act_blocks=64)
+    bm.new_request(0)
+    kv_keep, plen = 32, 48
+    for t in range(plen):
+        bm.append_token(0, BlockType.KV if t < kv_keep else BlockType.ACT)
+    sched = store_act_schedule(alloc, np.array([plen - kv_keep]),
+                               np.array([kv_keep]), 64)[0]
+    for s in range(64):
+        c = bm.counts(0)
+        kind = next_block_kind(alloc, c["act_blocks"], c["kv_blocks"])
+        assert sched[s] == (kind == "act"), s
+        bm.append_token(0, BlockType.ACT if sched[s] else BlockType.KV)
 
 
 @settings(max_examples=25, deadline=None)

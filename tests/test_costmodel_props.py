@@ -1,7 +1,7 @@
 """Property tests: cost model & pipeline timeline invariants (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import costmodel as cm

@@ -30,6 +30,26 @@ def test_engine_token_exact(setup, mode):
     assert stats.sim_time > 0
 
 
+def test_engine_device_call_count(setup):
+    """The scan-based hot path dispatches exactly twice per jit group
+    (batched prefill + decode loop) — not once per generated token.  The
+    expected group count comes from the engine's own deterministic packing
+    plan, NOT from the measured stats (that would be circular)."""
+    cfg, params, reqs, ref = setup
+    eng = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=8,
+                            kv_cap=128, act_cap=128)
+    n_groups = len(eng.plan_groups(reqs))
+    out, stats = eng.generate(reqs)
+    assert stats.device_calls == 2 * n_groups
+    # >=5x fewer host<->device round trips than the seed's per-token loop
+    # (B prefill dispatches + one decode dispatch per token per group)
+    max_new = max(r.max_new_tokens for r in reqs)
+    seed_calls = len(reqs) + n_groups * max_new
+    assert seed_calls >= 5 * stats.device_calls
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+
+
 def test_engine_block_accounting(setup):
     cfg, params, reqs, ref = setup
     eng = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=2,

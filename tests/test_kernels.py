@@ -54,6 +54,78 @@ def test_hybrid_attention_sweep(kvh, g, d_model, norm):
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
 
 
+@pytest.mark.parametrize("pages_bound", [None, 3, 5])
+def test_hybrid_attention_empty_page_compaction(pages_bound):
+    """Interleaved empty pages + a static pages_bound: the compacted grid
+    must agree with the oracle, which walks the uncompacted table."""
+    rng = jax.random.PRNGKey(0)
+    B, kvh, g, D, T, d_model = 3, 2, 2, 32, 16, 128
+    P_kv, P_act, MAXP = 4, 3, 8
+    ks = jax.random.normal(rng, (P_kv, T, kvh, D)) * 0.3
+    vs = jax.random.normal(jax.random.PRNGKey(1), (P_kv, T, kvh, D)) * 0.3
+    ap = jax.random.normal(jax.random.PRNGKey(2), (P_act, T, d_model)) * 0.5
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, kvh, g, D))
+    sc = jnp.ones((d_model,))
+    wk = jax.random.normal(jax.random.PRNGKey(4), (d_model, kvh, D)) * 0.05
+    wv = jax.random.normal(jax.random.PRNGKey(5), (d_model, kvh, D)) * 0.05
+    # empty pages interleaved mid-table; used-page counts 3 / 2 / 1
+    pt = jnp.array([[0, 0, 1, 0, 2, 0, 0, 0],
+                    [1, 0, 3, 0, 0, 0, 0, 0],
+                    [2, 0, 0, 0, 0, 0, 0, 0]], jnp.int32)
+    pty = jnp.array([[0, 2, 1, 2, 0, 2, 2, 2],
+                     [1, 2, 0, 2, 2, 2, 2, 2],
+                     [0, 2, 2, 2, 2, 2, 2, 2]], jnp.int32)
+    pn = jnp.array([[16, 0, 16, 0, 9, 0, 0, 0],
+                    [16, 0, 5, 0, 0, 0, 0, 0],
+                    [12, 0, 0, 0, 0, 0, 0, 0]], jnp.int32)
+    o1 = hybrid_paged_attention(q, ks, vs, ap, sc, wk, wv, pt, pty, pn,
+                                norm_type="layernorm",
+                                pages_bound=pages_bound)
+    o2 = hybrid_paged_attention_ref(q, ks, vs, ap, sc, wk, wv, pt, pty, pn,
+                                    norm_type="layernorm")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_hybrid_attention_pages_bound_guard():
+    """ops wrapper rejects a pages_bound below the real used-page count
+    (silent context truncation) when tables are concrete."""
+    from repro.kernels.hybrid_attention.ops import paged_hybrid_attention
+    B, kvh, g, D, T, d_model = 1, 1, 2, 16, 16, 32
+    ks = jnp.zeros((2, T, kvh, D))
+    vs = jnp.zeros((2, T, kvh, D))
+    ap = jnp.zeros((1, T, d_model))
+    q = jnp.ones((B, kvh, g, D))
+    pt = jnp.array([[0, 1]], jnp.int32)
+    pty = jnp.zeros((1, 2), jnp.int32)           # both pages used
+    pn = jnp.full((1, 2), 16, jnp.int32)
+    with pytest.raises(ValueError, match="pages_bound"):
+        paged_hybrid_attention(q, ks, vs, ap, jnp.ones(d_model),
+                               jnp.zeros((d_model, kvh, D)),
+                               jnp.zeros((d_model, kvh, D)),
+                               pt, pty, pn, norm_type="none", pages_bound=1)
+
+
+def test_hybrid_attention_act_heavy_table():
+    """All-ACT page tables exercise the hoisted once-per-page norm path."""
+    B, kvh, g, D, T, d_model = 2, 3, 2, 16, 16, 64
+    ks = jnp.zeros((1, T, kvh, D))
+    vs = jnp.zeros((1, T, kvh, D))
+    ap = jax.random.normal(jax.random.PRNGKey(0), (6, T, d_model)) * 0.5
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, kvh, g, D))
+    sc = 1 + jax.random.normal(jax.random.PRNGKey(2), (d_model,)) * 0.1
+    wk = jax.random.normal(jax.random.PRNGKey(3), (d_model, kvh, D)) * 0.05
+    wv = jax.random.normal(jax.random.PRNGKey(4), (d_model, kvh, D)) * 0.05
+    pt = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    pty = jnp.ones((2, 3), jnp.int32)
+    pn = jnp.array([[16, 16, 16], [16, 16, 7]], jnp.int32)
+    for norm in ("rmsnorm", "layernorm"):
+        o1 = hybrid_paged_attention(q, ks, vs, ap, sc, wk, wv, pt, pty, pn,
+                                    norm_type=norm)
+        o2 = hybrid_paged_attention_ref(q, ks, vs, ap, sc, wk, wv, pt, pty, pn,
+                                        norm_type=norm)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
 def test_hybrid_attention_pure_kv_matches_plain():
     """With only KV pages the kernel reduces to standard paged attention."""
     rng = jax.random.PRNGKey(0)

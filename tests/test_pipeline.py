@@ -5,7 +5,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import costmodel as cm
 from repro.core.pipeline import (MiniBatchSpec, StepConfig, simulate_generation,
-                                 simulate_step)
+                                 simulate_step, simulate_steps)
 
 CFG = get_config("opt-30b")
 HW = cm.RTX4090
@@ -71,6 +71,57 @@ def test_traffic_scales_with_batch():
     r1 = simulate_generation(CFG, HW, batch=32, prompt=1024, gen=32, mode="kv")
     r2 = simulate_generation(CFG, HW, batch=64, prompt=1024, gen=32, mode="kv")
     assert r2.traffic_per_step["kv_load"] > 1.8 * r1.traffic_per_step["kv_load"]
+
+
+def test_vectorized_timeline_matches_run_timeline():
+    """The (n,)-array timeline recurrence inside simulate_steps must agree
+    with the ORIGINAL scalar run_timeline on random task graphs — the
+    independent oracle (simulate_step is itself a wrapper over
+    simulate_steps, so comparing those two alone would be circular)."""
+    from repro.core.pipeline import LaneTask, _run_timeline_arrays, run_timeline
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        n_tasks = int(rng.integers(1, 40))
+        n = int(rng.integers(1, 6))
+        lanes = ["pcie", "pcie_up", "gpu"]
+        tasks = []
+        for i in range(n_tasks):
+            deps = tuple(int(d) for d in
+                         rng.choice(i, size=min(i, int(rng.integers(0, 4))),
+                                    replace=False)) if i else ()
+            tasks.append(LaneTask(lanes[int(rng.integers(3))],
+                                  rng.uniform(0.0, 2.0, size=n), deps=deps))
+        total, busy, finish = _run_timeline_arrays(tasks, n)
+        for s in range(n):
+            scalar = [LaneTask(t.lane, float(t.dur[s]), t.deps) for t in tasks]
+            ref = run_timeline(scalar)
+            assert total[s] == ref.total
+            assert busy["pcie"][s] == ref.pcie_busy
+            assert busy["gpu"][s] == ref.gpu_busy
+            assert [float(f[s]) for f in finish] == ref.finish
+
+
+def test_simulate_steps_matches_per_step():
+    """The vectorized whole-schedule simulator is element-for-element
+    identical to calling simulate_step once per generated token (the engine's
+    reporting path depends on this)."""
+    rng = np.random.default_rng(0)
+    steps = []
+    for s in range(12):
+        mbs = [MiniBatchSpec(8, int(rng.integers(0, 4096)),
+                             int(rng.integers(0, 4096)),
+                             int(rng.integers(0, 256)),
+                             tok_recompute_tokens=int(rng.integers(0, 64)),
+                             ctx_tokens=1024 + s) for _ in range(3)]
+        steps.append(mbs)
+    vec = simulate_steps(CFG, HW, steps)
+    for s, mbs in enumerate(steps):
+        ref = simulate_step(CFG, HW, mbs)
+        assert vec[s].total == ref.total
+        assert vec[s].gpu_busy == ref.gpu_busy
+        assert vec[s].pcie_busy == ref.pcie_busy
+        assert vec[s].traffic == ref.traffic
+        assert vec[s].finish == ref.finish
 
 
 def test_weight_prefetch_overlap():

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import AbstractMesh
+from _compat import abstract_mesh as AbstractMesh, given, settings, st
 
 from repro.models import shardhints as SH
 

@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from _compat import abstract_mesh as AbstractMesh
 
 from repro.configs import get_config
 from repro.launch import specs as SP
