@@ -49,8 +49,54 @@ def save(path: str, tree, metadata: Optional[Dict[str, Any]] = None,
         json.dump({"keys": sorted(flat), "metadata": metadata or {}}, f, indent=1)
 
 
-def restore(path: str, like, shard_suffix: str = ""):
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+def _structure_keys(like) -> set:
+    """Path key set of ``like``'s structure, WITHOUT the ``::bf16`` storage
+    suffix — the suffix encodes the *saved* leaf's dtype, and restore
+    deliberately supports cross-dtype loads (bf16 checkpoint into an f32
+    tree and vice versa), so structure comparison must ignore it."""
+    return {SEP.join(_key_str(k) for k in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]}
+
+
+def _strip_bf16(keys) -> set:
+    suffix = "::bf16"
+    return {k[: -len(suffix)] if k.endswith(suffix) else k for k in keys}
+
+
+def restore(path: str, like, shard_suffix: str = "",
+            expect_metadata: Optional[Dict[str, Any]] = None):
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    The sidecar ``.meta.json`` (when present) must describe the same key set
+    as ``like``'s structure — loading a checkpoint of a different model or
+    layout fails loudly instead of raising a bare ``KeyError`` deep in the
+    leaf loop.  ``expect_metadata`` additionally pins user metadata entries
+    (e.g. ``{"arch": cfg.name}``): any mismatch raises with both values.
+    """
+    has_meta = os.path.exists(path + ".meta.json")
+    if expect_metadata and not has_meta:
+        raise ValueError(
+            f"checkpoint at {path!r} has no .meta.json sidecar; cannot "
+            f"verify expected metadata {sorted(expect_metadata)}")
+    if has_meta:
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        stored = _strip_bf16(meta.get("keys", ()))
+        expected = _structure_keys(like)
+        if stored != expected:
+            missing = sorted(expected - stored)[:5]
+            extra = sorted(stored - expected)[:5]
+            raise ValueError(
+                f"checkpoint at {path!r} does not match the target "
+                f"structure: {len(expected - stored)} missing keys "
+                f"(e.g. {missing}), {len(stored - expected)} unexpected "
+                f"(e.g. {extra})")
+        for k, want in (expect_metadata or {}).items():
+            got = meta.get("metadata", {}).get(k)
+            if got != want:
+                raise ValueError(
+                    f"checkpoint metadata mismatch for {k!r}: stored "
+                    f"{got!r}, expected {want!r}")
     data = np.load(path + shard_suffix + ".npz")
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []

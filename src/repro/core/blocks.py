@@ -90,6 +90,10 @@ class BlockManager:
             (BlockType.ACT, Location.DEVICE): PhysicalPool(dev_act_blocks),
         }
         self.tables: Dict[int, List[LogicalBlock]] = {}
+        # HOST<->DEVICE residency transitions, counted per (kind, from, to):
+        # the offload runtime migrates blocks when its memory budget allows
+        # device residency and spills them back when it doesn't.
+        self.transitions: Dict[Tuple[BlockType, Location, Location], int] = {}
 
     # -- allocation ----------------------------------------------------------
     def new_request(self, rid: int) -> None:
@@ -125,6 +129,35 @@ class BlockManager:
             table.append(last)
         last.ntokens += 1
         return last
+
+    # -- residency transitions (offload runtime) ------------------------------
+    def move_block(self, rid: int, index: int, new_loc: Location) -> bool:
+        """Migrate one block to the other tier.  Allocates in the target pool
+        first — on exhaustion the block stays put and False is returned, so a
+        failed migration never loses accounting.  Transitions are counted in
+        ``self.transitions``; the offload executor's physical pools
+        (``offload.host_pool``) are the data-plane mirror of these moves."""
+        blk = self.tables[rid][index]
+        if blk.location == new_loc:
+            return True
+        pbn = self.pools[(blk.kind, new_loc)].alloc()
+        if pbn is None:
+            return False
+        self.pools[(blk.kind, blk.location)].free(blk.pbn)
+        key = (blk.kind, blk.location, new_loc)
+        self.transitions[key] = self.transitions.get(key, 0) + 1
+        blk.location, blk.pbn = new_loc, pbn
+        return True
+
+    def migrate(self, rid: int, kind: BlockType, new_loc: Location) -> int:
+        """Best-effort migration of every ``kind`` block of a request;
+        returns how many moved (stops counting failures, keeps going so a
+        mixed-residency table still converges toward the target tier)."""
+        moved = 0
+        for i, blk in enumerate(self.tables[rid]):
+            if blk.kind == kind and blk.location != new_loc:
+                moved += self.move_block(rid, i, new_loc)
+        return moved
 
     # -- queries --------------------------------------------------------------
     def counts(self, rid: int) -> Dict[str, int]:

@@ -1,0 +1,13 @@
+"""Host-offload runtime: weight streaming overlapped with KV regeneration.
+
+The executable counterpart of the two-lane pipeline model in
+``core/pipeline.py`` (DESIGN.md §8): pinned host pools, a double-buffered
+weight streamer, a layer-granular executor that is token-exact against the
+device-resident decode loop, and measured lane timelines in the analytic
+simulator's schema.
+"""
+from repro.offload.executor import OffloadExecutor, stack_cache
+from repro.offload.host_pool import (HostBlockPool, HostWeightPool, Region,
+                                     kv_region_blocks, make_spill_pool)
+from repro.offload.streamer import WeightStreamer, donate_buffers
+from repro.offload.timeline import MeasuredTimeline, Span

@@ -1,0 +1,367 @@
+"""Layer-granular offload executor: weight streaming overlapped with KV Gen.
+
+The device-resident engine runs the whole generation as two monolithic jit
+dispatches (`M.hybrid_prefill_batched` + `M.hybrid_decode_loop`), which is
+the right hot path when all weights fit the device.  When they don't —
+HybridServe's actual regime — each layer's weights must cross the host link
+every step, and the schedulable units are individual layers.  This executor
+is that regime's ground truth: a Python-driven loop at layer granularity
+where
+
+  * the ``WeightStreamer`` uploads layer ``l+1``'s shard on the copy
+    stream while layer ``l``'s compute (KV Gen from ACT checkpoints fused
+    into the hybrid attention step) runs on the main thread,
+  * an optionally *spilled* KV region lives in the pinned
+    ``HostBlockPool`` between steps: each layer's KV tiles ride the same
+    copy stream down, and the new token's K/V row rides the full-duplex
+    upstream direction back,
+  * every task is timed into a ``MeasuredTimeline`` whose per-step results
+    share ``simulate_steps``'s schema — the analytic simulator becomes the
+    predictor, this loop the measurement.
+
+Exactness contract: the math per layer is ``M._hybrid_layer_step`` — the
+same function the monolithic scan's body calls — with pre/post stages
+mirroring ``hybrid_decode_step`` / ``hybrid_prefill_batched`` term for
+term, so generated tokens are identical to the device-resident path at any
+prefetch depth, with or without spill.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.offload.host_pool import HostWeightPool, Region
+from repro.offload.streamer import WeightStreamer, donate_buffers
+from repro.offload.timeline import MeasuredTimeline
+
+Cache = Dict[str, Any]
+
+
+class OffloadExecutor:
+    """Executes hybrid-cache inference with host-streamed layer weights."""
+
+    def __init__(self, cfg: ModelConfig, params, *, prefetch_depth: int = 1,
+                 timeline: Optional[MeasuredTimeline] = None):
+        assert M.family(cfg) == "uniform", \
+            "offload executor drives uniform-family models"
+        self.cfg = cfg
+        self.is_moe = cfg.is_moe and cfg.moe_every == 1
+        self.timeline = timeline if timeline is not None else MeasuredTimeline()
+        self.pool = HostWeightPool(cfg, params)
+        self.streamer = WeightStreamer(self.pool, prefetch_depth=prefetch_depth,
+                                       timeline=self.timeline)
+        self.resident = self.pool.resident
+        self.dispatches = 0                     # jit calls (device round trips)
+
+        self._pre = jax.jit(self._pre_impl)
+        self._layer = jax.jit(self._layer_impl, donate_argnums=(1, 2, 3))
+        self._post = jax.jit(self._post_impl)
+        self._prefill_embed = jax.jit(self._prefill_embed_impl)
+        self._prefill_layer = jax.jit(self._prefill_layer_impl,
+                                      static_argnames=("kv_cap", "act_cap"))
+        self._prefill_post = jax.jit(self._prefill_post_impl,
+                                     static_argnames=("kfit", "act_cap"))
+
+    # ========================================================== jitted stages
+    # decode pre/post mirror M.hybrid_decode_step outside the layer scan
+    def _pre_impl(self, tok, kv_len, act_len, act_pos, store):
+        cfg = self.cfg
+        B = tok.shape[0]
+        ctx = kv_len + act_len
+        sincos_new = (T._rope_for(cfg, ctx[:, None])
+                      if cfg.pos_type in ("rope",) else None)
+        act_pos2 = act_pos.at[jnp.arange(B), act_len].set(
+            jnp.where(store, ctx, act_pos[jnp.arange(B), act_len]))
+        sincos_act = (T._rope_for(cfg, act_pos2)
+                      if cfg.pos_type in ("rope",) else None)
+        x = M._embed_tokens(self.resident, cfg, tok)
+        if cfg.pos_type == "learned":
+            x = x + jnp.take(self.resident["pos_embed"], ctx, axis=0)[:, None]
+        return x, act_pos2, sincos_new, sincos_act
+
+    def _layer_impl(self, lp, kc, vc, ac, h, kv_len, act_len, store,
+                    sincos_new, sincos_act):
+        return M._hybrid_layer_step(lp, self.cfg, h, kc, vc, ac, kv_len,
+                                    act_len, store, sincos_new, sincos_act,
+                                    self.is_moe)
+
+    def _post_impl(self, h, kv_len, act_len, store):
+        cfg = self.cfg
+        x = nn.apply_norm(h, self.resident["final_norm"], cfg.norm_type)
+        logits = M.unembed(self.resident, cfg, x)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        return logits, nxt, (kv_len + (~store).astype(jnp.int32),
+                             act_len + store.astype(jnp.int32))
+
+    # prefill stages mirror M.hybrid_prefill_batched around the layer scan
+    def _prefill_embed_impl(self, tokens):
+        x, positions = M.embed_input(self.resident, self.cfg,
+                                     {"tokens": tokens})
+        return x, T._rope_for(self.cfg, positions)
+
+    def _prefill_layer_impl(self, lp, x, sincos, kv_keep, kv_cap, act_cap):
+        cfg = self.cfg
+        B, S = x.shape[0], x.shape[1]
+        dt = jnp.dtype(cfg.dtype)
+        act_in = x                                       # A^i — the checkpoint
+        h, (k, v), _ = T.layer_full(lp, cfg, x, sincos, kind="attn",
+                                    is_moe=self.is_moe, want_cache=True,
+                                    q_chunk=M.Q_CHUNK, k_chunk=M.K_CHUNK)
+        kfit = min(S, kv_cap)
+        kc = lax.dynamic_update_slice_in_dim(
+            jnp.zeros((B, kv_cap, cfg.num_kv_heads, cfg.head_dim), dt),
+            k[:, :kfit].astype(dt), 0, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(
+            jnp.zeros((B, kv_cap, cfg.num_kv_heads, cfg.head_dim), dt),
+            v[:, :kfit].astype(dt), 0, axis=1)
+        act_idx = jnp.clip(kv_keep[:, None] +
+                           jnp.arange(act_cap, dtype=jnp.int32)[None], 0, S - 1)
+        ac = jnp.take_along_axis(act_in, act_idx[:, :, None], axis=1).astype(dt)
+        return h, kc, vc, ac
+
+    def _prefill_post_impl(self, h, kv_keep, last_pos, kfit, act_cap):
+        cfg = self.cfg
+        B = h.shape[0]
+        h = nn.apply_norm(h, self.resident["final_norm"], cfg.norm_type)
+        logits = M.unembed(self.resident, cfg,
+                           h[jnp.arange(B), last_pos - 1][:, None])
+        cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        act_pos = kv_keep[:, None] + jnp.arange(act_cap, dtype=jnp.int32)[None]
+        kv_len = jnp.minimum(kv_keep, kfit).astype(jnp.int32)
+        act_len = jnp.minimum(last_pos - kv_keep, act_cap).astype(jnp.int32)
+        return cur, act_pos, kv_len, act_len
+
+    # ================================================================ prefill
+    def prefill_batched(self, tokens, kv_keep, last_pos, *, kv_cap: int,
+                        act_cap: int) -> Tuple[jax.Array, Cache]:
+        """Layer-streamed batched hybrid prefill.
+
+        Same contract as ``M.hybrid_prefill_batched`` (the engine validates
+        capacities loudly before calling), but the layer loop runs host-side
+        with weights arriving over the copy stream — the full parameter set
+        is never device-resident.  Returns ``(first_token, cache)`` with the
+        per-layer pools as *lists* (the executor's native layout;
+        ``stack_cache`` converts when a monolithic consumer needs it).
+        """
+        cfg = self.cfg
+        tokens = jnp.asarray(tokens)
+        kv_keep = jnp.asarray(kv_keep, jnp.int32)
+        last_pos = jnp.asarray(last_pos, jnp.int32)
+        S = int(tokens.shape[1])
+        self.timeline.begin_step("prefill")
+        x, sincos = self._prefill_embed(tokens)
+        self.dispatches += 1
+        ks: List[jax.Array] = []
+        vs: List[jax.Array] = []
+        acs: List[jax.Array] = []
+        self.streamer.begin(range(cfg.num_layers))
+        for l in range(cfg.num_layers):
+            lp = self.streamer.acquire(l)
+            t0 = time.perf_counter()
+            x, kc, vc, ac = self._prefill_layer(lp, x, sincos, kv_keep,
+                                                kv_cap=kv_cap, act_cap=act_cap)
+            jax.block_until_ready(x)
+            self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+            self.dispatches += 1
+            self.streamer.release(l)
+            ks.append(kc); vs.append(vc); acs.append(ac)
+        cur, act_pos, kv_len, act_len = self._prefill_post(
+            x, kv_keep, last_pos, kfit=min(S, kv_cap), act_cap=act_cap)
+        self.dispatches += 1
+        self.timeline.end_step()
+        cache: Cache = {"k": ks, "v": vs, "act": acs, "act_pos": act_pos,
+                        "kv_len": kv_len, "act_len": act_len}
+        return cur, cache
+
+    # ================================================================= decode
+    def _unstack(self, cache: Cache):
+        def split(v):
+            return list(v) if isinstance(v, list) else \
+                [v[l] for l in range(self.cfg.num_layers)]
+        return split(cache["k"]), split(cache["v"]), split(cache["act"])
+
+    def _kv_upload(self, hk_l: np.ndarray, hv_l: np.ndarray):
+        """Spilled-KV region load for one layer.  Runs on the caller thread:
+        ``jax.device_put`` is a synchronous GIL-holding copy on this backend
+        (DESIGN.md §8.4), so routing it through the copy stream would
+        serialise against compute rather than overlap — the lane time is
+        recorded either way and the simulator's pcie lane stays the
+        predictor for it."""
+        t0 = time.perf_counter()
+        kc = jax.device_put(hk_l)
+        vc = jax.device_put(hv_l)
+        jax.block_until_ready((kc, vc))
+        self.timeline.record("pcie", "kv", t0, time.perf_counter(),
+                             hk_l.nbytes + hv_l.nbytes)
+        return kc, vc
+
+    def _kv_store_back(self, kc2, vc2, hk_l, hv_l, kv_idx: np.ndarray,
+                       store_np: np.ndarray) -> None:
+        """Write the new token's K/V row back into the spilled host region
+        (the paper's per-step store traffic, upstream lane)."""
+        t0 = time.perf_counter()
+        B = kv_idx.shape[0]
+        gather = jnp.asarray(np.minimum(kv_idx, hk_l.shape[1] - 1))
+        rows_k = np.asarray(kc2[jnp.arange(B), gather])
+        rows_v = np.asarray(vc2[jnp.arange(B), gather])
+        nbytes = 0
+        for b in range(B):
+            if not store_np[b]:                 # KV-bound token: row is new
+                hk_l[b, min(kv_idx[b], hk_l.shape[1] - 1)] = rows_k[b]
+                hv_l[b, min(kv_idx[b], hv_l.shape[1] - 1)] = rows_v[b]
+                nbytes += rows_k[b].nbytes + rows_v[b].nbytes
+        self.timeline.record("pcie_up", "st", t0, time.perf_counter(), nbytes)
+
+    def _spill_out(self, ks, vs, region: Region, kv_len):
+        """Move the whole KV region device→host into the pinned arena."""
+        cfg = self.cfg
+        Lc = cfg.num_layers
+        B, kv_cap = ks[0].shape[0], ks[0].shape[1]
+        arr = region.view((2, Lc, B, kv_cap, cfg.num_kv_heads, cfg.head_dim),
+                          np.dtype(cfg.dtype))
+        hk, hv = arr[0], arr[1]
+        t0 = time.perf_counter()
+        nbytes = 0
+        for l in range(Lc):
+            hk[l][...] = np.asarray(ks[l])
+            hv[l][...] = np.asarray(vs[l])
+            nbytes += hk[l].nbytes + hv[l].nbytes
+            donate_buffers((ks[l], vs[l]))       # device copies are now stale
+        self.timeline.record("pcie_up", "st", t0, time.perf_counter(), nbytes)
+        return hk, hv, np.asarray(kv_len).copy()
+
+    def decode_loop(self, cur, cache: Cache, store_sched, *,
+                    spill_region: Optional[Region] = None
+                    ) -> Tuple[np.ndarray, Cache]:
+        """Layer-streamed greedy generation, token-exact vs
+        ``M.hybrid_decode_loop``.
+
+        cur:          (B,) int32 — first token to emit.
+        store_sched:  (n_steps, B) bool — per-step store_act flags (same
+                      orientation the monolithic loop scans over).
+        spill_region: when given, the KV region lives in this pinned host
+                      region between steps — every layer's tiles are
+                      re-uploaded per step and the new token's row is stored
+                      back (real PCIe-style traffic on the reduced configs).
+
+        The cache is donated: its per-layer pools are updated in place or
+        freed (spill mode).  Returns ``(tokens (B, n_steps), final cache)``.
+        """
+        cfg = self.cfg
+        Lc = cfg.num_layers
+        sched = np.asarray(store_sched, bool)
+        n_steps = int(sched.shape[0])
+        B = int(cur.shape[0])
+        ks, vs, acs = self._unstack(cache)
+        kv_len, act_len = cache["kv_len"], cache["act_len"]
+        act_pos = cache["act_pos"]
+        spill = spill_region is not None
+        hk = hv = kv_len_np = None
+        if spill:
+            hk, hv, kv_len_np = self._spill_out(ks, vs, spill_region, kv_len)
+            ks = vs = None
+        toks: List[np.ndarray] = []
+        self.streamer.begin([l for _ in range(n_steps) for l in range(Lc)])
+        seq = 0
+        for s in range(n_steps):
+            self.timeline.begin_step("decode")
+            store = jnp.asarray(sched[s])
+            x, act_pos, sn, sa = self._pre(cur[:, None], kv_len, act_len,
+                                           act_pos, store)
+            self.dispatches += 1
+            for l in range(Lc):
+                lp = self.streamer.acquire(seq)
+                if spill:
+                    kc, vc = self._kv_upload(hk[l], hv[l])
+                else:
+                    kc, vc = ks[l], vs[l]
+                t0 = time.perf_counter()
+                x, kc2, vc2, ac2 = self._layer(lp, kc, vc, acs[l], x, kv_len,
+                                               act_len, store, sn, sa)
+                jax.block_until_ready(x)
+                self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+                self.dispatches += 1
+                self.streamer.release(seq)
+                seq += 1
+                acs[l] = ac2
+                if spill:
+                    self._kv_store_back(kc2, vc2, hk[l], hv[l], kv_len_np,
+                                        sched[s])
+                    donate_buffers((kc2, vc2))   # stale: host copy is truth
+                else:
+                    ks[l], vs[l] = kc2, vc2
+            toks.append(np.asarray(cur, np.int32))
+            _, cur, (kv_len, act_len) = self._post(x, kv_len, act_len, store)
+            self.dispatches += 1
+            if spill:
+                kv_len_np = kv_len_np + (~sched[s]).astype(kv_len_np.dtype)
+            self.timeline.end_step()
+        out = (np.stack(toks, axis=1) if toks
+               else np.zeros((B, 0), np.int32))
+        final: Cache = {"k": ks, "v": vs, "act": acs, "act_pos": act_pos,
+                        "kv_len": kv_len, "act_len": act_len,
+                        "spilled": spill}
+        return out, final
+
+    def decode_step(self, tok, cache: Cache, store) -> Tuple[jax.Array, Cache]:
+        """One layer-streamed decode iteration over a *stacked* hybrid cache
+        (drop-in for the continuous-batching scheduler's jitted
+        ``hybrid_decode_step`` call; no spill — slots churn too fast for
+        group-scoped host regions).
+
+        Known cost vs the jitted monolith it replaces: the stacked layout is
+        unstacked into per-layer slices on entry and restacked on exit (the
+        scheduler's admission path writes slot rows into stacked arrays), so
+        each iteration copies the cache instead of donating it in place —
+        acceptable at slot-pool smoke scale; keeping the scheduler cache
+        per-layer end-to-end would remove both copies."""
+        cfg = self.cfg
+        Lc = cfg.num_layers
+        ks, vs, acs = self._unstack(cache)
+        kv_len, act_len = cache["kv_len"], cache["act_len"]
+        store = jnp.asarray(store)
+        self.timeline.begin_step("decode")
+        x, act_pos, sn, sa = self._pre(tok, kv_len, act_len,
+                                       cache["act_pos"], store)
+        self.dispatches += 1
+        self.streamer.begin(range(Lc))
+        for l in range(Lc):
+            lp = self.streamer.acquire(l)
+            t0 = time.perf_counter()
+            x, ks[l], vs[l], acs[l] = self._layer(lp, ks[l], vs[l], acs[l], x,
+                                                  kv_len, act_len, store,
+                                                  sn, sa)
+            jax.block_until_ready(x)
+            self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+            self.dispatches += 1
+            self.streamer.release(l)
+        logits, _, (kv_len2, act_len2) = self._post(x, kv_len, act_len, store)
+        self.dispatches += 1
+        self.timeline.end_step()
+        new_cache = dict(cache)
+        new_cache.update(k=jnp.stack(ks, 0), v=jnp.stack(vs, 0),
+                         act=jnp.stack(acs, 0), act_pos=act_pos,
+                         kv_len=kv_len2, act_len=act_len2)
+        return logits, new_cache
+
+    # ================================================================== misc
+    def close(self) -> None:
+        self.streamer.close()
+
+
+def stack_cache(cache: Cache) -> Cache:
+    """Executor-native (per-layer lists) → monolithic stacked layout."""
+    out = dict(cache)
+    for key in ("k", "v", "act"):
+        if isinstance(cache.get(key), list):
+            out[key] = jnp.stack(cache[key], 0)
+    return out

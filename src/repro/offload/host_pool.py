@@ -1,0 +1,184 @@
+"""Pinned host-side pools for the offload runtime (paper §4.1, Fig. 7).
+
+Two pools, both allocated ONCE and reused across jit groups:
+
+* ``HostWeightPool`` — per-layer weight shards pulled to host memory at
+  construction (the streamed tier) plus the small resident tree (embedding,
+  positions, final norm) that stays on device.  On a real GPU runtime these
+  host shards would be ``cudaHostAlloc``'d; here they are plain numpy
+  arrays, which is what ``jax.device_put`` DMA-copies from.
+* ``HostBlockPool`` — a byte arena sized in BLOCK_TOKENS-granular cache
+  blocks, with a contiguous-run allocator.  Spilled KV (or ACT) regions
+  live here between decode steps; the executor carves per-layer numpy
+  views out of an allocated region, so spill data is written/read in place
+  with zero steady-state host allocation.
+
+``BlockManager`` (core/blocks.py) accounts the same blocks logically; its
+residency-transition counters are the accounting mirror of what these pools
+physically hold.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import BLOCK_TOKENS, kv_block_bytes
+
+
+class HostWeightPool:
+    """Per-layer weight shards on host + the device-resident remainder.
+
+    The stacked ``params["layers"]`` pytree (leading axis = layer) is split
+    into ``num_layers`` host-side shards at construction; the streamer
+    uploads one shard per ``jax.device_put`` dispatch.  Everything else
+    (embedding, positional table, final norm, untied unembedding) is small,
+    touched every token, and stays device-resident.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Dict[str, Any]):
+        assert "layers" in params, "host offload drives uniform-family models"
+        self.cfg = cfg
+        self.resident = {k: v for k, v in params.items() if k != "layers"}
+        stacked = params["layers"]
+        self._layers: List[Any] = [
+            jax.tree.map(lambda a, l=l: np.asarray(jax.device_get(a[l])),
+                         stacked)
+            for l in range(cfg.num_layers)
+        ]
+        self.layer_nbytes = [
+            sum(leaf.nbytes for leaf in jax.tree.leaves(shard))
+            for shard in self._layers
+        ]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self._layers)
+
+    def layer(self, l: int):
+        """Host (numpy) shard of layer ``l``'s weights."""
+        return self._layers[l]
+
+
+@dataclass
+class Region:
+    """A contiguous run of blocks carved from the ``HostBlockPool`` arena."""
+    pool: "HostBlockPool"
+    offset: int               # first block slot
+    n_blocks: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_blocks * self.pool.block_bytes
+
+    def view(self, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        """Reinterpret the region's bytes as an array (in-place view)."""
+        need = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        if need > self.nbytes:
+            raise ValueError(f"view of {need} B exceeds region of "
+                             f"{self.nbytes} B")
+        start = self.offset * self.pool.block_bytes
+        return self.pool.arena[start: start + need].view(dtype).reshape(shape)
+
+    def free(self) -> None:
+        self.pool.free(self)
+
+
+class HostBlockPool:
+    """Fixed-capacity pinned arena for spilled cache blocks.
+
+    One block slot holds ``block_bytes`` (all-layer bytes of BLOCK_TOKENS
+    tokens of one representation).  Allocation is contiguous-run first-fit
+    with coalescing frees, so a whole per-group KV region comes out as a
+    single numpy-viewable span.
+    """
+
+    def __init__(self, capacity_blocks: int, block_bytes: int):
+        assert capacity_blocks >= 0 and block_bytes > 0
+        self.capacity = int(capacity_blocks)
+        self.block_bytes = int(block_bytes)
+        self.arena = np.zeros(self.capacity * self.block_bytes, np.uint8)
+        # free runs as sorted, disjoint, non-adjacent (start, length) pairs
+        self._runs: List[Tuple[int, int]] = (
+            [(0, self.capacity)] if self.capacity else [])
+        self.allocated_blocks = 0
+        self._live: Dict[int, int] = {}       # offset -> n_blocks
+
+    # ------------------------------------------------------------------ alloc
+    def alloc(self, n_blocks: int) -> Optional[Region]:
+        """First-fit a contiguous run; None when no run is large enough."""
+        if n_blocks <= 0:
+            raise ValueError("n_blocks must be positive")
+        for i, (start, length) in enumerate(self._runs):
+            if length >= n_blocks:
+                if length == n_blocks:
+                    self._runs.pop(i)
+                else:
+                    self._runs[i] = (start + n_blocks, length - n_blocks)
+                self.allocated_blocks += n_blocks
+                self._live[start] = n_blocks
+                return Region(self, start, n_blocks)
+        return None
+
+    def free(self, region: Region) -> None:
+        n = self._live.pop(region.offset, None)
+        if n is None:
+            raise ValueError(f"double free / unknown region @{region.offset}")
+        assert n == region.n_blocks
+        self.allocated_blocks -= n
+        self._runs.append((region.offset, n))
+        self._runs.sort()
+        # coalesce adjacent runs so reuse stays contiguous
+        merged: List[Tuple[int, int]] = []
+        for start, length in self._runs:
+            if merged and merged[-1][0] + merged[-1][1] == start:
+                merged[-1] = (merged[-1][0], merged[-1][1] + length)
+            else:
+                merged.append((start, length))
+        self._runs = merged
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def free_blocks(self) -> int:
+        return self.capacity - self.allocated_blocks
+
+    def check_invariants(self) -> None:
+        """Free runs disjoint+sorted+coalesced; accounting conserves blocks."""
+        total_free = 0
+        prev_end = -1
+        for start, length in self._runs:
+            assert length > 0 and start > prev_end, self._runs
+            if prev_end == start:               # adjacency ⇒ not coalesced
+                raise AssertionError(f"uncoalesced runs: {self._runs}")
+            prev_end = start + length
+            total_free += length
+        assert prev_end <= self.capacity
+        assert total_free == self.free_blocks
+        assert sum(self._live.values()) == self.allocated_blocks
+        # live regions disjoint from free runs and from each other
+        spans = sorted([(o, n) for o, n in self._live.items()]
+                       + list(self._runs))
+        for (a, la), (b, _) in zip(spans, spans[1:]):
+            assert a + la <= b, f"overlap in {spans}"
+
+
+def kv_region_blocks(B: int, kv_cap: int) -> int:
+    """Blocks needed to back one group's (L, B, kv_cap) KV region."""
+    assert kv_cap % BLOCK_TOKENS == 0, "kv_cap must be block-aligned"
+    return B * (kv_cap // BLOCK_TOKENS)
+
+
+def make_spill_pool(cfg: ModelConfig, *, max_requests: int,
+                    kv_cap: int) -> HostBlockPool:
+    """The engine's once-allocated KV staging pool: enough host blocks to
+    back the largest jit group's KV region, plus one group of slack for
+    admission churn.  This is the *staging* arena the executor spills into,
+    not the full Algorithm-1 host cache — the latter can be hundreds of GiB
+    on the simulated target hardware.  (ACT blocks prefer device residency
+    per §4.2.1 and are never spilled today, so no ACT arena exists; add one
+    here if ACT spill ever becomes real.)"""
+    kv_blocks = 2 * kv_region_blocks(max_requests, kv_cap)
+    return HostBlockPool(kv_blocks, kv_block_bytes(cfg))

@@ -1,0 +1,169 @@
+"""Double-buffered host→device weight streamer (paper Fig. 8's PCIe lane).
+
+A single background thread is the *copy stream*: uploads are submitted in
+consumption order, so transfers serialise exactly like DMA on one PCIe
+direction while the main thread keeps the compute lane busy — the overlap
+HybridServe's pipeline model assumes, produced for real.
+
+Two-phase upload (CPU-backend deviation, documented in DESIGN.md §8): on
+this runtime ``jax.device_put`` is a synchronous, GIL-holding memcpy, so a
+worker thread calling it would *serialise against* compute instead of
+overlapping (measured: negative saving).  What does overlap is a raw numpy
+copy (GIL released).  The streamer therefore keeps ``prefetch_depth + 1``
+preallocated staging slots — the double buffers — and
+
+  1. the copy stream STAGES layer ``l``'s host shard into its slot
+     (``np.copyto``, the DMA analogue, genuinely concurrent with compute);
+  2. ``acquire`` performs the final ``device_put`` hand-off on the caller
+     thread (the serial tail this backend cannot hide).
+
+On a real accelerator ``device_put`` from pinned memory IS the DMA and
+phase 2 collapses into phase 1; the protocol, slot discipline and
+donation rules are unchanged.
+
+Dispatch-ahead protocol (prefetch depth ``d``):
+
+  * ``begin(schedule)`` arms a pass over a sequence of layer ids (a decode
+    loop cycles ``[0..L-1]`` per step — prefetch crosses step boundaries
+    so layer 0 of step ``s+1`` stages while layer ``L-1`` of step ``s``
+    computes).
+  * ``acquire(i)`` blocks until staging ``i`` has landed, hands the slot
+    off to the device, then tops the in-flight window back up to ``d``
+    stagings beyond ``i``.  With ``d=0`` everything runs inline on the
+    caller thread — no overlap, the stream-only baseline.
+  * ``release(i)`` donates the stale buffer: every device leaf of upload
+    ``i`` is deleted, bounding device residency to ``d + 1`` layer shards
+    (classic double buffering at ``d=1``).
+
+Slot safety: staging slot ``i % (d+1)`` is only re-dispatched after
+``acquire(i)`` consumed it into a device buffer, so the window arithmetic
+alone guarantees no overwrite of un-handed-off data.
+
+``submit`` exposes the same serialized stream for other host→device work.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.offload.host_pool import HostWeightPool
+from repro.offload.timeline import MeasuredTimeline
+
+
+def donate_buffers(tree) -> None:
+    """Free a device pytree's buffers eagerly (the stale double buffer)."""
+    for leaf in jax.tree.leaves(tree):
+        delete = getattr(leaf, "delete", None)
+        if delete is not None:
+            try:
+                delete()
+            except RuntimeError:          # already donated to a jit call
+                pass
+
+
+class WeightStreamer:
+    """Streams per-layer weight shards from a ``HostWeightPool``."""
+
+    def __init__(self, pool: HostWeightPool, *, prefetch_depth: int = 1,
+                 timeline: Optional[MeasuredTimeline] = None):
+        assert prefetch_depth >= 0
+        self.pool = pool
+        self.depth = prefetch_depth
+        self.timeline = timeline
+        self._stream = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="copy-stream")
+        # the double buffers: depth+1 staging slots shaped like a layer shard
+        # (the stacked layer pytree is uniform, so one prototype fits all)
+        self._slots = [
+            jax.tree.map(lambda a: np.empty_like(a), pool.layer(0))
+            for _ in range(prefetch_depth + 1)
+        ]
+        self._sched: List[int] = []
+        self._staging: Dict[int, Future] = {}       # seq index -> Future[slot]
+        self._live: Dict[int, object] = {}          # seq index -> device tree
+        self.uploads = 0
+        self.bytes_uploaded = 0
+        self.peak_resident = 0
+
+    # ----------------------------------------------------------------- stream
+    def submit(self, fn: Callable[[], object]) -> Future:
+        """Enqueue arbitrary work on the serialized copy stream."""
+        return self._stream.submit(fn)
+
+    def _stage(self, layer: int, slot: int):
+        """Copy-stream phase: pinned staging copy (overlaps with compute)."""
+        t0 = time.perf_counter()
+        dst = self._slots[slot]
+        jax.tree.map(np.copyto, dst, self.pool.layer(layer))
+        nbytes = self.pool.layer_nbytes[layer]
+        if self.timeline is not None:
+            self.timeline.record("pcie", "w", t0, time.perf_counter(), nbytes)
+        self.uploads += 1
+        self.bytes_uploaded += nbytes
+        return dst
+
+    # ------------------------------------------------------------------- pass
+    def begin(self, schedule: Sequence[int]) -> None:
+        """Arm a pass; any leftover device buffers are donated first."""
+        for i in list(self._live):
+            self.release(i)
+        for fut in self._staging.values():
+            fut.result()                # drain stragglers before slot reuse
+        self._sched = list(schedule)
+        self._staging = {}
+        self._live = {}
+        for j in range(min(self.depth, len(self._sched))):
+            self._dispatch(j)
+
+    def _dispatch(self, i: int) -> None:
+        if i in self._staging or not (0 <= i < len(self._sched)):
+            return
+        self._staging[i] = self._stream.submit(
+            self._stage, self._sched[i], i % (self.depth + 1))
+
+    def acquire(self, i: int):
+        """Device weights for schedule position ``i``: wait for the staging
+        copy, then hand the slot off to the device (serial tail)."""
+        if i in self._live:
+            return self._live[i]
+        if i not in self._staging:
+            if self.depth == 0:
+                fut: Future = Future()      # synchronous: stage inline
+                fut.set_result(self._stage(self._sched[i], 0))
+                self._staging[i] = fut
+            else:
+                self._dispatch(i)
+        staged = self._staging.pop(i).result()
+        t0 = time.perf_counter()
+        dev = jax.device_put(staged)
+        jax.block_until_ready(dev)
+        if self.timeline is not None:       # hand-off rides the pcie lane too
+            self.timeline.record("pcie", "w", t0, time.perf_counter(), 0)
+        self._live[i] = dev
+        for j in range(i + 1, min(i + 1 + self.depth, len(self._sched))):
+            self._dispatch(j)
+        self.peak_resident = max(self.peak_resident,
+                                 len(self._live) + len(self._staging))
+        return dev
+
+    def release(self, i: int) -> None:
+        """Donate schedule position ``i``'s stale device buffer."""
+        dev = self._live.pop(i, None)
+        if dev is not None:
+            donate_buffers(dev)
+
+    def close(self) -> None:
+        for fut in self._staging.values():
+            fut.result()
+        for i in list(self._live):
+            self.release(i)
+        self._stream.shutdown(wait=True)
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def resident_buffers(self) -> int:
+        return len(self._live)

@@ -1,0 +1,152 @@
+"""Measured per-task lane timelines for the host-offload runtime.
+
+The analytic two-lane simulator (`core/pipeline.py`) predicts what a decode
+step costs on the target hardware; the offload executor records what the
+step actually cost on *this* machine, task by task, in the same three-lane
+vocabulary ("pcie" loads, "pcie_up" stores, "gpu" compute) and emits
+``TimelineResult`` objects with the same schema as ``simulate_steps`` — so
+benchmarks can plot measured-vs-analytic side by side and quantify the
+§4.3 cost-model's predictor error.
+
+Spans are recorded from two threads (the copy stream and the compute
+thread); a lock serialises appends.  A span is attributed to the step that
+is current when it *completes* — prefetches issued across a step boundary
+land in the step they finish in, a bounded attribution skew that washes out
+over a generation.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.pipeline import TimelineResult
+
+#: traffic categories, matching ``simulate_steps``'s traffic dict keys
+TRAFFIC_TAGS = ("weights", "kv_load", "act_load", "store")
+
+#: lane names, matching ``core.pipeline.run_timeline``
+LANES = ("pcie", "pcie_up", "gpu")
+
+
+@dataclass
+class Span:
+    lane: str                 # "pcie" | "pcie_up" | "gpu"
+    tag: str                  # "w" | "kv" | "act" | "st" | "gen" | "fwd"
+    start: float              # perf_counter seconds
+    end: float
+    nbytes: int = 0
+
+    @property
+    def dur(self) -> float:
+        return self.end - self.start
+
+
+@dataclass
+class _Step:
+    tag: str
+    start: float
+    end: float = 0.0
+    spans: List[Span] = field(default_factory=list)
+
+
+#: span tag -> traffic category (compute tags carry no bytes)
+_TAG_TO_TRAFFIC = {"w": "weights", "kv": "kv_load", "act": "act_load",
+                   "st": "store"}
+
+
+class MeasuredTimeline:
+    """Collects wall-clock lane spans grouped into steps.
+
+    Usage::
+
+        tl = MeasuredTimeline()
+        tl.begin_step("decode")
+        with tl.task("gpu", "fwd"):
+            ... compute ...
+        tl.end_step()
+        results = tl.results()          # List[TimelineResult], one per step
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._steps: List[_Step] = []
+        self._cur: Optional[_Step] = None
+
+    # ------------------------------------------------------------------ steps
+    def begin_step(self, tag: str = "decode") -> None:
+        with self._lock:
+            if self._cur is not None:
+                self._cur.end = time.perf_counter()
+                self._steps.append(self._cur)
+            self._cur = _Step(tag=tag, start=time.perf_counter())
+
+    def end_step(self) -> None:
+        with self._lock:
+            if self._cur is not None:
+                self._cur.end = time.perf_counter()
+                self._steps.append(self._cur)
+                self._cur = None
+
+    # ------------------------------------------------------------------ spans
+    def record(self, lane: str, tag: str, start: float, end: float,
+               nbytes: int = 0) -> None:
+        assert lane in LANES, lane
+        with self._lock:
+            if self._cur is None:           # span outside any step: open one
+                self._cur = _Step(tag="untagged", start=start)
+            self._cur.spans.append(Span(lane, tag, start, end, nbytes))
+
+    @contextmanager
+    def task(self, lane: str, tag: str, nbytes: int = 0):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.record(lane, tag, t0, time.perf_counter(), nbytes)
+
+    # ---------------------------------------------------------------- results
+    def results(self, tag: Optional[str] = None) -> List[TimelineResult]:
+        """Per-step measured ``TimelineResult``s (same schema as
+        ``simulate_steps``).  ``tag`` filters steps (e.g. only "decode").
+
+        Read-only snapshot of COMPLETED steps: an in-flight step is neither
+        closed nor included, so a monitoring read mid-run cannot corrupt
+        step attribution.  Close steps with ``end_step`` (the executor does
+        after every step) or collect-and-reset with ``drain``."""
+        out = []
+        with self._lock:
+            steps = [s for s in self._steps if tag is None or s.tag == tag]
+        for s in steps:
+            busy = {l: 0.0 for l in LANES}
+            traffic = {k: 0.0 for k in TRAFFIC_TAGS}
+            finish = []
+            end = s.end
+            for sp in s.spans:
+                busy[sp.lane] += sp.dur
+                cat = _TAG_TO_TRAFFIC.get(sp.tag)
+                if cat is not None:
+                    traffic[cat] += sp.nbytes
+                finish.append(sp.end - s.start)
+                end = max(end, sp.end)
+            out.append(TimelineResult(
+                total=end - s.start, pcie_busy=busy["pcie"],
+                gpu_busy=busy["gpu"], traffic=traffic, finish=finish))
+        return out
+
+    def step_tags(self) -> List[str]:
+        """Tags of completed steps (snapshot, like ``results``)."""
+        with self._lock:
+            return [s.tag for s in self._steps]
+
+    def drain(self, tag: Optional[str] = None) -> List[TimelineResult]:
+        """Close the in-flight step, return ``results`` and reset — the
+        mutating collector a caller uses at group boundaries."""
+        self.end_step()
+        res = self.results(tag)
+        with self._lock:
+            self._steps.clear()
+            self._cur = None
+        return res

@@ -15,6 +15,13 @@ with the paper's policy stack driving representation choices:
 
 Baselines: mode="kv" (FlexGen-style full-KV decode) and mode="act"
 (HybridServe-Act-Cache) run the same engine with the ratio pinned.
+
+Two executors share the policy stack (DESIGN.md §5 vs §8): the default
+device-resident hot path (one batched prefill + one lax.scan decode per jit
+group), and the ``offload=True`` host-offload runtime, which streams layer
+weights from pinned host pools, spills KV regions when the config-driven
+budget demands, and reports MEASURED lane timelines next to the simulated
+predictions — token-exact against each other.
 """
 from __future__ import annotations
 
@@ -28,18 +35,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (BLOCK_TOKENS, BlockManager, BlockType,
+from repro.configs.offload import OffloadBudget, offload_budget
+from repro.core import (BLOCK_TOKENS, BlockManager, BlockType, Location,
                         HostAllocation, RequestBlocks, device_act_blocks,
                         form_minibatches, host_block_allocation,
                         profile_cost_fns, store_act_schedule)
 from repro.core import costmodel as cm
-from repro.core.pipeline import MiniBatchSpec, simulate_steps
+from repro.core.pipeline import MiniBatchSpec, TimelineResult, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
-
-
-def _bucket(n: int, mult: int = 16) -> int:
-    return max(mult, (n + mult - 1) // mult * mult)
+from repro.serving.util import bucket
 
 
 @dataclass
@@ -50,6 +55,9 @@ class GenStats:
     sim_gpu_busy: float = 0.0
     device_calls: int = 0          # jit dispatches (host<->device round trips)
     traffic: Dict[str, float] = field(default_factory=dict)
+    # measured (offload runtime ground truth; zero on the device-resident path)
+    measured_time: float = 0.0
+    measured_gpu_busy: float = 0.0
 
     @property
     def sim_throughput(self) -> float:
@@ -59,21 +67,37 @@ class GenStats:
     def sim_gpu_util(self) -> float:
         return self.sim_gpu_busy / self.sim_time if self.sim_time else 0.0
 
+    @property
+    def measured_gpu_util(self) -> float:
+        return (self.measured_gpu_busy / self.measured_time
+                if self.measured_time else 0.0)
+
 
 class HybridServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, hw: cm.HardwareSpec = cm.TPU_V5E,
                  mode: str = "hybrid", max_minibatch: int = 4,
                  kv_cap: int = 512, act_cap: int = 512, seed: int = 0,
-                 generalized: bool = False):
+                 generalized: bool = False, offload: bool = False,
+                 budget: Optional[OffloadBudget] = None):
         """generalized=True uses the byte-ratio-aware Algorithm-1 variant
         (DESIGN.md §7) — recommended for GQA models; False reproduces the
-        paper's policy exactly."""
+        paper's policy exactly.
+
+        offload=True runs the host-offload runtime (DESIGN.md §8): layer
+        weights stream from pinned host pools through the double-buffered
+        copy stream, and KV regions spill to the host arena whenever the
+        config-driven ``budget`` can't hold the group's KV blocks
+        device-side.  Tokens are identical to the device-resident path;
+        stats additionally carry measured lane times (``measured_time`` /
+        ``measured_gpu_busy``) next to the simulated predictions."""
         assert mode in ("hybrid", "kv", "act")
         assert M.family(cfg) == "uniform", "engine drives uniform-family models"
         self.cfg, self.params, self.hw, self.mode = cfg, params, hw, mode
         self.max_minibatch = max_minibatch
         self.kv_cap, self.act_cap = kv_cap, act_cap
         self.rng = np.random.default_rng(seed)
+        self.offload = offload
+        self.budget = budget if budget is not None else offload_budget(cfg)
 
         self.fits = profile_cost_fns(cfg, hw)
         self.alloc = host_block_allocation(cfg, hw, device_act_blocks(cfg, hw),
@@ -87,19 +111,51 @@ class HybridServeEngine:
         total = self.alloc.act_blocks + self.alloc.kv_blocks
         self.act_frac = self.alloc.act_blocks / total if total else 0.0
 
+        # device KV pool: generous when device-resident; budget-derived under
+        # offload so tight (reduced) budgets force real spill to the host arena
+        dev_kv = self.budget.dev_kv_blocks(cfg) if offload else 64
         self.blockman = BlockManager(
             cfg,
             host_kv_blocks=max(self.alloc.kv_blocks, 1),
             host_act_blocks=max(self.alloc.act_blocks, 1),
-            dev_kv_blocks=64, dev_act_blocks=device_act_blocks(cfg, hw))
+            dev_kv_blocks=dev_kv, dev_act_blocks=device_act_blocks(cfg, hw))
 
-        self._prefill_batch_jit = functools.partial(
-            jax.jit, static_argnames=("kv_cap", "act_cap"))(
-                self._prefill_batch_impl)
-        # cache pools are donated: each scan iteration updates the KV/ACT
-        # buffers in place instead of copying the full pools
-        self._decode_loop_jit = jax.jit(self._decode_loop_impl,
-                                        donate_argnums=(1,))
+        self.executor = None
+        self.measured_steps: List[TimelineResult] = []
+        if offload:
+            from repro.offload import OffloadExecutor, make_spill_pool
+            self.executor = OffloadExecutor(
+                cfg, params, prefetch_depth=self.budget.prefetch_depth)
+            self.spill_kv_pool = make_spill_pool(
+                cfg, max_requests=max_minibatch, kv_cap=kv_cap)
+            # the executor owns host shards of the layer weights + the small
+            # resident tree; the engine must not pin the caller's full
+            # device-resident parameter set for its lifetime (the monolithic
+            # jit wrappers below are the device-resident path's, not ours)
+            self.params = None
+        else:
+            self._prefill_batch_jit = functools.partial(
+                jax.jit, static_argnames=("kv_cap", "act_cap"))(
+                    self._prefill_batch_impl)
+            # cache pools are donated: each scan iteration updates the KV/ACT
+            # buffers in place instead of copying the full pools
+            self._decode_loop_jit = jax.jit(self._decode_loop_impl,
+                                            donate_argnums=(1,))
+
+    def close(self) -> None:
+        """Shut down the offload executor's copy-stream thread and staging
+        buffers (no-op for the device-resident engine).  Long-lived
+        processes that build engines repeatedly should call this — each
+        offload executor owns a worker thread and layer-shard-sized
+        staging slots."""
+        if self.executor is not None:
+            self.executor.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # --- jitted wrappers ------------------------------------------------------
     def _prefill_batch_impl(self, tokens, kv_keep, last_pos, kv_cap, act_cap):
@@ -149,6 +205,8 @@ class HybridServeEngine:
             stats.sim_time += st.sim_time
             stats.sim_gpu_busy += st.sim_gpu_busy
             stats.device_calls += st.device_calls
+            stats.measured_time += st.measured_time
+            stats.measured_gpu_busy += st.measured_gpu_busy
             for k, v in st.traffic.items():
                 stats.traffic[k] = stats.traffic.get(k, 0.0) + v
         return outputs, stats
@@ -171,7 +229,7 @@ class HybridServeEngine:
         stats = GenStats()
         B = len(group)
         plens = [len(r.prompt) for r in group]
-        pbs = [_bucket(p) for p in plens]
+        pbs = [bucket(p) for p in plens]
         Smax = max(pbs)
 
         # batched prefill: pad every request to the group bucket (causality
@@ -196,15 +254,25 @@ class HybridServeEngine:
         if int((np.asarray(pbs) - kv_keep).max()) > self.act_cap:
             raise ValueError(f"ACT prefix {int((np.asarray(pbs) - kv_keep).max())} "
                              f"exceeds act_cap={self.act_cap}; raise act_cap")
-        cur, cache = self._prefill_batch_jit(
-            jnp.asarray(toks), jnp.asarray(kv_keep),
-            jnp.asarray(np.asarray(pbs, np.int32)),
-            kv_cap=self.kv_cap, act_cap=self.act_cap)
-        stats.device_calls += 1
+        if self.executor is not None:
+            # layer-streamed prefill: weights arrive over the copy stream,
+            # the full parameter set is never device-resident
+            d0 = self.executor.dispatches
+            cur, cache = self.executor.prefill_batched(
+                toks, kv_keep, np.asarray(pbs, np.int32),
+                kv_cap=self.kv_cap, act_cap=self.act_cap)
+            stats.device_calls += self.executor.dispatches - d0
+        else:
+            cur, cache = self._prefill_batch_jit(
+                jnp.asarray(toks), jnp.asarray(kv_keep),
+                jnp.asarray(np.asarray(pbs, np.int32)),
+                kv_cap=self.kv_cap, act_cap=self.act_cap)
+            stats.device_calls += 1
 
         # all block accounting under try/finally: a fail-loud raise below must
         # not leak the group's rids/blocks and poison the engine for retries
         # (free_request is a no-op for already-freed or unregistered rids)
+        region = None
         try:
             for i, r in enumerate(group):
                 self.blockman.new_request(r.rid)
@@ -219,11 +287,46 @@ class HybridServeEngine:
             max_new = max(r.max_new_tokens for r in group)
             act0 = np.asarray(pbs) - kv_keep
             sched = store_act_schedule(self.alloc, act0, kv_keep, max_new)
+
+            # offload: decide residency for the group's KV blocks up front.
+            # If the device pool (sized by the config-driven budget) can hold
+            # the group's final KV block count, migrate prefill blocks to
+            # DEVICE; otherwise the region physically spills to the pinned
+            # host arena and every block stays HOST.
+            spilled = False
+            if self.executor is not None and max_new:
+                from repro.offload import kv_region_blocks
+                kv_end = kv_keep + (~sched).sum(1)
+                need = int(np.sum(-(-kv_end // BLOCK_TOKENS)))
+                free = self.blockman.pools[
+                    (BlockType.KV, Location.DEVICE)].free_blocks
+                spilled = need > free
+                if spilled:
+                    region = self.spill_kv_pool.alloc(
+                        kv_region_blocks(B, self.kv_cap))
+                    if region is None:
+                        raise RuntimeError("host spill arena exhausted")
+                else:
+                    for r in group:
+                        self.blockman.migrate(r.rid, BlockType.KV,
+                                              Location.DEVICE)
+
             if max_new:
-                gen_dev, _ = self._decode_loop_jit(cur, cache,
-                                                   jnp.asarray(sched.T))
-                gen = np.asarray(gen_dev, np.int32)
-                stats.device_calls += 1
+                if self.executor is not None:
+                    d0 = self.executor.dispatches
+                    gen, _ = self.executor.decode_loop(
+                        cur, cache, sched.T, spill_region=region)
+                    stats.device_calls += self.executor.dispatches - d0
+                    measured = self.executor.timeline.drain("decode")
+                    self.measured_steps += measured
+                    stats.measured_time += sum(m.total for m in measured)
+                    stats.measured_gpu_busy += sum(m.gpu_busy
+                                                   for m in measured)
+                else:
+                    gen_dev, _ = self._decode_loop_jit(cur, cache,
+                                                       jnp.asarray(sched.T))
+                    gen = np.asarray(gen_dev, np.int32)
+                    stats.device_calls += 1
             else:
                 gen = np.zeros((B, 0), np.int32)
             stats.steps += max_new
@@ -237,11 +340,19 @@ class HybridServeEngine:
             for step in range(max_new):
                 for bi, r in enumerate(group):
                     kind = BlockType.ACT if sched[bi, step] else BlockType.KV
-                    if self.blockman.append_token(r.rid, kind) is None:
+                    blk = self.blockman.append_token(r.rid, kind)
+                    if blk is None:
                         raise RuntimeError(
                             f"{kind.value} block pool exhausted at decode "
                             f"step {step} of request {r.rid}; the precomputed "
                             "store_act schedule requires allocation to succeed")
+                    if (self.executor is not None and not spilled
+                            and kind == BlockType.KV
+                            and blk.location == Location.HOST):
+                        # device-resident group: keep appended KV on device
+                        self.blockman.move_block(
+                            r.rid, self.blockman.tables[r.rid].index(blk),
+                            Location.DEVICE)
 
             # cost of every step on the target hardware (vectorized reporting)
             steps_ahead = np.arange(1, max_new + 1)
@@ -262,6 +373,8 @@ class HybridServeEngine:
                 out[r.rid] = gen[bi, : r.max_new_tokens]
             return out, stats
         finally:
+            if region is not None:
+                region.free()               # staging arena is reused per group
             for r in group:
                 self.blockman.free_request(r.rid)
 
@@ -278,7 +391,7 @@ def exact_reference_generate(cfg, params, requests: List[Request]) -> Dict[int, 
         functools.partial(M.decode_loop, params, cfg))
     for r in requests:
         plen = len(r.prompt)
-        pb = _bucket(plen)
+        pb = bucket(plen)
         toks = np.zeros((1, pb), np.int32)
         toks[0, :plen] = r.prompt
         toks[0, plen:] = r.prompt[-1]

@@ -27,10 +27,7 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, simulate_step
 from repro.data.pipeline import Request
 from repro.models import model as M
-
-
-def _bucket(n: int, mult: int = 16) -> int:
-    return max(mult, (n + mult - 1) // mult * mult)
+from repro.serving.util import bucket
 
 
 @dataclass
@@ -63,7 +60,13 @@ class ServeStats:
 class ContinuousBatchingServer:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  kv_cap: int = 256, act_cap: int = 256,
-                 hw: cm.HardwareSpec = cm.TPU_V5E, generalized: bool = True):
+                 hw: cm.HardwareSpec = cm.TPU_V5E, generalized: bool = True,
+                 offload: bool = False, prefetch_depth: int = 1):
+        """offload=True swaps the jitted monolithic decode step for the
+        layer-streamed offload executor (DESIGN.md §8): weights arrive over
+        the copy stream each iteration while the slots' KV Gen runs, and
+        ``self.measured_steps`` exposes the measured per-iteration lane
+        timelines.  Tokens are identical either way."""
         assert M.family(cfg) == "uniform"
         self.cfg, self.params, self.hw = cfg, params, hw
         self.n_slots, self.kv_cap, self.act_cap = slots, kv_cap, act_cap
@@ -73,18 +76,44 @@ class ContinuousBatchingServer:
         self.act_frac = self.alloc.act_blocks / total if total else 0.0
         self.cache = M.init_hybrid_cache(cfg, slots, kv_cap, act_cap)
         self.slots = [SlotState() for _ in range(slots)]
-        # cache donated: the slot pools update in place every iteration
-        self._decode = jax.jit(
-            lambda tok, cache, store: M.hybrid_decode_step(
-                params, cfg, tok, cache, store),
-            donate_argnums=(1,))
+        self.executor = None
+        if offload:
+            from repro.offload import OffloadExecutor
+            self.executor = OffloadExecutor(cfg, params,
+                                            prefetch_depth=prefetch_depth)
+            self._decode = self.executor.decode_step
+        else:
+            # cache donated: the slot pools update in place every iteration
+            self._decode = jax.jit(
+                lambda tok, cache, store: M.hybrid_decode_step(
+                    params, cfg, tok, cache, store),
+                donate_argnums=(1,))
         self._cur_tok = np.zeros((slots,), np.int32)
+
+    @property
+    def measured_steps(self):
+        """Measured per-iteration timelines (offload mode; else empty)."""
+        return self.executor.timeline.results("decode") if self.executor else []
+
+    def close(self) -> None:
+        """Shut down the offload executor (no-op in device-resident mode).
+        Each offload executor owns a copy-stream thread and layer-shard
+        staging buffers, so long-lived processes building servers per batch
+        must close them."""
+        if self.executor is not None:
+            self.executor.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # ------------------------------------------------------------- admission
     def _admit(self, slot: int, req: Request, step_idx: int) -> None:
         cfg = self.cfg
         plen = len(req.prompt)
-        pb = _bucket(plen)
+        pb = bucket(plen)
         toks = np.zeros((1, pb), np.int32)
         toks[0, :plen] = req.prompt
         toks[0, plen:] = req.prompt[-1]

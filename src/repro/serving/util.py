@@ -1,0 +1,12 @@
+"""Shared serving helpers."""
+from __future__ import annotations
+
+
+def bucket(n: int, mult: int = 16) -> int:
+    """Round ``n`` up to the next multiple of ``mult`` (minimum one bucket).
+
+    Prompt lengths are padded to these buckets so jit caches stay small and
+    the batched prefill can share one shape per group; 16 matches
+    ``BLOCK_TOKENS`` and the MXU sublane count.
+    """
+    return max(mult, (n + mult - 1) // mult * mult)

@@ -1,0 +1,105 @@
+"""Checkpoint store: bf16 bit-cast round trip, shard layout hook, and
+loud rejection of mismatched checkpoints."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_metadata, restore, save
+
+
+def _tree(dtype):
+    return {
+        "layers": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+                   .astype(dtype)},
+        "embed": jnp.linspace(-2.0, 2.0, 10).astype(dtype),
+        "scalars": [jnp.ones((2,), jnp.float32), jnp.zeros((1,), jnp.int32)],
+    }
+
+
+def test_bf16_bitcast_round_trip(tmp_path):
+    """bf16 leaves survive the ::bf16 uint16 bit-cast EXACTLY (npz has no
+    native bf16) and come back as bf16, not a float32 re-quantisation."""
+    path = str(tmp_path / "ck")
+    tree = _tree(jnp.bfloat16)
+    save(path, tree, metadata={"arch": "unit"})
+    out = restore(path, tree)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(
+            np.asarray(got).view(np.uint16) if got.dtype == jnp.bfloat16
+            else np.asarray(got),
+            np.asarray(want).view(np.uint16) if want.dtype == jnp.bfloat16
+            else np.asarray(want))
+    # the stored keys carry the bit-cast suffix
+    meta_keys = set(json.load(open(path + ".meta.json"))["keys"])
+    assert any(k.endswith("::bf16") for k in meta_keys)
+
+
+def test_cross_dtype_restore_still_allowed(tmp_path):
+    """The key-set validation compares STRUCTURE, not storage dtype: a bf16
+    checkpoint restores into an f32 tree (and vice versa) — the ::bf16
+    suffix is a storage detail the leaf loop already handles."""
+    path = str(tmp_path / "ck")
+    save(path, _tree(jnp.bfloat16), metadata={})
+    out = restore(path, _tree(jnp.float32))
+    assert jax.tree.leaves(out)[0].dtype == jnp.float32
+    path2 = str(tmp_path / "ck2")
+    save(path2, _tree(jnp.float32), metadata={})
+    out2 = restore(path2, _tree(jnp.bfloat16))
+    assert jax.tree.leaves(out2)[0].dtype == jnp.bfloat16
+
+
+def test_shard_suffix_layout_hook(tmp_path):
+    """Per-host shard files land at ``<path><suffix>.npz`` with ONE shared
+    metadata sidecar, and restore with the same suffix round-trips."""
+    path = str(tmp_path / "sharded")
+    tree = _tree(jnp.float32)
+    save(path, tree, metadata={"host": 0}, shard_suffix="-of2.0")
+    assert os.path.exists(path + "-of2.0.npz")
+    assert not os.path.exists(path + ".npz")
+    assert os.path.exists(path + ".meta.json")
+    out = restore(path, tree, shard_suffix="-of2.0")
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert load_metadata(path) == {"host": 0}
+
+
+def test_restore_rejects_mismatched_structure(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = _tree(jnp.float32)
+    save(path, tree, metadata={"arch": "unit"})
+    wrong = dict(tree)
+    wrong["extra_head"] = jnp.zeros((3,), jnp.float32)
+    with pytest.raises(ValueError, match="does not match"):
+        restore(path, wrong)
+    partial = {"embed": tree["embed"]}
+    with pytest.raises(ValueError, match="unexpected"):
+        restore(path, partial)
+
+
+def test_restore_expect_metadata_without_sidecar(tmp_path):
+    """expect_metadata against a checkpoint with no sidecar fails with the
+    validation error, not a FileNotFoundError from deep inside restore;
+    plain restore of such a checkpoint still works (older writers)."""
+    path = str(tmp_path / "ck")
+    tree = _tree(jnp.float32)
+    save(path, tree)
+    os.remove(path + ".meta.json")
+    restore(path, tree)                                 # no sidecar: fine
+    with pytest.raises(ValueError, match="no .meta.json"):
+        restore(path, tree, expect_metadata={"arch": "opt"})
+
+
+def test_restore_rejects_mismatched_metadata(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = _tree(jnp.float32)
+    save(path, tree, metadata={"arch": "opt-6.7b", "step": 100})
+    restore(path, tree, expect_metadata={"arch": "opt-6.7b"})   # matches
+    with pytest.raises(ValueError, match="metadata mismatch"):
+        restore(path, tree, expect_metadata={"arch": "yi-6b"})
+    with pytest.raises(ValueError, match="metadata mismatch"):
+        restore(path, tree, expect_metadata={"step": 200})
