@@ -1,0 +1,142 @@
+"""Throughput vs. static ACT:KV ratio, adaptive controller overlaid.
+
+Paper Fig. 12/13 analogue on the reduced configs, emitted as
+``BENCH_ratio.json``: a static sweep of the hybrid split on a "true"
+machine that deviates from the analytic prior, with the controller's
+trajectory and steady-state ratio marked.
+
+Scenario: the policy's prior is profiled on the nominal RTX4090 model; the
+true machine deviates in one lane — ``gather``: scatter-gather DMA
+efficiency collapse (analytic PCIe models mispredict under real
+scatter-gather traffic, arXiv 2601.19910), or ``gen``: KV-regeneration
+GEMMs far below nominal MFU.  Static ratios run directly on the true
+machine; the controller starts from the prior's Algorithm-1 ratio, refits
+online from the true machine's step timelines (``tag_busy`` lane samples),
+and converges to Algorithm 1 re-evaluated on the truth (DESIGN.md §9).
+
+``checks`` records the acceptance gate per row: controller steady-state
+throughput within 5% of the best static ratio and >=20% over the worst.
+The MHA config passes both; the GQA rows are kept as an honest negative —
+under GQA Algorithm 1's balance is not makespan-optimal (DESIGN.md §7.2),
+so its fixed point tracks the truth yet sits below the best static corner.
+"""
+import dataclasses
+import json
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.controller import ControllerConfig, HybridCacheController
+from repro.core.pipeline import MiniBatchSpec, simulate_step
+from repro.core.policy import device_act_blocks, host_block_allocation
+
+#: steady-state decode spec (per mini-batch: requests, context/request)
+N_REQ, CTX, N_MB = 8, 2048, 2
+SWEEP = [i / 20 for i in range(21)]
+CTL_ITERS = 60
+
+SCENARIOS = [
+    ("opt-6.7b-reduced", False, "gather", dict(gather_eff=0.08)),
+    ("opt-6.7b-reduced", False, "gen", dict(gen_mfu=0.03)),
+    ("yi-6b-reduced", True, "gather", dict(gather_eff=0.08)),
+    ("yi-6b-reduced", True, "gen", dict(gen_mfu=0.03)),
+]
+
+
+def _step(cfg, hw, frac):
+    """One steady-state decode iteration at host ACT fraction ``frac``."""
+    mbs = []
+    for _ in range(N_MB):
+        nr = N_REQ // N_MB
+        total = nr * CTX
+        act = int(total * frac)
+        mbs.append(MiniBatchSpec(nr, total - act, act, 0, ctx_tokens=CTX))
+    return simulate_step(cfg, hw, mbs)
+
+
+def _throughput(cfg, hw, frac):
+    return N_REQ / _step(cfg, hw, frac).total
+
+
+def sweep_one(name, generalized, scenario, hw_kwargs):
+    cfg = get_config(name)
+    prior_hw = cm.RTX4090
+    true_hw = dataclasses.replace(prior_hw, **hw_kwargs)
+
+    static = [{"frac": f, "throughput": _throughput(cfg, true_hw, f)}
+              for f in SWEEP]
+    best = max(static, key=lambda r: r["throughput"])
+    worst = min(static, key=lambda r: r["throughput"])
+
+    fits = cm.profile_cost_fns(cfg, prior_hw, noise=0.0)
+    gpu_blocks = device_act_blocks(cfg, prior_hw)
+    alloc0 = host_block_allocation(cfg, prior_hw, gpu_blocks, fits=fits,
+                                   generalized=generalized)
+    ctl = HybridCacheController(
+        cfg, prior_hw, alloc0, gpu_blocks, fits=fits, generalized=generalized,
+        ctl=ControllerConfig(min_samples=2, alpha=0.5, damping=10.0))
+    total_tokens = N_REQ * CTX
+    for _ in range(CTL_ITERS):
+        frac = ctl.alloc.act_fraction
+        res = _step(cfg, true_hw, frac)          # the "measured" timeline
+        act = int(total_tokens * frac)
+        ctl.observe([res], [total_tokens - act], [act])
+        ctl.alloc = ctl.update()
+
+    final = ctl.alloc.act_fraction
+    thr = _throughput(cfg, true_hw, final)
+    rec = {
+        "config": name,
+        "scenario": scenario,
+        "true_hw": hw_kwargs,
+        "generalized": generalized,
+        "static": static,
+        "controller": {
+            "start_frac": alloc0.act_fraction,
+            "final_frac": final,
+            "throughput": thr,
+            "updates": ctl.updates,
+            "migrated_blocks": ctl.migrated_blocks,
+            "trajectory": ctl.frac_history,
+            "fit_gen_slope_vs_prior": ctl.fit_gen.slope / ctl.prior_gen.slope,
+            "fit_load_slope_vs_prior": (ctl.fit_load.slope
+                                        / ctl.prior_load.slope),
+        },
+        "best_static": best,
+        "worst_static": worst,
+        "checks": {
+            "within_5pct_of_best": thr >= 0.95 * best["throughput"],
+            "ge_20pct_over_worst": thr >= 1.20 * worst["throughput"],
+        },
+    }
+    emit(f"ratio_sweep.{name}.{scenario}", 0.0,
+         f"f0={alloc0.act_fraction:.3f} f*={final:.3f} thr={thr:.1f} "
+         f"best(f={best['frac']:.2f})={best['throughput']:.1f} "
+         f"worst(f={worst['frac']:.2f})={worst['throughput']:.1f} "
+         f"to_best={thr / best['throughput']:.3f} "
+         f"over_worst={thr / worst['throughput']:.2f}")
+    return rec
+
+
+def run():
+    records = [sweep_one(*s) for s in SCENARIOS]
+    passing = [r for r in records
+               if all(r["checks"].values())]
+    out = {
+        "spec": {"n_requests": N_REQ, "ctx_tokens": CTX, "minibatches": N_MB,
+                 "sweep": SWEEP, "controller_iters": CTL_ITERS},
+        "records": records,
+        "acceptance": {
+            "any_config_within_5pct_and_20pct_over_worst": bool(passing),
+            "passing": [f"{r['config']}:{r['scenario']}" for r in passing],
+        },
+    }
+    with open("BENCH_ratio.json", "w") as f:
+        json.dump(out, f, indent=2)
+    emit("ratio_sweep.acceptance", 0.0,
+         f"passing={out['acceptance']['passing']}")
+    print("wrote BENCH_ratio.json")
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ MODULES = [
     "fig13_traffic",
     "fig14_gpu_util",
     "fig15_policy_ablation",
+    "ratio_sweep",
     "beyond_paper",
     "roofline",
     "kernel_bench",

@@ -1,8 +1,10 @@
 """HybridServe core: hybrid KV/ACT cache machinery (paper §4)."""
 from repro.core.blocks import (BLOCK_TOKENS, BlockManager, BlockType, Location,
                                act_block_bytes, kv_block_bytes)
+from repro.core.controller import ControllerConfig, HybridCacheController
 from repro.core.costmodel import (HARDWARE, RTX4090, TPU_V5E, HardwareSpec,
-                                  LinearFit, fit_linear, make_cost_fns,
+                                  LaneSample, LinearFit, damp_fit, ewma_refit,
+                                  fit_linear, fit_samples, make_cost_fns,
                                   profile_cost_fns, t_load_w)
 from repro.core.minibatch import (MiniBatch, RequestBlocks, balance_metric,
                                   f_b, form_minibatches)

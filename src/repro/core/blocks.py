@@ -50,11 +50,14 @@ class LogicalBlock:
 
 
 class PhysicalPool:
-    """Fixed-capacity allocator for one (kind, location) pool."""
+    """Allocator for one (kind, location) pool.  Capacity is fixed between
+    ``grow``/``shrink`` calls — the adaptive controller retags capacity
+    between the ACT and KV pools of a tier (DESIGN.md §9)."""
 
     def __init__(self, capacity_blocks: int):
         self.capacity = int(capacity_blocks)
         self._free = list(range(self.capacity - 1, -1, -1))
+        self._next_pbn = self.capacity          # unique ids across regrowth
         self.allocated = 0
 
     def alloc(self) -> Optional[int]:
@@ -70,6 +73,22 @@ class PhysicalPool:
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    def grow(self, n_blocks: int) -> None:
+        """Add ``n_blocks`` of fresh capacity (new, never-used pbns)."""
+        assert n_blocks >= 0
+        self._free.extend(range(self._next_pbn, self._next_pbn + n_blocks))
+        self._next_pbn += n_blocks
+        self.capacity += n_blocks
+
+    def shrink(self, n_blocks: int) -> int:
+        """Remove up to ``n_blocks`` of FREE capacity; allocated blocks are
+        never reclaimed.  Returns how many were actually removed."""
+        assert n_blocks >= 0
+        n = min(n_blocks, len(self._free))
+        del self._free[len(self._free) - n:]
+        self.capacity -= n
+        return n
 
 
 class BlockManager:
@@ -94,6 +113,9 @@ class BlockManager:
         # the offload runtime migrates blocks when its memory budget allows
         # device residency and spills them back when it doesn't.
         self.transitions: Dict[Tuple[BlockType, Location, Location], int] = {}
+        # KV<->ACT capacity retags, counted per (location, from, to): the
+        # adaptive controller's bounded role migrations (DESIGN.md §9).
+        self.retags: Dict[Tuple[Location, BlockType, BlockType], int] = {}
 
     # -- allocation ----------------------------------------------------------
     def new_request(self, rid: int) -> None:
@@ -157,6 +179,24 @@ class BlockManager:
         for i, blk in enumerate(self.tables[rid]):
             if blk.kind == kind and blk.location != new_loc:
                 moved += self.move_block(rid, i, new_loc)
+        return moved
+
+    # -- role retagging (adaptive controller) ---------------------------------
+    def retag_capacity(self, loc: Location, src: BlockType, dst: BlockType,
+                       n_blocks: int) -> int:
+        """Move up to ``n_blocks`` of FREE capacity from the ``src`` pool to
+        the ``dst`` pool of one tier — the accounting-plane form of the
+        controller re-deciding a block's role (KV vs ACT) between decode
+        groups.  Only free capacity moves, so live tables are never touched
+        and a retag can't strand data; the caller bounds ``n_blocks`` by its
+        per-step migration budget.  Returns how many blocks moved; moves are
+        counted in ``self.retags``."""
+        assert src != dst
+        moved = self.pools[(src, loc)].shrink(max(n_blocks, 0))
+        self.pools[(dst, loc)].grow(moved)
+        if moved:
+            key = (loc, src, dst)
+            self.retags[key] = self.retags.get(key, 0) + moved
         return moved
 
     # -- queries --------------------------------------------------------------

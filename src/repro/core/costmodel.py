@@ -172,3 +172,79 @@ def profile_cost_fns(cfg: ModelConfig, hw: HardwareSpec,
     t_kv_gen, t_load_kv, _ = make_cost_fns(cfg, hw)
     return (fit_linear(t_kv_gen, sample_tokens, noise, seed=1),
             fit_linear(t_load_kv, sample_tokens, noise, seed=2))
+
+
+# =============================================================================
+# online refit (controller feedback, DESIGN.md §9)
+# =============================================================================
+
+@dataclass(frozen=True)
+class LaneSample:
+    """One measured lane observation: ``seconds`` spent on ``n_tokens``
+    (per layer, batch-aggregate — the same units the fits are in)."""
+    n_tokens: float
+    seconds: float
+
+
+def fit_samples(samples: Sequence[LaneSample],
+                fallback: LinearFit) -> LinearFit:
+    """Least squares over measured (n_tokens, seconds) pairs.
+
+    Degenerate sample sets (fewer than two points, or all points at the
+    same n) can't pin down both coefficients; the slope is then estimated
+    through ``fallback``'s intercept, and with no usable signal at all the
+    fallback is returned unchanged."""
+    pts = [(float(s.n_tokens), float(s.seconds)) for s in samples
+           if s.n_tokens > 0 and s.seconds > 0 and np.isfinite(s.seconds)]
+    if not pts:
+        return fallback
+    ns = np.array([p[0] for p in pts])
+    ts = np.array([p[1] for p in pts])
+    if len(pts) < 2 or float(ns.max() - ns.min()) < 1e-9:
+        slope = max(float(((ts - fallback.intercept) / ns).mean()), 0.0)
+        return LinearFit(slope=slope, intercept=fallback.intercept, r2=0.0)
+    A = np.stack([ns, np.ones_like(ns)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, ts, rcond=None)
+    pred = A @ coef
+    ss_res = float(np.sum((ts - pred) ** 2))
+    ss_tot = float(np.sum((ts - ts.mean()) ** 2))
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    return LinearFit(slope=float(coef[0]), intercept=float(coef[1]), r2=r2)
+
+
+def damp_fit(fit: LinearFit, prior: LinearFit, damping: float,
+             intercept_scale_tokens: float = 256.0) -> LinearFit:
+    """Clamp a refit into the trust region around the analytic prior.
+
+    The slope stays within a multiplicative ``damping`` factor of the
+    prior's; the intercept within an additive band sized by the prior's
+    cost at ``intercept_scale_tokens`` (intercepts fit near zero, so a
+    multiplicative band would pin them there).  ``damping`` must be >= 1;
+    the prior itself is always inside its own trust region, which is what
+    makes the analytic allocation a fixed point of the controller."""
+    assert damping >= 1.0
+    lo, hi = prior.slope / damping, prior.slope * damping
+    slope = float(np.clip(fit.slope, min(lo, hi), max(lo, hi)))
+    band = (damping - 1.0) * (abs(prior.intercept)
+                              + abs(prior.slope) * intercept_scale_tokens)
+    intercept = float(np.clip(fit.intercept, prior.intercept - band,
+                              prior.intercept + band))
+    return LinearFit(slope=slope, intercept=intercept, r2=fit.r2)
+
+
+def ewma_refit(current: LinearFit, prior: LinearFit,
+               samples: Sequence[LaneSample], *, alpha: float,
+               damping: float,
+               intercept_scale_tokens: float = 256.0) -> LinearFit:
+    """Exponentially-weighted online refit with the analytic fit as prior.
+
+    Blends the least-squares fit of the new measurements into ``current``
+    with weight ``alpha``, then clamps the result into ``damp_fit``'s trust
+    region around ``prior``.  Samples that exactly match ``current`` leave
+    it unchanged (the controller's fixed-point property)."""
+    fitted = fit_samples(samples, fallback=current)
+    blended = LinearFit(
+        slope=(1.0 - alpha) * current.slope + alpha * fitted.slope,
+        intercept=(1.0 - alpha) * current.intercept + alpha * fitted.intercept,
+        r2=fitted.r2)
+    return damp_fit(blended, prior, damping, intercept_scale_tokens)

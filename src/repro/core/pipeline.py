@@ -49,6 +49,10 @@ class TimelineResult:
     gpu_busy: float
     traffic: Dict[str, float]           # bytes by category
     finish: List[float] = field(default_factory=list)
+    # busy seconds by task tag ("w"/"kv"/"act"/"gen"/"fwd"/"st") — the
+    # per-lane samples the adaptive controller refits the cost model from
+    # (DESIGN.md §9); simulated and measured timelines both populate it.
+    tag_busy: Dict[str, float] = field(default_factory=dict)
 
     @property
     def gpu_util(self) -> float:
@@ -67,6 +71,7 @@ def run_timeline(tasks: List[LaneTask]) -> TimelineResult:
     """
     lane_free = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0}
     busy = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0}
+    tag_busy: Dict[str, float] = {}
     finish: List[float] = [0.0] * len(tasks)
     traffic: Dict[str, float] = {}
     for i, t in enumerate(tasks):
@@ -75,10 +80,13 @@ def run_timeline(tasks: List[LaneTask]) -> TimelineResult:
         end = start + t.dur
         lane_free[t.lane] = end
         busy[t.lane] += t.dur
+        if t.tag:
+            tag_busy[t.tag] = tag_busy.get(t.tag, 0.0) + t.dur
         finish[i] = end
     total = max(lane_free.values())
     return TimelineResult(total=total, pcie_busy=busy["pcie"],
-                          gpu_busy=busy["gpu"], traffic=traffic, finish=finish)
+                          gpu_busy=busy["gpu"], traffic=traffic, finish=finish,
+                          tag_busy=tag_busy)
 
 
 # =============================================================================
@@ -109,6 +117,7 @@ def _run_timeline_arrays(tasks: List[LaneTask], n: int):
     independent timelines at once.  -> (total, busy, finish), all (n,)."""
     lane_free = {"pcie": np.zeros(n), "pcie_up": np.zeros(n), "gpu": np.zeros(n)}
     busy = {"pcie": np.zeros(n), "pcie_up": np.zeros(n), "gpu": np.zeros(n)}
+    tag_busy: Dict[str, np.ndarray] = {}
     finish: List[np.ndarray] = [np.zeros(n)] * len(tasks)
     for i, t in enumerate(tasks):
         ready = np.zeros(n)
@@ -118,10 +127,12 @@ def _run_timeline_arrays(tasks: List[LaneTask], n: int):
         end = start + t.dur
         lane_free[t.lane] = end
         busy[t.lane] = busy[t.lane] + t.dur
+        if t.tag:
+            tag_busy[t.tag] = tag_busy.get(t.tag, np.zeros(n)) + t.dur
         finish[i] = end
     total = np.maximum(np.maximum(lane_free["pcie"], lane_free["pcie_up"]),
                        lane_free["gpu"])
-    return total, busy, finish
+    return total, busy, finish, tag_busy
 
 
 def simulate_step(cfg: ModelConfig, hw: cm.HardwareSpec,
@@ -216,13 +227,14 @@ def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
                 deps=[("fwd", l, m)], tag="st")
             traffic["store"] += st_bytes
 
-    total, busy, finish = _run_timeline_arrays(tasks, n)
+    total, busy, finish, tag_busy = _run_timeline_arrays(tasks, n)
     return [
         TimelineResult(
             total=float(total[s]), pcie_busy=float(busy["pcie"][s]),
             gpu_busy=float(busy["gpu"][s]),
             traffic={k: float(v[s]) for k, v in traffic.items()},
-            finish=[float(fi[s]) for fi in finish])
+            finish=[float(fi[s]) for fi in finish],
+            tag_busy={k: float(v[s]) for k, v in tag_busy.items()})
         for s in range(n)
     ]
 

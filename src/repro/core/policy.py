@@ -24,11 +24,17 @@ class HostAllocation:
     kv_init: int
 
     @property
-    def ratio(self) -> float:
-        """#ACT_Host : #KV_Host as a float (Eq. 11 driver)."""
-        if self.kv_blocks == 0:
-            return float("inf")
-        return self.act_blocks / self.kv_blocks
+    def total_blocks(self) -> int:
+        return self.act_blocks + self.kv_blocks
+
+    @property
+    def act_fraction(self) -> float:
+        """#ACT_Host / (#ACT_Host + #KV_Host).  Total-relative, so it is
+        finite at both corners (the old ``ratio`` property returned ``inf``
+        for the all-ACT allocation and poisoned float plumbing downstream;
+        ratio decisions now compare the (act_blocks, kv_blocks) pair in
+        integer arithmetic — see ``next_block_kind``)."""
+        return self.act_blocks / self.total_blocks if self.total_blocks else 0.0
 
 
 def _blocks_to_tokens(n_blocks: float) -> float:
@@ -74,9 +80,12 @@ def alloc_remaining(cfg: ModelConfig, hw: HardwareSpec,
     lk = fit_load.slope * BLOCK_TOKENS
     c = fit_load.intercept - fit_gen.intercept
     if generalized:
-        # la per block: ACT bytes over the (scattered-gather) link
-        la = BLOCK_TOKENS * cfg.act_bytes_per_token() / (
-            hw.host_link_bw * hw.gather_eff)
+        # la per block: ACT bytes over the (scattered-gather) link.  Derived
+        # from the FITTED KV-load slope (same link, scaled by the ACT:KV
+        # byte ratio) rather than the analytic hw constants, so an online
+        # refit of fit_load re-prices ACT loads consistently (DESIGN.md §9).
+        la = (fit_load.slope * BLOCK_TOKENS
+              * cfg.act_bytes_per_token() / cfg.kv_bytes_per_token())
         ga = ga + la
     # solve: S_act*a + S_kv*k = M_rem ;  ga*a - lk*k = c
     A = np.array([[S_act, S_kv], [ga, -lk]], float)
@@ -135,16 +144,22 @@ def policy_act_ratio(cfg: ModelConfig, hw: HardwareSpec,
 
 def next_block_kind(alloc: HostAllocation, n_act: int, n_kv: int) -> str:
     """During generation, keep the running ratio at the host ratio (Eq. 11):
-    'if the ratio is 3:1 and five ACT / two KV blocks exist, allocate ACT'."""
+    'if the ratio is 3:1 and five ACT / two KV blocks exist, allocate ACT'.
+
+    The comparison is the float rule |r_act - A/K| <= |r_kv - A/K| with both
+    sides cross-multiplied by the (positive) denominators — exact integer
+    arithmetic on the (act_blocks, kv_blocks) pair, with no ``A/K`` float
+    that blows up at the all-ACT corner."""
     if alloc.kv_blocks == 0:
         return "act"
     if alloc.act_blocks == 0:
         return "kv"
-    # choose the kind whose addition brings the ratio closest to target
-    target = alloc.ratio
-    r_act = (n_act + 1) / max(n_kv, 1)
-    r_kv = (n_act) / (n_kv + 1)
-    return "act" if abs(r_act - target) <= abs(r_kv - target) else "kv"
+    A, K = alloc.act_blocks, alloc.kv_blocks
+    m = max(n_kv, 1)
+    # r_act = (n_act+1)/m vs target A/K, scaled by m*K; r_kv analogous
+    d_act = abs((n_act + 1) * K - A * m) * (n_kv + 1)
+    d_kv = abs(n_act * K - A * (n_kv + 1)) * m
+    return "act" if d_act <= d_kv else "kv"
 
 
 def store_act_schedule(alloc: HostAllocation, act_tokens0, kv_tokens0,
@@ -173,13 +188,15 @@ def store_act_schedule(alloc: HostAllocation, act_tokens0, kv_tokens0,
         return out
     if alloc.act_blocks == 0:
         return out
-    target = alloc.ratio
+    A, K = alloc.act_blocks, alloc.kv_blocks
     for s in range(n_steps):                      # vectorized over B
         ab = -(-at // BLOCK_TOKENS)               # ceil: blocks of each kind
         kb = -(-kt // BLOCK_TOKENS)
-        r_act = (ab + 1) / np.maximum(kb, 1)
-        r_kv = ab / (kb + 1)
-        store = np.abs(r_act - target) <= np.abs(r_kv - target)
+        m = np.maximum(kb, 1)
+        # next_block_kind's integer comparison, elementwise over the batch
+        d_act = np.abs((ab + 1) * K - A * m) * (kb + 1)
+        d_kv = np.abs(ab * K - A * (kb + 1)) * m
+        store = d_act <= d_kv
         out[:, s] = store
         at += store
         kt += ~store

@@ -354,6 +354,16 @@ class OffloadExecutor:
         return logits, new_cache
 
     # ================================================================== misc
+    def drain_timeline(self, tag: Optional[str] = "decode"):
+        """Collect-and-reset the measured per-step ``TimelineResult``s (the
+        controller-consumable surface: each result carries per-tag lane
+        seconds in ``tag_busy`` next to the traffic bytes, so a consumer can
+        regress (tokens, seconds) per lane without touching spans).  Note
+        the measured GPU spans fuse KV Gen into the layer forward ("fwd"
+        tag); ``HybridCacheController.observe`` attributes the gen share
+        from the simulated prediction (DESIGN.md §9)."""
+        return self.timeline.drain(tag)
+
     def close(self) -> None:
         self.streamer.close()
 

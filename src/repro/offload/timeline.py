@@ -76,17 +76,21 @@ class MeasuredTimeline:
         self._cur: Optional[_Step] = None
 
     # ------------------------------------------------------------------ steps
-    def begin_step(self, tag: str = "decode") -> None:
+    def begin_step(self, tag: str = "decode",
+                   now: Optional[float] = None) -> None:
+        """``now`` overrides the wall clock (golden-trace tests drive the
+        timeline with synthetic timestamps; production callers omit it)."""
         with self._lock:
             if self._cur is not None:
-                self._cur.end = time.perf_counter()
+                self._cur.end = time.perf_counter() if now is None else now
                 self._steps.append(self._cur)
-            self._cur = _Step(tag=tag, start=time.perf_counter())
+            self._cur = _Step(
+                tag=tag, start=time.perf_counter() if now is None else now)
 
-    def end_step(self) -> None:
+    def end_step(self, now: Optional[float] = None) -> None:
         with self._lock:
             if self._cur is not None:
-                self._cur.end = time.perf_counter()
+                self._cur.end = time.perf_counter() if now is None else now
                 self._steps.append(self._cur)
                 self._cur = None
 
@@ -121,11 +125,13 @@ class MeasuredTimeline:
             steps = [s for s in self._steps if tag is None or s.tag == tag]
         for s in steps:
             busy = {l: 0.0 for l in LANES}
+            tag_busy: dict = {}
             traffic = {k: 0.0 for k in TRAFFIC_TAGS}
             finish = []
             end = s.end
             for sp in s.spans:
                 busy[sp.lane] += sp.dur
+                tag_busy[sp.tag] = tag_busy.get(sp.tag, 0.0) + sp.dur
                 cat = _TAG_TO_TRAFFIC.get(sp.tag)
                 if cat is not None:
                     traffic[cat] += sp.nbytes
@@ -133,7 +139,8 @@ class MeasuredTimeline:
                 end = max(end, sp.end)
             out.append(TimelineResult(
                 total=end - s.start, pcie_busy=busy["pcie"],
-                gpu_busy=busy["gpu"], traffic=traffic, finish=finish))
+                gpu_busy=busy["gpu"], traffic=traffic, finish=finish,
+                tag_busy=tag_busy))
         return out
 
     def step_tags(self) -> List[str]:

@@ -36,10 +36,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.offload import OffloadBudget, offload_budget
-from repro.core import (BLOCK_TOKENS, BlockManager, BlockType, Location,
-                        HostAllocation, RequestBlocks, device_act_blocks,
-                        form_minibatches, host_block_allocation,
-                        profile_cost_fns, store_act_schedule)
+from repro.core import (BLOCK_TOKENS, BlockManager, BlockType,
+                        ControllerConfig, HostAllocation,
+                        HybridCacheController, Location, RequestBlocks,
+                        device_act_blocks, form_minibatches,
+                        host_block_allocation, profile_cost_fns,
+                        store_act_schedule)
 from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, TimelineResult, simulate_steps
 from repro.data.pipeline import Request
@@ -78,10 +80,20 @@ class HybridServeEngine:
                  mode: str = "hybrid", max_minibatch: int = 4,
                  kv_cap: int = 512, act_cap: int = 512, seed: int = 0,
                  generalized: bool = False, offload: bool = False,
-                 budget: Optional[OffloadBudget] = None):
+                 budget: Optional[OffloadBudget] = None,
+                 adaptive: bool = False,
+                 ctl: Optional[ControllerConfig] = None):
         """generalized=True uses the byte-ratio-aware Algorithm-1 variant
         (DESIGN.md §7) — recommended for GQA models; False reproduces the
         paper's policy exactly.
+
+        adaptive=True closes the measurement->policy loop (DESIGN.md §9):
+        between jit groups the ``HybridCacheController`` refits the cost
+        model from the group's lane timelines (measured under offload, else
+        the simulated predictions) and re-balances the host ACT:KV split by
+        bounded role retags of the BlockManager's free capacity.  Purely
+        host-side on already-materialised results — the decode hot path
+        gains no device syncs.  Tokens stay exact at any ratio.
 
         offload=True runs the host-offload runtime (DESIGN.md §8): layer
         weights stream from pinned host pools through the double-buffered
@@ -108,8 +120,17 @@ class HybridServeEngine:
         elif mode == "act":
             self.alloc = dataclasses.replace(self.alloc, kv_blocks=0, act_blocks=max(
                 self.alloc.act_blocks, 1))
-        total = self.alloc.act_blocks + self.alloc.kv_blocks
-        self.act_frac = self.alloc.act_blocks / total if total else 0.0
+        self.act_frac = self.alloc.act_fraction
+
+        self.controller: Optional[HybridCacheController] = None
+        self._last_obs = None
+        if adaptive:
+            assert mode == "hybrid", "adaptive controller re-balances the " \
+                "hybrid split; kv/act baselines pin the ratio"
+            self.controller = HybridCacheController(
+                cfg, hw, self.alloc, device_act_blocks(cfg, hw),
+                fits=self.fits, generalized=generalized,
+                ctl=ctl if ctl is not None else ControllerConfig())
 
         # device KV pool: generous when device-resident; budget-derived under
         # offload so tight (reduced) budgets force real spill to the host arena
@@ -199,6 +220,7 @@ class HybridServeEngine:
         outputs: Dict[int, np.ndarray] = {}
         for group in self.plan_groups(requests):
             out, st = self._run_group(group)
+            self._controller_step()
             outputs.update(out)
             stats.generated_tokens += st.generated_tokens
             stats.steps += st.steps
@@ -210,6 +232,37 @@ class HybridServeEngine:
             for k, v in st.traffic.items():
                 stats.traffic[k] = stats.traffic.get(k, 0.0) + v
         return outputs, stats
+
+    # --- adaptive controller hook (between jit groups) ------------------------
+    def _controller_step(self) -> None:
+        """Feed the last group's lane timelines to the controller and apply
+        its bounded re-balance.  Runs between jit groups on host-side data
+        that the stats path already materialised — no device syncs."""
+        if self.controller is None or self._last_obs is None:
+            return
+        results, sim, kv_tok, act_tok = self._last_obs
+        self._last_obs = None
+        self.controller.observe(results, kv_tok, act_tok, sim=sim)
+        self._apply_alloc(self.controller.update())
+
+    def _apply_alloc(self, new_alloc: HostAllocation) -> None:
+        """Retag host pool capacity toward ``new_alloc`` and commit whatever
+        actually moved (free capacity only; live blocks never stranded)."""
+        delta = new_alloc.act_blocks - self.alloc.act_blocks
+        if delta > 0:
+            moved = self.blockman.retag_capacity(
+                Location.HOST, BlockType.KV, BlockType.ACT, delta)
+        elif delta < 0:
+            moved = -self.blockman.retag_capacity(
+                Location.HOST, BlockType.ACT, BlockType.KV, -delta)
+        else:
+            moved = 0
+        self.alloc = dataclasses.replace(
+            self.alloc, act_blocks=self.alloc.act_blocks + moved,
+            kv_blocks=self.alloc.kv_blocks - moved)
+        self.act_frac = self.alloc.act_fraction
+        if self.controller is not None:
+            self.controller.alloc = self.alloc
 
     # --- one jit-width group of requests -------------------------------------
     def _run_group(self, group: List[Request]) -> Tuple[Dict[int, np.ndarray], GenStats]:
@@ -288,6 +341,7 @@ class HybridServeEngine:
             act0 = np.asarray(pbs) - kv_keep
             sched = store_act_schedule(self.alloc, act0, kv_keep, max_new)
 
+            measured: List[TimelineResult] = []
             # offload: decide residency for the group's KV blocks up front.
             # If the device pool (sized by the config-driven budget) can hold
             # the group's final KV block count, migrate prefill blocks to
@@ -317,7 +371,7 @@ class HybridServeEngine:
                     gen, _ = self.executor.decode_loop(
                         cur, cache, sched.T, spill_region=region)
                     stats.device_calls += self.executor.dispatches - d0
-                    measured = self.executor.timeline.drain("decode")
+                    measured = self.executor.drain_timeline("decode")
                     self.measured_steps += measured
                     stats.measured_time += sum(m.total for m in measured)
                     stats.measured_gpu_busy += sum(m.gpu_busy
@@ -362,11 +416,19 @@ class HybridServeEngine:
                                     ctx_tokens=int(np.mean(np.asarray(pbs)
                                                            + steps_ahead[s])))]
                      for s in range(max_new)]
-            for res in simulate_steps(cfg, self.hw, specs):
+            sim_results = simulate_steps(cfg, self.hw, specs)
+            for res in sim_results:
                 stats.sim_time += res.total
                 stats.sim_gpu_busy += res.gpu_busy
                 for k, v in res.traffic.items():
                     stats.traffic[k] = stats.traffic.get(k, 0.0) + v
+            if self.controller is not None:
+                # controller food: measured lane times where they exist
+                # (offload runtime), the simulated prediction otherwise,
+                # with the schedule's per-step host token counts
+                self._last_obs = (measured if self.executor is not None
+                                  else sim_results, sim_results,
+                                  kv_tok.tolist(), act_tok.tolist())
 
             out = {}
             for bi, r in enumerate(group):

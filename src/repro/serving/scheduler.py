@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (BLOCK_TOKENS, device_act_blocks, host_block_allocation,
+from repro.core import (BLOCK_TOKENS, ControllerConfig, HybridCacheController,
+                        device_act_blocks, host_block_allocation,
                         next_block_kind, profile_cost_fns)
 from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, simulate_step
@@ -51,6 +52,7 @@ class ServeStats:
     sim_time: float = 0.0
     ttft: Dict[int, float] = field(default_factory=dict)
     tbt: Dict[int, float] = field(default_factory=dict)
+    completed_at: Dict[int, int] = field(default_factory=dict)  # rid -> step
 
     @property
     def throughput(self) -> float:
@@ -61,19 +63,37 @@ class ContinuousBatchingServer:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  kv_cap: int = 256, act_cap: int = 256,
                  hw: cm.HardwareSpec = cm.TPU_V5E, generalized: bool = True,
-                 offload: bool = False, prefetch_depth: int = 1):
+                 offload: bool = False, prefetch_depth: int = 1,
+                 adaptive: bool = False,
+                 ctl: Optional[ControllerConfig] = None):
         """offload=True swaps the jitted monolithic decode step for the
         layer-streamed offload executor (DESIGN.md §8): weights arrive over
         the copy stream each iteration while the slots' KV Gen runs, and
         ``self.measured_steps`` exposes the measured per-iteration lane
-        timelines.  Tokens are identical either way."""
+        timelines.  Tokens are identical either way.
+
+        adaptive=True runs the hybrid-cache controller between iterations
+        (DESIGN.md §9): per-iteration lane timelines (measured under
+        offload, simulated otherwise) refit the cost model, and the running
+        ACT:KV target that drives per-slot store decisions follows the
+        refit allocation.  Host-side only; the decode step is unchanged."""
         assert M.family(cfg) == "uniform"
         self.cfg, self.params, self.hw = cfg, params, hw
         self.n_slots, self.kv_cap, self.act_cap = slots, kv_cap, act_cap
         self.alloc = host_block_allocation(
             cfg, hw, device_act_blocks(cfg, hw), generalized=generalized)
-        total = self.alloc.act_blocks + self.alloc.kv_blocks
-        self.act_frac = self.alloc.act_blocks / total if total else 0.0
+        self.act_frac = self.alloc.act_fraction
+        self.controller = None
+        if adaptive:
+            self.controller = HybridCacheController(
+                cfg, hw, self.alloc, device_act_blocks(cfg, hw),
+                generalized=generalized,
+                ctl=ctl if ctl is not None else
+                ControllerConfig(update_every=4))
+        # offload mode: per-iteration timelines drained out of the executor
+        # as they complete (keeping its span store bounded) and accumulated
+        # here for the measured_steps property
+        self._measured: List = []
         self.cache = M.init_hybrid_cache(cfg, slots, kv_cap, act_cap)
         self.slots = [SlotState() for _ in range(slots)]
         self.executor = None
@@ -93,7 +113,9 @@ class ContinuousBatchingServer:
     @property
     def measured_steps(self):
         """Measured per-iteration timelines (offload mode; else empty)."""
-        return self.executor.timeline.results("decode") if self.executor else []
+        if self.executor is None:
+            return []
+        return self._measured + self.executor.timeline.results("decode")
 
     def close(self) -> None:
         """Shut down the offload executor (no-op in device-resident mode).
@@ -136,18 +158,40 @@ class ContinuousBatchingServer:
         self._cur_tok[slot] = int(np.asarray(jnp.argmax(lg[0, -1])))
 
     # ---------------------------------------------------------------- serving
-    def run(self, requests: List[Request]) -> (Dict[int, np.ndarray], ServeStats):
-        queue = list(requests)
+    def run(self, requests: List[Request],
+            arrival_steps: Optional[List[int]] = None
+            ) -> (Dict[int, np.ndarray], ServeStats):
+        """Serve ``requests`` through the slot pool.
+
+        arrival_steps: optional per-request admission step, aligned with
+        ``requests`` — request i joins the queue once the iteration index
+        reaches ``arrival_steps[i]`` (the soak harness's randomised open-loop
+        traffic).  Omitted, every request is queued up front (closed loop).
+        """
+        if arrival_steps is None:
+            pending: List = []
+            queue = list(requests)
+        else:
+            assert len(arrival_steps) == len(requests)
+            order = sorted(range(len(requests)),
+                           key=lambda i: (arrival_steps[i], i))
+            pending = [(int(arrival_steps[i]), requests[i]) for i in order]
+            queue = []
         out: Dict[int, np.ndarray] = {}
         stats = ServeStats()
         step_idx = 0
-        while queue or any(s.active for s in self.slots):
+        while queue or pending or any(s.active for s in self.slots):
+            while pending and pending[0][0] <= step_idx:
+                queue.append(pending.pop(0)[1])
             # admit into free slots
             for i, s in enumerate(self.slots):
                 if not s.active and queue:
                     self._admit(i, queue.pop(0), step_idx)
             active = np.array([s.active for s in self.slots])
             if not active.any():
+                if pending:                  # idle gap before the next arrival
+                    step_idx += 1
+                    continue
                 break
             # per-slot store-type decision (Eq. 11 running ratio)
             store = np.zeros((self.n_slots,), bool)
@@ -173,6 +217,21 @@ class ContinuousBatchingServer:
                                                act_tok, 0, ctx_tokens=ctx)])
             stats.sim_time += res.total
 
+            meas: List = []
+            if self.executor is not None:
+                # drain completed iteration timelines so the executor's
+                # span store stays bounded over a long-lived server
+                meas = self.executor.drain_timeline("decode")
+                self._measured.extend(meas)
+            if self.controller is not None:
+                # measured iteration timelines where they exist (offload),
+                # the simulated prediction otherwise; host-side data only
+                self.controller.observe(meas if meas else [res],
+                                        [kv_tok], [act_tok], sim=[res])
+                self.alloc = self.controller.update()
+                self.controller.alloc = self.alloc
+                self.act_frac = self.alloc.act_fraction
+
             for i, s in enumerate(self.slots):
                 if not s.active:
                     continue
@@ -186,6 +245,7 @@ class ContinuousBatchingServer:
                 if s.remaining == 0:
                     out[s.rid] = np.asarray(s.generated, np.int32)
                     stats.tbt[s.rid] = stats.sim_time / max(len(s.generated), 1)
+                    stats.completed_at[s.rid] = step_idx
                     # free the slot (cache rows are overwritten on admit)
                     self.slots[i] = SlotState()
             stats.steps += 1

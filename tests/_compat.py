@@ -24,6 +24,15 @@ try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
+
+    # Pinned profile so real-hypothesis runs are as deterministic as the
+    # fallback sampler below (which derives its seed from the test name):
+    # derandomize fixes the example stream per test, deadline is off
+    # because CPU-jax jit compiles inside examples blow any wall-clock
+    # budget on first execution.
+    settings.register_profile("repro", derandomize=True, deadline=None,
+                              print_blob=False)
+    settings.load_profile("repro")
 except ImportError:                                # pragma: no cover
     HAVE_HYPOTHESIS = False
 

@@ -12,5 +12,21 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--snapshot-update", action="store_true", default=False,
+        help="rewrite golden snapshot files (tests/golden/) instead of "
+             "comparing against them")
+
+
+@pytest.fixture
+def snapshot_update(request):
+    return request.config.getoption("--snapshot-update")
+
+
 def pytest_configure(config):
     np.set_printoptions(precision=4, suppress=True)
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tier-1 tests (soak, offload sweeps); the CI "
+        "fast lane deselects them with -m 'not slow'")

@@ -1,0 +1,218 @@
+"""Adaptive hybrid-cache controller: refit damping, conservation, bounded
+migration, and the Algorithm-1 fixed point (DESIGN.md §9).
+
+Property style via tests/_compat (hypothesis when available, the seeded
+fallback sampler otherwise — both deterministic).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.blocks import BlockManager, BlockType, Location
+from repro.core.controller import ControllerConfig, HybridCacheController
+from repro.core.costmodel import (LaneSample, LinearFit, damp_fit,
+                                  ewma_refit, fit_samples)
+from repro.core.pipeline import MiniBatchSpec, simulate_steps
+from repro.core.policy import (HostAllocation, device_act_blocks,
+                               host_block_allocation)
+
+CFG = get_config("opt-6.7b-reduced")
+HW = cm.RTX4090
+FITS = cm.profile_cost_fns(CFG, HW, noise=0.0)
+
+
+def _controller(ctl=None, generalized=False, cfg=CFG, hw=HW, fits=FITS):
+    gpu = device_act_blocks(cfg, hw)
+    alloc = host_block_allocation(cfg, hw, gpu, fits=fits,
+                                  generalized=generalized)
+    return HybridCacheController(cfg, hw, alloc, gpu, fits=fits,
+                                 generalized=generalized,
+                                 ctl=ctl if ctl else ControllerConfig())
+
+
+def _sim_step(hw, kv_tokens, act_tokens, n_req=4, ctx=512):
+    return simulate_steps(CFG, hw, [[MiniBatchSpec(
+        n_req, int(kv_tokens), int(act_tokens), 0, ctx_tokens=ctx)]])[0]
+
+
+# =============================================================================
+# refit stays within the configured damping bounds
+# =============================================================================
+
+@settings(max_examples=30, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), noise=st.floats(0.0, 1.0),
+       damping=st.floats(1.0, 16.0), seed=st.integers(0, 10_000))
+def test_refit_within_damping_bounds(scale, noise, damping, seed):
+    """Arbitrarily wild samples (slope off by up to 1000x, heavy noise) can
+    tilt the refit by at most the damping factor around the prior."""
+    prior = FITS[1]
+    rng = np.random.default_rng(seed)
+    ns = rng.uniform(64, 8192, size=12)
+    ts = np.abs(prior(ns) * scale * (1 + noise * rng.standard_normal(12)))
+    fit = ewma_refit(prior, prior,
+                     [LaneSample(n, t) for n, t in zip(ns, ts)],
+                     alpha=1.0, damping=damping)
+    assert prior.slope / damping - 1e-12 <= fit.slope \
+        <= prior.slope * damping + 1e-12
+    band = (damping - 1.0) * (abs(prior.intercept)
+                              + abs(prior.slope) * 256.0)
+    assert abs(fit.intercept - prior.intercept) <= band + 1e-12
+
+
+def test_refit_damping_one_pins_prior():
+    """damping=1.0 is a degenerate trust region: the refit can never move."""
+    prior = FITS[0]
+    wild = [LaneSample(100.0, 99.0), LaneSample(5000.0, 0.5)]
+    fit = ewma_refit(prior, prior, wild, alpha=1.0, damping=1.0)
+    assert fit.slope == pytest.approx(prior.slope)
+    assert fit.intercept == pytest.approx(prior.intercept)
+
+
+def test_refit_no_signal_no_drift():
+    """Empty and degenerate sample sets leave the current fit unchanged
+    (fit_samples falls back) — silence is not evidence."""
+    prior = FITS[1]
+    assert fit_samples([], prior) == prior
+    fit = ewma_refit(prior, prior, [], alpha=0.9, damping=8.0)
+    assert fit.slope == pytest.approx(prior.slope)
+    # single-n sample sets can still move the slope, through the intercept
+    one_n = [LaneSample(1024.0, float(prior(1024.0)) * 2)] * 3
+    fit2 = ewma_refit(prior, prior, one_n, alpha=1.0, damping=8.0)
+    assert fit2.slope > prior.slope
+
+
+# =============================================================================
+# recomputed allocation conserves total host blocks
+# =============================================================================
+
+@settings(max_examples=25, deadline=None)
+@given(gen_x=st.floats(0.05, 20.0), load_x=st.floats(0.05, 20.0))
+def test_retarget_conserves_total_host_blocks(gen_x, load_x):
+    """Whatever the refit does to the lane slopes, the retargeted
+    allocation re-expresses Algorithm 1's fraction on the engine's fixed
+    host-block total: act + kv is conserved exactly."""
+    ctl = _controller(ControllerConfig(min_samples=1, damping=1e9))
+    ctl.fit_gen = dataclasses.replace(ctl.fit_gen,
+                                      slope=ctl.fit_gen.slope * gen_x)
+    ctl.fit_load = dataclasses.replace(ctl.fit_load,
+                                       slope=ctl.fit_load.slope * load_x)
+    target = ctl.target_allocation()
+    assert target.act_blocks + target.kv_blocks == ctl.total_host
+    assert target.act_blocks >= 0 and target.kv_blocks >= 0
+
+
+# =============================================================================
+# migration never exceeds the per-step bound
+# =============================================================================
+
+@settings(max_examples=15, deadline=None)
+@given(bound=st.integers(1, 5000), scale=st.floats(0.1, 10.0),
+       seed=st.integers(0, 1000))
+def test_update_bounded_migration(bound, scale, seed):
+    """Each update() steps the applied allocation by at most the configured
+    absolute bound, however far away the target is."""
+    ctl = _controller(ControllerConfig(min_samples=1, migrate_bound=bound,
+                                       alpha=1.0, damping=100.0))
+    rng = np.random.default_rng(seed)
+    true_hw = dataclasses.replace(HW, gather_eff=HW.gather_eff * scale)
+    for _ in range(5):
+        kv, act = int(rng.integers(500, 5000)), int(rng.integers(500, 5000))
+        res = _sim_step(true_hw, kv, act)
+        ctl.observe([res], [kv], [act])
+        before = ctl.alloc.act_blocks
+        new = ctl.update()
+        assert abs(new.act_blocks - before) <= bound
+        assert new.act_blocks + new.kv_blocks == ctl.total_host
+        ctl.alloc = new
+
+
+def test_blockmanager_retag_respects_free_capacity():
+    """retag_capacity moves only FREE capacity: allocated blocks stay, the
+    tier's total capacity is conserved, and moves are counted."""
+    bm = BlockManager(CFG, host_kv_blocks=10, host_act_blocks=4,
+                      dev_kv_blocks=0, dev_act_blocks=0)
+    bm.new_request(0)
+    for _ in range(3 * 16):                      # 3 allocated KV blocks
+        assert bm.append_token(0, BlockType.KV) is not None
+    kv = bm.pools[(BlockType.KV, Location.HOST)]
+    act = bm.pools[(BlockType.ACT, Location.HOST)]
+    moved = bm.retag_capacity(Location.HOST, BlockType.KV, BlockType.ACT, 99)
+    assert moved == 7                            # 10 - 3 allocated
+    assert kv.capacity == 3 and act.capacity == 11
+    assert kv.capacity + act.capacity == 14      # tier total conserved
+    assert bm.retags[(Location.HOST, BlockType.KV, BlockType.ACT)] == 7
+    # the retagged capacity is genuinely usable on the ACT side
+    got = [act.alloc() for _ in range(11)]
+    assert all(p is not None for p in got) and act.alloc() is None
+    for p in got:
+        act.free(p)
+    bm.free_request(0)
+    assert kv.allocated == 0 and kv.free_blocks == 3
+
+
+# =============================================================================
+# fixed point: analytic timelines -> the static Algorithm-1 ratio
+# =============================================================================
+
+@pytest.mark.parametrize("generalized", [False, True])
+def test_fixed_point_on_analytic_timelines(generalized):
+    """Feeding the controller timelines generated by the SAME analytic
+    model its prior was fitted on must leave the allocation at the static
+    Algorithm-1 ratio — the adaptive system strictly generalizes the
+    paper's one-shot policy."""
+    ctl = _controller(ControllerConfig(min_samples=2, alpha=0.9),
+                      generalized=generalized)
+    start = ctl.alloc
+    for s in range(12):
+        kv, act = 900 + 40 * s, 600 + 25 * s
+        res = _sim_step(HW, kv, act)
+        ctl.observe([res], [kv], [act])
+        ctl.alloc = ctl.update()
+    assert ctl.updates >= 10
+    assert ctl.alloc.act_blocks == start.act_blocks
+    assert ctl.alloc.kv_blocks == start.kv_blocks
+    # and the fits themselves stayed at the prior (no spurious drift)
+    assert ctl.fit_gen.slope == pytest.approx(ctl.prior_gen.slope, rel=5e-2)
+    assert ctl.fit_load.slope == pytest.approx(ctl.prior_load.slope, rel=5e-2)
+
+
+def test_converges_toward_truth_on_degraded_link():
+    """With the true machine's scatter-gather efficiency far below the
+    prior's, the controller's allocation must move toward Algorithm 1
+    re-profiled on the truth (the ratio_sweep scenario, in miniature)."""
+    true_hw = dataclasses.replace(HW, gather_eff=0.08)
+    ctl = _controller(ControllerConfig(min_samples=2, alpha=0.5,
+                                       damping=10.0))
+    start_frac = ctl.alloc.act_fraction
+    truth = host_block_allocation(
+        CFG, true_hw, device_act_blocks(CFG, true_hw),
+        fits=cm.profile_cost_fns(CFG, true_hw, noise=0.0))
+    for s in range(30):
+        kv, act = 2000 + 50 * s, 1500 + 30 * s
+        res = _sim_step(true_hw, kv, act)
+        ctl.observe([res], [kv], [act])
+        ctl.alloc = ctl.update()
+    # strictly closer to the truth's fraction than the prior start was
+    assert abs(ctl.alloc.act_fraction - truth.act_fraction) < \
+        abs(start_frac - truth.act_fraction)
+    assert ctl.migrated_blocks > 0
+
+
+def test_observe_attributes_fused_gpu_spans():
+    """A measured result whose GPU time is one fused span (no "gen" tag —
+    the offload executor's shape) gets its gen share attributed from the
+    simulated prediction; the resulting sample lands in the gen window."""
+    ctl = _controller(ControllerConfig(min_samples=1))
+    sim = _sim_step(HW, 1000, 800)
+    fused = dataclasses.replace(
+        sim, tag_busy={"fwd": sim.gpu_busy, "kv": sim.tag_busy["kv"]})
+    added = ctl.observe([fused], [1000], [800], sim=[sim])
+    assert added == 2                        # one load + one gen sample
+    assert len(ctl._gen) == 1 and len(ctl._load) == 1
+    share = sim.tag_busy["gen"] / (sim.tag_busy["gen"] + sim.tag_busy["fwd"])
+    expect = sim.gpu_busy * share / CFG.num_layers
+    assert ctl._gen[0].seconds == pytest.approx(expect)

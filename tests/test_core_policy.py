@@ -88,6 +88,49 @@ def test_request_split_eq11(blocks, act_share):
         assert abs(n_act - blocks * act_share) <= 1.0 + blocks * 0.001
 
 
+def test_all_act_corner_has_no_inf():
+    """Regression: ``HostAllocation.ratio`` used to return ``inf`` when
+    kv_blocks == 0, so the all-ACT corner could never flow through the
+    float plumbing.  Ratio decisions now compare the (act_blocks,
+    kv_blocks) pair in integer arithmetic and ``act_fraction`` is
+    total-relative — both corners are finite and fully exercised."""
+    from repro.core.policy import HostAllocation
+    all_act = HostAllocation(act_blocks=7, kv_blocks=0, act_init=0, kv_init=0)
+    all_kv = HostAllocation(act_blocks=0, kv_blocks=7, act_init=0, kv_init=0)
+    empty = HostAllocation(act_blocks=0, kv_blocks=0, act_init=0, kv_init=0)
+    assert not hasattr(all_act, "ratio")          # the inf API is gone
+    assert all_act.act_fraction == 1.0
+    assert all_kv.act_fraction == 0.0
+    assert empty.act_fraction == 0.0
+    assert next_block_kind(all_act, 0, 0) == "act"
+    assert next_block_kind(all_kv, 0, 0) == "kv"
+    # the whole schedule stays on the corner's side, with no float overflow
+    sched = store_act_schedule(all_act, np.array([0, 5]), np.array([0, 3]), 32)
+    assert sched.all()
+    sched = store_act_schedule(all_kv, np.array([0, 5]), np.array([0, 3]), 32)
+    assert not sched.any()
+    # request split at the corners: everything lands on the single kind
+    assert request_block_split(all_act, 10) == (10, 0)
+    assert request_block_split(all_kv, 10) == (0, 10)
+
+
+def test_next_block_kind_matches_float_rule():
+    """The integer cross-multiplied comparison equals the original float
+    rule wherever the float rule was well-defined (kv_blocks > 0)."""
+    from repro.core.policy import HostAllocation
+    rng = np.random.default_rng(11)
+    for _ in range(500):
+        A, K = int(rng.integers(1, 40)), int(rng.integers(1, 40))
+        na, nk = int(rng.integers(0, 60)), int(rng.integers(0, 60))
+        alloc = HostAllocation(act_blocks=A, kv_blocks=K, act_init=0,
+                               kv_init=0)
+        target = A / K
+        r_act = (na + 1) / max(nk, 1)
+        r_kv = na / (nk + 1)
+        want = "act" if abs(r_act - target) <= abs(r_kv - target) else "kv"
+        assert next_block_kind(alloc, na, nk) == want, (A, K, na, nk)
+
+
 @settings(max_examples=20, deadline=None)
 @given(a=st.integers(0, 50), k=st.integers(0, 50), seed=st.integers(0, 99))
 def test_next_block_kind_converges(a, k, seed):

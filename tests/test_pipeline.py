@@ -90,15 +90,19 @@ def test_vectorized_timeline_matches_run_timeline():
                          rng.choice(i, size=min(i, int(rng.integers(0, 4))),
                                     replace=False)) if i else ()
             tasks.append(LaneTask(lanes[int(rng.integers(3))],
-                                  rng.uniform(0.0, 2.0, size=n), deps=deps))
-        total, busy, finish = _run_timeline_arrays(tasks, n)
+                                  rng.uniform(0.0, 2.0, size=n), deps=deps,
+                                  tag=["w", "kv", "gen", "fwd"][
+                                      int(rng.integers(4))]))
+        total, busy, finish, tag_busy = _run_timeline_arrays(tasks, n)
         for s in range(n):
-            scalar = [LaneTask(t.lane, float(t.dur[s]), t.deps) for t in tasks]
+            scalar = [LaneTask(t.lane, float(t.dur[s]), t.deps, tag=t.tag)
+                      for t in tasks]
             ref = run_timeline(scalar)
             assert total[s] == ref.total
             assert busy["pcie"][s] == ref.pcie_busy
             assert busy["gpu"][s] == ref.gpu_busy
             assert [float(f[s]) for f in finish] == ref.finish
+            assert {k: float(v[s]) for k, v in tag_busy.items()} == ref.tag_busy
 
 
 def test_simulate_steps_matches_per_step():

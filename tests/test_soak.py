@@ -1,0 +1,155 @@
+"""Randomized-traffic serving soak: engine + scheduler under seeded random
+arrivals, prompt lengths and token budgets, with the adaptive controller on.
+
+Three reduced configs, offload on and off.  Invariants per run:
+
+  * token-exactness vs ``exact_reference_generate`` for every request,
+  * zero block-accounting leaks after drain (all pools empty, spill arena
+    returned and internally consistent),
+  * monotone non-decreasing completed-request count over time, with every
+    request completing no earlier than it arrived.
+
+The opt engine/scheduler runs without offload are the fast-lane smoke; the
+remaining combinations carry ``@pytest.mark.slow`` (CI runs them on main,
+PRs deselect with ``-m "not slow"`` — see README).
+"""
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import Request, _zipf
+from repro.models import model as M
+from repro.serving import HybridServeEngine, exact_reference_generate
+from repro.serving.scheduler import ContinuousBatchingServer
+
+CONFIGS = ["opt-6.7b-reduced", "yi-6b-reduced", "minitron-4b-reduced"]
+
+_PARAMS = {}
+
+
+def _setup(name):
+    if name not in _PARAMS:
+        cfg = get_config(name)
+        _PARAMS[name] = (cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
+    return _PARAMS[name]
+
+
+def _random_traffic(cfg, seed, n=6):
+    """Seeded random trace: prompt lengths, token budgets, arrival times.
+
+    max_new is drawn from a small set so the scan decode loop compiles a
+    bounded number of shapes on the CPU smoke runner; prompts are free-form
+    (the bucketing layer absorbs them)."""
+    rng = np.random.default_rng(seed)
+    reqs, arrivals = [], []
+    for i in range(n):
+        plen = int(rng.integers(8, 56))
+        prompt = _zipf(rng, 1.2, cfg.vocab_size, plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=int(rng.choice([4, 8]))))
+        arrivals.append(int(rng.integers(0, 12)))
+    return reqs, arrivals
+
+
+def _engine_cases():
+    for name in CONFIGS:
+        for offload in (False, True):
+            fast = name == "opt-6.7b-reduced" and not offload
+            marks = () if fast else (pytest.mark.slow,)
+            yield pytest.param(name, offload, marks=marks,
+                               id=f"{name}-{'offload' if offload else 'dev'}")
+
+
+@pytest.mark.parametrize("name,offload", _engine_cases())
+def test_engine_soak(name, offload):
+    cfg, params = _setup(name)
+    reqs, arrivals = _random_traffic(cfg, seed=zlib.crc32(name.encode()) % 1000)
+    ref = exact_reference_generate(cfg, params, reqs)
+
+    eng = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=3,
+                            kv_cap=128, act_cap=128, adaptive=True,
+                            offload=offload)
+    host_cap0 = sum(p.capacity for (k, loc), p in eng.blockman.pools.items()
+                    if loc.value == "host")
+    with eng:
+        # arrival waves: requests join in seeded random arrival order
+        order = sorted(range(len(reqs)), key=lambda i: (arrivals[i], i))
+        waves = [[reqs[i] for i in order[w:w + 3]]
+                 for w in range(0, len(order), 3)]
+        outputs = {}
+        completed_trace = [0]
+        for wave in waves:
+            out, stats = eng.generate(wave)
+            assert stats.generated_tokens == \
+                len(wave) * max(r.max_new_tokens for r in wave)
+            outputs.update(out)
+            completed_trace.append(len(outputs))
+        # monotone non-decreasing completed-request count
+        assert all(b >= a for a, b in zip(completed_trace,
+                                          completed_trace[1:]))
+        assert completed_trace[-1] == len(reqs)
+        # token-exactness vs the full-KV oracle, controller active
+        for r in reqs:
+            np.testing.assert_array_equal(outputs[r.rid], ref[r.rid])
+        assert eng.controller.updates >= len(waves)
+        # zero block-accounting leaks after drain, and the controller's
+        # retags conserved the host tier's total capacity
+        for pool in eng.blockman.pools.values():
+            assert pool.allocated == 0
+        host_cap1 = sum(p.capacity
+                        for (k, loc), p in eng.blockman.pools.items()
+                        if loc.value == "host")
+        assert host_cap1 == host_cap0
+        if offload:
+            assert eng.spill_kv_pool.allocated_blocks == 0
+            eng.spill_kv_pool.check_invariants()
+
+
+def _sched_cases():
+    for name in CONFIGS:
+        for offload in (False, True):
+            fast = name == "opt-6.7b-reduced" and not offload
+            marks = () if fast else (pytest.mark.slow,)
+            yield pytest.param(name, offload, marks=marks,
+                               id=f"{name}-{'offload' if offload else 'dev'}")
+
+
+@pytest.mark.parametrize("name,offload", _sched_cases())
+def test_scheduler_soak(name, offload):
+    cfg, params = _setup(name)
+    reqs, arrivals = _random_traffic(
+        cfg, seed=zlib.crc32(name.encode()) % 1000 + 7)
+    ref = exact_reference_generate(cfg, params, reqs)
+
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, adaptive=True,
+                                  offload=offload) as srv:
+        out, stats = srv.run(reqs, arrival_steps=arrivals)
+        for r in reqs:
+            np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+        assert stats.generated_tokens == sum(r.max_new_tokens for r in reqs)
+        # every request completes, at or after its arrival step
+        assert set(stats.completed_at) == {r.rid for r in reqs}
+        for i, r in enumerate(reqs):
+            assert stats.completed_at[r.rid] >= arrivals[i]
+        # completions over time form a monotone non-decreasing count
+        steps_sorted = sorted(stats.completed_at.values())
+        cum = np.searchsorted(steps_sorted, np.arange(stats.steps + 1),
+                              side="right")
+        assert (np.diff(cum) >= 0).all() and cum[-1] == len(reqs)
+        assert srv.controller.updates > 0
+
+
+def test_soak_trace_is_deterministic():
+    """The seeded traffic generator is reproducible — the soak is a
+    regression test, not a flake source."""
+    cfg, _ = _setup("opt-6.7b-reduced")
+    a = _random_traffic(cfg, seed=123)
+    b = _random_traffic(cfg, seed=123)
+    assert a[1] == b[1]
+    for ra, rb in zip(a[0], b[0]):
+        assert ra.max_new_tokens == rb.max_new_tokens
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)

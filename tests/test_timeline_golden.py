@@ -1,0 +1,102 @@
+"""Golden-trace regression for the timeline schema and lane semantics.
+
+``TimelineResult`` is the shared contract between the analytic simulator
+(`core/pipeline.py`), the measured offload runtime (`offload/timeline.py`)
+and the adaptive controller that consumes both (DESIGN.md §9).  This test
+snapshots (a) the schema — field names, lane vocabulary, traffic
+categories — and (b) a deterministic reduced-config trace from BOTH
+producers, so a refactor cannot silently change what a lane or tag means.
+
+Update the snapshot EXPLICITLY after an intentional change:
+
+    PYTHONPATH=src python -m pytest tests/test_timeline_golden.py \
+        --snapshot-update
+"""
+import dataclasses
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core.pipeline import LaneTask, MiniBatchSpec, TimelineResult, \
+    simulate_steps
+from repro.offload.timeline import LANES, TRAFFIC_TAGS, MeasuredTimeline, Span
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "timeline_golden.json"
+
+
+def _round(obj):
+    """9-significant-digit rounding — bit-stable across platforms while
+    still catching any semantic change to the lane arithmetic."""
+    if isinstance(obj, float):
+        return float(f"{obj:.9e}")
+    if isinstance(obj, dict):
+        return {k: _round(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, (list, tuple)):
+        return [_round(v) for v in obj]
+    return obj
+
+
+def _result_dict(r: TimelineResult) -> dict:
+    return _round({
+        "total": r.total, "pcie_busy": r.pcie_busy, "gpu_busy": r.gpu_busy,
+        "traffic": r.traffic, "finish": r.finish, "tag_busy": r.tag_busy,
+        "gpu_util": r.gpu_util, "pcie_util": r.pcie_util,
+    })
+
+
+def _build() -> dict:
+    cfg = get_config("opt-6.7b-reduced")
+    # (a) schema: field names + shared vocabularies
+    schema = {
+        "TimelineResult": [f.name for f in dataclasses.fields(TimelineResult)],
+        "LaneTask": [f.name for f in dataclasses.fields(LaneTask)],
+        "Span": [f.name for f in dataclasses.fields(Span)],
+        "lanes": list(LANES),
+        "traffic_tags": list(TRAFFIC_TAGS),
+    }
+    # (b1) deterministic simulated trace: fixed specs, nominal hardware
+    steps = [[MiniBatchSpec(2, 700 + 100 * s, 400 + 50 * s, 64,
+                            ctx_tokens=600 + 75 * s),
+              MiniBatchSpec(3, 900, 0, 0, ctx_tokens=300)]
+             for s in range(3)]
+    sim = simulate_steps(cfg, cm.RTX4090, steps)
+    # (b2) deterministic measured trace: synthetic timestamps through the
+    # real span/step attribution machinery
+    tl = MeasuredTimeline()
+    tl.begin_step("decode", now=0.0)
+    tl.record("pcie", "w", 0.00, 0.50, nbytes=1_000_000)
+    tl.record("pcie", "kv", 0.50, 0.80, nbytes=64_000)
+    tl.record("gpu", "fwd", 0.10, 0.95)
+    tl.record("pcie_up", "st", 0.95, 1.00, nbytes=2_048)
+    tl.begin_step("decode", now=1.00)
+    tl.record("pcie", "act", 1.00, 1.20, nbytes=32_000)
+    tl.record("gpu", "gen", 1.05, 1.30)
+    tl.record("gpu", "fwd", 1.30, 1.70)
+    tl.end_step(now=1.75)
+    measured = tl.results("decode")
+    return {
+        "schema": schema,
+        "sim_trace": [_result_dict(r) for r in sim],
+        "measured_trace": [_result_dict(r) for r in measured],
+    }
+
+
+def test_timeline_golden(snapshot_update):
+    data = _build()
+    if snapshot_update:
+        GOLDEN.parent.mkdir(exist_ok=True)
+        GOLDEN.write_text(json.dumps(data, indent=2) + "\n")
+        return
+    assert GOLDEN.exists(), \
+        "golden snapshot missing; run with --snapshot-update to create it"
+    stored = json.loads(GOLDEN.read_text())
+    assert stored["schema"] == data["schema"], (
+        "timeline SCHEMA changed; if intentional, rerun with "
+        "--snapshot-update and document the change in DESIGN.md §8.4/§9")
+    assert stored["sim_trace"] == data["sim_trace"], (
+        "simulated lane trace changed; if intentional, rerun with "
+        "--snapshot-update")
+    assert stored["measured_trace"] == data["measured_trace"], (
+        "measured lane semantics changed; if intentional, rerun with "
+        "--snapshot-update")
