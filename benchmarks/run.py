@@ -21,6 +21,7 @@ MODULES = [
     "fig14_gpu_util",
     "fig15_policy_ablation",
     "ratio_sweep",
+    "serving_bench",
     "beyond_paper",
     "roofline",
     "kernel_bench",

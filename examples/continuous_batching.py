@@ -17,11 +17,18 @@ cfg = get_config("opt-6.7b-reduced")
 params = M.init_params(cfg, jax.random.PRNGKey(0))
 requests = request_trace(cfg.vocab_size, 8, prompt_mean=48, gen_tokens=10, seed=13)
 
-server = ContinuousBatchingServer(cfg, params, slots=3, kv_cap=128, act_cap=128)
+# chunk_steps=8: ONE jitted scan dispatch + ONE host sync per 8 iterations
+# (instead of per token), with arrivals coalesced into batched prefills at
+# chunk boundaries — see DESIGN.md §10 and the README serving section
+server = ContinuousBatchingServer(cfg, params, slots=3, kv_cap=128,
+                                  act_cap=128, chunk_steps=8)
 out, stats = server.run(requests)
 ref = exact_reference_generate(cfg, params, requests)
 exact = all(np.array_equal(out[r.rid], ref[r.rid]) for r in requests)
 print(f"{len(requests)} requests through 3 slots in {stats.steps} iterations")
+print(f"{stats.device_calls} jit dispatches "
+      f"({stats.dispatches_per_token:.2f}/token: {stats.chunks} chunks + "
+      f"{stats.admission_batches} admission batches)")
 print(f"token-exact vs offline decode: {exact}")
 print(f"simulated throughput on {server.hw.name}: {stats.throughput:.0f} tok/s")
 print(f"TTFT mean {np.mean(list(stats.ttft.values()))*1e3:.2f} ms, "

@@ -10,7 +10,11 @@ mispredict under real scatter-gather traffic.  This module closes the loop
             into per-lane ``LaneSample``s — (tokens, seconds) pairs for the
             KV-load lane ("kv" tag) and the KV-regeneration lane ("gen" tag;
             fused measured GPU spans are attributed by the simulator's
-            gen:fwd split).
+            gen:fwd split).  Callers batch freely: the engine feeds one
+            jit group's steps per call, the chunked-scan scheduler one
+            chunk's steps per call (``update_every`` therefore counts
+            groups/chunks, not tokens) — every step in the batch becomes
+            its own sample either way.
   refit     ``ewma_refit`` blends a least-squares fit of the window into the
             current ``LinearFit``s, clamped into a damped trust region
             around the analytic prior — wild samples can tilt the fits only

@@ -36,6 +36,13 @@ class HardwareSpec:
     # are contiguous and get the full link.  Measured fractions for pinned
     # scatter-gather DMA land near 0.4-0.6 on PCIe 4.0.
     gather_eff: float = 0.5
+    # Host-side cost of ONE jitted dispatch plus its blocking sync (launch
+    # latency, runtime bookkeeping, tokens crossing back to the scheduler).
+    # This is serialized on the serving critical path — neither lane of the
+    # pipeline model can hide it — and is the tax the chunked-scan server
+    # amortizes over ``chunk_steps`` iterations (DESIGN.md §10).  Tens of
+    # microseconds is typical for XLA dispatch + a small D2H readback.
+    dispatch_overhead: float = 40e-6
 
 
 # The paper's evaluation machine (RTX 4090, PCIe 4.0 x16, 882 GB host DRAM).

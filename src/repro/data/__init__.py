@@ -1,2 +1,2 @@
 from repro.data.pipeline import (DataConfig, Request, lm_batches,
-                                 request_trace, token_stream)
+                                 open_loop_trace, request_trace, token_stream)

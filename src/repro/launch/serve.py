@@ -28,6 +28,11 @@ def main(argv=None):
                     help="check token-exactness against the plain-KV reference")
     ap.add_argument("--continuous", action="store_true",
                     help="iteration-level continuous batching (Orca-style)")
+    ap.add_argument("--chunk-steps", type=int, default=1,
+                    help="decode iterations per jitted dispatch in the "
+                         "continuous server (1 = classic step server; "
+                         "larger chunks amortize the dispatch tax at the "
+                         "cost of admission latency, DESIGN.md §10)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -37,13 +42,17 @@ def main(argv=None):
                          gen_tokens=args.gen_tokens, seed=1)
     if args.continuous:
         from repro.serving import ContinuousBatchingServer
-        eng = ContinuousBatchingServer(cfg, params, slots=4)
-        print(f"continuous batching: 4 slots, act_frac={eng.act_frac:.2f}")
+        eng = ContinuousBatchingServer(cfg, params, slots=4,
+                                       chunk_steps=args.chunk_steps)
+        print(f"continuous batching: 4 slots, chunk_steps="
+              f"{args.chunk_steps}, act_frac={eng.act_frac:.2f}")
         t0 = time.time()
         out, stats = eng.run(reqs)
         wall = time.time() - t0
-        print(f"{stats.generated_tokens} tokens in {stats.steps} iterations "
-              f"({wall:.1f}s wall); simulated {stats.throughput:.1f} tok/s")
+        print(f"{stats.generated_tokens} tokens in {stats.steps} iterations, "
+              f"{stats.device_calls} dispatches "
+              f"({stats.dispatches_per_token:.2f}/token, {wall:.1f}s wall); "
+              f"simulated {stats.throughput:.1f} tok/s")
         if args.verify:
             import numpy as np
             ref = exact_reference_generate(cfg, params, reqs)

@@ -8,6 +8,7 @@ Entry points (all pure, jit/pjit-able):
   prefill(params, cfg, batch, max_len)       -> (last_logits, cache)
   decode_step(params, cfg, token, cache)     -> (logits, cache)
   hybrid_decode_step(...)                    -> paper's KV/ACT hybrid serve step
+  hybrid_decode_chunk(...)                   -> S masked serve steps, 1 dispatch
 """
 from __future__ import annotations
 
@@ -639,11 +640,24 @@ def init_hybrid_cache(cfg: ModelConfig, B: int, kv_cap: int, act_cap: int) -> Ca
 
 
 def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
-                       sincos_new, sincos_act, is_moe):
+                       sincos_new, sincos_act, is_moe,
+                       kv_bound=None, act_bound=None):
     """One hybrid KV/ACT attention layer at decode time (shared by the
-    uniform scan and the windowed period scan).  Returns h, kc', vc', ac'."""
+    uniform scan and the windowed period scan).  Returns h, kc', vc', ac'.
+
+    kv_bound / act_bound: optional STATIC bounds (tokens, page-aligned by the
+    caller) on the occupied prefix of each region — the same trick the paged
+    attention kernel's ``pages_bound`` plays on its page grid (DESIGN.md
+    §7.4).  The continuous-batching scheduler owns every slot's length, so
+    the bound is exact: KV Gen and attention run over ``[:bound]`` slices
+    instead of the full capacity, while cache WRITES stay full-size.  An
+    insufficient bound would drop context; callers must cover
+    ``max(len) + steps_in_dispatch``."""
     B = h.shape[0]
+    S_kv = kc.shape[1]
     S_act = ac.shape[1]
+    kv_b = S_kv if kv_bound is None else min(int(kv_bound), S_kv)
+    act_b = S_act if act_bound is None else min(int(act_bound), S_act)
     arangeB = jnp.arange(B)
     act_in = h[:, 0]                                           # A^i of new token
     hn = L.apply_norm(h, lp["ln1"], cfg.norm_type)
@@ -652,14 +666,14 @@ def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
         q = L.apply_rope(q, *sincos_new)
         k = L.apply_rope(k, *sincos_new)
 
-    # --- KV Gen: recompute the ACT region's K/V (Eq. 7) -------------------
-    an = L.apply_norm(ac, lp["ln1"], cfg.norm_type)
-    ka = (an @ lp["attn"]["wk"]).reshape(B, S_act, cfg.num_kv_heads, cfg.head_dim)
-    va = (an @ lp["attn"]["wv"]).reshape(B, S_act, cfg.num_kv_heads, cfg.head_dim)
+    # --- KV Gen: recompute the ACT region's K/V (Eq. 7), bounded prefix ----
+    an = L.apply_norm(ac[:, :act_b], lp["ln1"], cfg.norm_type)
+    ka = (an @ lp["attn"]["wk"]).reshape(B, act_b, cfg.num_kv_heads, cfg.head_dim)
+    va = (an @ lp["attn"]["wv"]).reshape(B, act_b, cfg.num_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
         ka = L.rms_norm(ka, lp["attn"]["knorm"])
     if sincos_act is not None:
-        ka = L.apply_rope(ka, *sincos_act)
+        ka = L.apply_rope(ka, sincos_act[0][:, :act_b], sincos_act[1][:, :act_b])
 
     # --- append the new token to its region --------------------------------
     kc2 = kc.at[arangeB, kv_len].set(
@@ -673,12 +687,11 @@ def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
     ac2 = ac.at[arangeB, act_len].set(
         jnp.where(store_act[:, None], act_in.astype(ac.dtype), ac[arangeB, act_len]))
 
-    # --- attention over [KV region ; ACT region (recomputed)] --------------
-    S_kv = kc.shape[1]
-    kv_valid = jnp.arange(S_kv)[None, :] < (kv_len + (~store_act))[:, None]
-    act_valid = jnp.arange(S_act)[None, :] < (act_len + store_act)[:, None]
-    k_all = jnp.concatenate([kc2, ka.astype(kc2.dtype)], axis=1)
-    v_all = jnp.concatenate([vc2, va.astype(vc2.dtype)], axis=1)
+    # --- attention over [KV region ; ACT region (recomputed)], bounded -----
+    kv_valid = jnp.arange(kv_b)[None, :] < (kv_len + (~store_act))[:, None]
+    act_valid = jnp.arange(act_b)[None, :] < (act_len + store_act)[:, None]
+    k_all = jnp.concatenate([kc2[:, :kv_b], ka.astype(kc2.dtype)], axis=1)
+    v_all = jnp.concatenate([vc2[:, :kv_b], va.astype(vc2.dtype)], axis=1)
     valid = jnp.concatenate([kv_valid, act_valid], axis=1)
     o = T._masked_decode_attn(q, k_all, v_all, valid)
     h = h + o.reshape(B, 1, cfg.q_dim) @ lp["attn"]["wo"]
@@ -849,12 +862,16 @@ def hybrid_prefill_batched(params, cfg: ModelConfig, batch, kv_cap: int,
 
 
 def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
-                       store_act):
+                       store_act, *, kv_bound=None, act_bound=None):
     """One generation step with the KV-Activation hybrid cache.
 
     store_act: (B,) bool — whether this token's checkpoint goes to the ACT
     region (True) or its K/V to the KV region (False); the engine keeps the
     Algorithm-1 ratio per request (paper Eq. 11).
+
+    kv_bound / act_bound: optional static occupancy bounds on the two cache
+    regions (see ``_hybrid_layer_step``); the continuous-batching scheduler
+    derives them exactly from its per-slot lengths.
 
     KV Gen (paper Fig. 7): K/V for the ACT region are recomputed per layer via
     ``act @ [Wk Wv]`` — the projection + RoPE the paper overlaps with PCIe
@@ -881,7 +898,8 @@ def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
         lp, kc, vc, ac = xs
         h, kc2, vc2, ac2 = _hybrid_layer_step(
             lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
-            sincos_new, sincos_act, is_moe)
+            sincos_new, sincos_act, is_moe,
+            kv_bound=kv_bound, act_bound=act_bound)
         return h, (kc2, vc2, ac2)
 
     x, (K, V, ACT) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"], cache["act"]))
@@ -893,6 +911,54 @@ def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
         act_len=act_len + store_act.astype(jnp.int32),
     )
     return unembed(params, cfg, x), new_cache
+
+
+def hybrid_decode_chunk(params, cfg: ModelConfig, cur, cache: Cache,
+                        store_sched, active_sched, *, kv_bound=None,
+                        act_bound=None):
+    """Masked multi-step decode: S serving iterations in ONE dispatch.
+
+    The continuous-batching server's hot path (DESIGN.md §10): instead of one
+    ``hybrid_decode_step`` dispatch plus a blocking ``argmax`` host sync per
+    generated token, the server precomputes the chunk's per-slot store
+    schedule and active masks host-side and scans over both on-device.  The
+    scan body is ``hybrid_decode_step`` itself — the same
+    ``_hybrid_layer_step`` math the engine's offline loop and the offload
+    executor run — with per-step masking on top:
+
+      * greedy sampling happens on-device (``argmax`` folded into the scan),
+      * INACTIVE slots (retired mid-chunk, or never admitted) do not advance
+        ``kv_len``/``act_len``, keep their carried token, and emit -1 —
+        their cache rows may hold garbage (admission rewrites every row),
+        but their lengths stay frozen so a long-idle slot can never creep
+        past its region capacities.
+
+    cur:          (B,) int32 — next token each slot would emit.
+    store_sched:  (S, B) bool — per-step store_act flags (inactive entries
+                  must already be False; enforced again here).
+    active_sched: (S, B) bool — slot i participates in step s.
+    kv_bound / act_bound: static region-occupancy bounds (see
+                  ``_hybrid_layer_step``); must cover every ACTIVE slot's
+                  final length within the chunk.
+    -> (tokens (B, S) int32 with -1 at inactive entries,
+        next cur (B,) int32, final cache).
+    """
+    def step(carry, xs):
+        tok, c = carry
+        store, active = xs
+        store = store & active
+        lg, c2 = hybrid_decode_step(params, cfg, tok[:, None], c, store,
+                                    kv_bound=kv_bound, act_bound=act_bound)
+        nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+        # freeze inactive slots: lengths and the carried token do not advance
+        c2["kv_len"] = jnp.where(active, c2["kv_len"], c["kv_len"])
+        c2["act_len"] = jnp.where(active, c2["act_len"], c["act_len"])
+        emit = jnp.where(active, tok, jnp.int32(-1))
+        return (jnp.where(active, nxt, tok), c2), emit
+
+    (cur, cache), toks = lax.scan(step, (cur, cache),
+                                  (store_sched, active_sched))
+    return jnp.swapaxes(toks, 0, 1), cur, cache
 
 
 # --- windowed (gemma) hybrid: global layers hybrid, local layers ring -------

@@ -61,9 +61,15 @@ class OffloadExecutor:
                                        timeline=self.timeline)
         self.resident = self.pool.resident
         self.dispatches = 0                     # jit calls (device round trips)
+        # blocking host materialisation points (block_until_ready / D2H
+        # reads): the layer-streamed loops block once per layer by
+        # design, so consumers reporting sync counts (ServeStats.
+        # host_syncs) read this instead of assuming one sync per call
+        self.blocking_syncs = 0
 
         self._pre = jax.jit(self._pre_impl)
-        self._layer = jax.jit(self._layer_impl, donate_argnums=(1, 2, 3))
+        self._layer = jax.jit(self._layer_impl, donate_argnums=(1, 2, 3),
+                              static_argnames=("kv_bound", "act_bound"))
         self._post = jax.jit(self._post_impl)
         self._prefill_embed = jax.jit(self._prefill_embed_impl)
         self._prefill_layer = jax.jit(self._prefill_layer_impl,
@@ -89,18 +95,23 @@ class OffloadExecutor:
         return x, act_pos2, sincos_new, sincos_act
 
     def _layer_impl(self, lp, kc, vc, ac, h, kv_len, act_len, store,
-                    sincos_new, sincos_act):
+                    sincos_new, sincos_act, kv_bound=None, act_bound=None):
         return M._hybrid_layer_step(lp, self.cfg, h, kc, vc, ac, kv_len,
                                     act_len, store, sincos_new, sincos_act,
-                                    self.is_moe)
+                                    self.is_moe, kv_bound=kv_bound,
+                                    act_bound=act_bound)
 
-    def _post_impl(self, h, kv_len, act_len, store):
+    def _post_impl(self, h, prev, kv_len, act_len, store, active):
+        """active: (B,) bool — inactive slots keep their carried token and
+        frozen lengths (the chunked scheduler retires slots mid-chunk; the
+        full-loop callers pass all-true)."""
         cfg = self.cfg
         x = nn.apply_norm(h, self.resident["final_norm"], cfg.norm_type)
         logits = M.unembed(self.resident, cfg, x)
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        return logits, nxt, (kv_len + (~store).astype(jnp.int32),
-                             act_len + store.astype(jnp.int32))
+        nxt = jnp.where(active,
+                        jnp.argmax(logits[:, -1], -1).astype(jnp.int32), prev)
+        return logits, nxt, (kv_len + ((~store) & active).astype(jnp.int32),
+                             act_len + (store & active).astype(jnp.int32))
 
     # prefill stages mirror M.hybrid_prefill_batched around the layer scan
     def _prefill_embed_impl(self, tokens):
@@ -170,6 +181,7 @@ class OffloadExecutor:
             x, kc, vc, ac = self._prefill_layer(lp, x, sincos, kv_keep,
                                                 kv_cap=kv_cap, act_cap=act_cap)
             jax.block_until_ready(x)
+            self.blocking_syncs += 1
             self.timeline.record("gpu", "fwd", t0, time.perf_counter())
             self.dispatches += 1
             self.streamer.release(l)
@@ -200,6 +212,7 @@ class OffloadExecutor:
         kc = jax.device_put(hk_l)
         vc = jax.device_put(hv_l)
         jax.block_until_ready((kc, vc))
+        self.blocking_syncs += 1
         self.timeline.record("pcie", "kv", t0, time.perf_counter(),
                              hk_l.nbytes + hv_l.nbytes)
         return kc, vc
@@ -288,6 +301,7 @@ class OffloadExecutor:
                 x, kc2, vc2, ac2 = self._layer(lp, kc, vc, acs[l], x, kv_len,
                                                act_len, store, sn, sa)
                 jax.block_until_ready(x)
+                self.blocking_syncs += 1
                 self.timeline.record("gpu", "fwd", t0, time.perf_counter())
                 self.dispatches += 1
                 self.streamer.release(seq)
@@ -300,7 +314,9 @@ class OffloadExecutor:
                 else:
                     ks[l], vs[l] = kc2, vc2
             toks.append(np.asarray(cur, np.int32))
-            _, cur, (kv_len, act_len) = self._post(x, kv_len, act_len, store)
+            self.blocking_syncs += 1
+            _, cur, (kv_len, act_len) = self._post(
+                x, cur, kv_len, act_len, store, jnp.ones((B,), bool))
             self.dispatches += 1
             if spill:
                 kv_len_np = kv_len_np + (~sched[s]).astype(kv_len_np.dtype)
@@ -341,10 +357,13 @@ class OffloadExecutor:
                                                   kv_len, act_len, store,
                                                   sn, sa)
             jax.block_until_ready(x)
+            self.blocking_syncs += 1
             self.timeline.record("gpu", "fwd", t0, time.perf_counter())
             self.dispatches += 1
             self.streamer.release(l)
-        logits, _, (kv_len2, act_len2) = self._post(x, kv_len, act_len, store)
+        logits, _, (kv_len2, act_len2) = self._post(
+            x, tok[:, 0], kv_len, act_len, store,
+            jnp.ones((tok.shape[0],), bool))
         self.dispatches += 1
         self.timeline.end_step()
         new_cache = dict(cache)
@@ -352,6 +371,78 @@ class OffloadExecutor:
                          act=jnp.stack(acs, 0), act_pos=act_pos,
                          kv_len=kv_len2, act_len=act_len2)
         return logits, new_cache
+
+    def decode_chunk(self, cur, cache: Cache, store_sched, active_sched, *,
+                     kv_bound: Optional[int] = None,
+                     act_bound: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, Cache]:
+        """Chunked layer-streamed decode over a *stacked* hybrid cache (the
+        continuous-batching scheduler's offload hot path, DESIGN.md §10).
+
+        Versus calling ``decode_step`` once per token, the chunk amortizes
+        the per-iteration fixed costs the way the monolithic scan does for
+        the device-resident path: the cache is unstacked ONCE and restacked
+        ONCE per chunk (not per token), and the weight streamer's prefetch
+        window is opened over the whole chunk's layer sequence, so the copy
+        stream rolls straight from step s's last layers into step s+1's
+        first layers instead of restarting cold every token.
+
+        cur:          (B,) int32 — next token each slot would emit.
+        store_sched:  (n_steps, B) bool store_act flags.
+        active_sched: (n_steps, B) bool — inactive slots keep their carried
+                      token and frozen lengths and emit -1 (the scheduler's
+                      masking contract; matches ``M.hybrid_decode_chunk``).
+        kv_bound / act_bound: static region-occupancy bounds (see
+                      ``M._hybrid_layer_step``).
+        -> (tokens (B, n_steps) int32, next cur (B,), final stacked cache).
+        """
+        cfg = self.cfg
+        Lc = cfg.num_layers
+        sched = np.asarray(store_sched, bool)
+        act_np = np.asarray(active_sched, bool)
+        sched = sched & act_np
+        n_steps = int(sched.shape[0])
+        B = int(cur.shape[0])
+        ks, vs, acs = self._unstack(cache)
+        kv_len, act_len = cache["kv_len"], cache["act_len"]
+        act_pos = cache["act_pos"]
+        cur = jnp.asarray(cur, jnp.int32)
+        toks: List[np.ndarray] = []
+        # ONE prefetch window across the whole chunk's layer sequence
+        self.streamer.begin([l for _ in range(n_steps) for l in range(Lc)])
+        seq = 0
+        for s in range(n_steps):
+            self.timeline.begin_step("decode")
+            store = jnp.asarray(sched[s])
+            active = jnp.asarray(act_np[s])
+            x, act_pos, sn, sa = self._pre(cur[:, None], kv_len, act_len,
+                                           act_pos, store)
+            self.dispatches += 1
+            for l in range(Lc):
+                lp = self.streamer.acquire(seq)
+                t0 = time.perf_counter()
+                x, ks[l], vs[l], acs[l] = self._layer(
+                    lp, ks[l], vs[l], acs[l], x, kv_len, act_len, store,
+                    sn, sa, kv_bound=kv_bound, act_bound=act_bound)
+                jax.block_until_ready(x)
+                self.blocking_syncs += 1
+                self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+                self.dispatches += 1
+                self.streamer.release(seq)
+                seq += 1
+            toks.append(np.where(act_np[s], np.asarray(cur, np.int32), -1))
+            self.blocking_syncs += 1
+            _, cur, (kv_len, act_len) = self._post(x, cur, kv_len, act_len,
+                                                   store, active)
+            self.dispatches += 1
+            self.timeline.end_step()
+        out = (np.stack(toks, axis=1).astype(np.int32) if toks
+               else np.zeros((B, 0), np.int32))
+        final: Cache = dict(cache)
+        final.update(k=jnp.stack(ks, 0), v=jnp.stack(vs, 0),
+                     act=jnp.stack(acs, 0), act_pos=act_pos,
+                     kv_len=kv_len, act_len=act_len)
+        return out, np.asarray(cur, np.int32), final
 
     # ================================================================== misc
     def drain_timeline(self, tag: Optional[str] = "decode"):

@@ -102,7 +102,8 @@ def _compute_only(ex: OffloadExecutor, cur, cache, sched, dev_layers):
                 dev_layers[l], ks[l], vs[l], acs[l], x, kv_len, act_len,
                 store, sn, sa)
             jax.block_until_ready(x)
-        _, cur, (kv_len, act_len) = ex._post(x, kv_len, act_len, store)
+        _, cur, (kv_len, act_len) = ex._post(
+            x, cur, kv_len, act_len, store, jnp.ones((cur.shape[0],), bool))
     jax.block_until_ready(cur)
 
 

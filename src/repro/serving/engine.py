@@ -46,7 +46,7 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, TimelineResult, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
-from repro.serving.util import bucket
+from repro.serving.util import bucket, pack_group
 
 
 @dataclass
@@ -281,32 +281,11 @@ class HybridServeEngine:
         cfg = self.cfg
         stats = GenStats()
         B = len(group)
-        plens = [len(r.prompt) for r in group]
-        pbs = [bucket(p) for p in plens]
-        Smax = max(pbs)
-
         # batched prefill: pad every request to the group bucket (causality
-        # keeps positions < pb identical to the per-request prefill)
-        toks = np.zeros((B, Smax), np.int32)
-        kv_keep = np.zeros((B,), np.int32)
-        for i, r in enumerate(group):
-            toks[i, :plens[i]] = r.prompt
-            toks[i, plens[i]:] = r.prompt[-1]       # pad with last token
-            kk = int(round(pbs[i] * (1 - self.act_frac) / BLOCK_TOKENS)) * BLOCK_TOKENS
-            if self.mode == "kv":
-                kk = pbs[i]
-            if self.mode == "act":
-                kk = 0
-            kv_keep[i] = kk
-        # the batched prefill places per-request prefixes by masking, so an
-        # overfull region would truncate SILENTLY — fail loudly here instead
-        # (the seed per-request path failed at trace time)
-        if int(kv_keep.max()) > self.kv_cap:
-            raise ValueError(f"kv_keep={int(kv_keep.max())} exceeds "
-                             f"kv_cap={self.kv_cap}; raise kv_cap")
-        if int((np.asarray(pbs) - kv_keep).max()) > self.act_cap:
-            raise ValueError(f"ACT prefix {int((np.asarray(pbs) - kv_keep).max())} "
-                             f"exceeds act_cap={self.act_cap}; raise act_cap")
+        # keeps positions < pb identical to the per-request prefill); the
+        # shared packer fails loudly on region overflow
+        toks, kv_keep, pbs = pack_group(group, self.act_frac, self.kv_cap,
+                                        self.act_cap, mode=self.mode)
         if self.executor is not None:
             # layer-streamed prefill: weights arrive over the copy stream,
             # the full parameter set is never device-resident
@@ -384,7 +363,11 @@ class HybridServeEngine:
             else:
                 gen = np.zeros((B, 0), np.int32)
             stats.steps += max_new
-            stats.generated_tokens += B * max_new
+            # outputs are trimmed to each request's own budget below, so the
+            # stat must count the same thing: sum(max_new_tokens), NOT
+            # B * max_new (which credits sim_throughput for padded steps of
+            # shorter requests in a heterogeneous group)
+            stats.generated_tokens += sum(r.max_new_tokens for r in group)
 
             # replay the schedule through the BlockManager (same accounting
             # the per-token loop performed, now off the device hot path).

@@ -1,11 +1,34 @@
-"""Iteration-level continuous batching on top of the hybrid KV/ACT cache.
+"""Chunked-scan continuous batching on top of the hybrid KV/ACT cache.
 
 Orca-style scheduling (the paper's §2.1 batching substrate): a fixed pool of
-B_slots decode slots; between generation steps, finished requests leave and
-queued arrivals are admitted — each admission runs its own (bucketed) hybrid
-prefill and its cache rows are written into the free slot.  Every running
-request keeps the Algorithm-1 ACT:KV ratio via per-slot store flags, so the
-decode step stays a single fixed-shape jitted call regardless of churn.
+B_slots decode slots; finished requests leave and queued arrivals are
+admitted at CHUNK boundaries.  The serving hot loop is built around chunked
+on-device scan decode (DESIGN.md §10):
+
+  * every chunk of ``chunk_steps`` iterations is ONE jitted dispatch
+    (``M.hybrid_decode_chunk``: greedy sampling, per-slot store flags and
+    active masks all on-device, cache donated) followed by ONE blocking
+    host sync for the chunk's token matrix — not one dispatch + one sync
+    per generated token,
+  * all arrivals queued at a chunk boundary are coalesced into ONE batched
+    prefill dispatch (``M.hybrid_prefill_batched`` writes its rows into the
+    free slots inside the same jit call) instead of one retracing B=1
+    prefill each,
+  * the per-slot store-type schedule is precomputed host-side
+    (``core.policy.store_act_schedule``, property-tested) and replayed
+    after the dispatch through the ``BlockManager`` for block accounting,
+  * TTFT / TBT are reconstructed at SUB-chunk granularity from the per-step
+    ``simulate_steps`` results, so latency metrics stay step-accurate even
+    though the device ran the whole chunk in one dispatch,
+  * the known per-slot lengths bound the occupied prefix of both cache
+    regions, and the bound is passed to the decode attention as a static
+    page-aligned ``kv_bound``/``act_bound`` — the scheduler-side twin of
+    the paged kernel's ``pages_bound`` grid shrink.
+
+``chunk_steps=1`` IS the classic step server (admission every iteration);
+larger chunks amortize the dispatch tax at the cost of admission latency
+(arrivals wait for the running chunk to finish — the TTFT/throughput
+frontier ``benchmarks/serving_bench.py`` sweeps).
 
 Reports per-request TTFT / TBT and aggregate throughput (simulated on the
 target hardware via the two-lane pipeline model), alongside the real tokens.
@@ -13,32 +36,33 @@ target hardware via the two-lane pipeline model), alongside the real tokens.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (BLOCK_TOKENS, ControllerConfig, HybridCacheController,
-                        device_act_blocks, host_block_allocation,
-                        next_block_kind, profile_cost_fns)
+from repro.core import (BLOCK_TOKENS, BlockManager, BlockType,
+                        ControllerConfig, HostAllocation,
+                        HybridCacheController, Location, device_act_blocks,
+                        host_block_allocation, store_act_schedule)
 from repro.core import costmodel as cm
-from repro.core.pipeline import MiniBatchSpec, simulate_step
+from repro.core.pipeline import MiniBatchSpec, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
-from repro.serving.util import bucket
+from repro.serving.util import bucket, pack_group
 
 
 @dataclass
 class SlotState:
     rid: int = -1
     remaining: int = 0
-    n_act: int = 0
-    n_kv: int = 0
+    kv_tokens: int = 0          # host mirror of this slot's device kv_len
+    act_tokens: int = 0         # host mirror of this slot's device act_len
     generated: List[int] = field(default_factory=list)
-    ttft_step: int = -1
 
     @property
     def active(self) -> bool:
@@ -47,9 +71,20 @@ class SlotState:
 
 @dataclass
 class ServeStats:
-    steps: int = 0
+    steps: int = 0              # decode iterations executed (sub-chunk)
+    chunks: int = 0             # chunked decode dispatches
+    admission_batches: int = 0  # coalesced prefill dispatches
+    admitted: int = 0           # requests admitted across all batches
     generated_tokens: int = 0
+    device_calls: int = 0       # jitted dispatches the server issued
+    # blocking device->host materialisation points.  Device-resident path:
+    # one per chunk + one per admission batch.  Offload path: the layer-
+    # streamed executor blocks per layer by design, so its real per-layer
+    # count is reported (OffloadExecutor.blocking_syncs) — chunking there
+    # amortizes per-STEP overheads, not sync counts.
+    host_syncs: int = 0
     sim_time: float = 0.0
+    measured_time: float = 0.0  # offload runtime ground truth (else 0)
     ttft: Dict[int, float] = field(default_factory=dict)
     tbt: Dict[int, float] = field(default_factory=dict)
     completed_at: Dict[int, int] = field(default_factory=dict)  # rid -> step
@@ -58,28 +93,44 @@ class ServeStats:
     def throughput(self) -> float:
         return self.generated_tokens / self.sim_time if self.sim_time else 0.0
 
+    @property
+    def dispatches_per_token(self) -> float:
+        return (self.device_calls / self.generated_tokens
+                if self.generated_tokens else 0.0)
+
 
 class ContinuousBatchingServer:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  kv_cap: int = 256, act_cap: int = 256,
+                 chunk_steps: int = 1,
                  hw: cm.HardwareSpec = cm.TPU_V5E, generalized: bool = True,
                  offload: bool = False, prefetch_depth: int = 1,
                  adaptive: bool = False,
                  ctl: Optional[ControllerConfig] = None):
-        """offload=True swaps the jitted monolithic decode step for the
+        """chunk_steps: decode iterations per jitted dispatch.  1 reproduces
+        the classic step server (admission every iteration); S>1 runs S
+        masked steps per dispatch, admitting/retiring only at chunk
+        boundaries — dispatches per generated token drop toward 1/S while
+        arrivals may wait up to S steps for admission (TTFT cost under
+        bursty traffic; see DESIGN.md §10).
+
+        offload=True swaps the jitted monolithic decode chunk for the
         layer-streamed offload executor (DESIGN.md §8): weights arrive over
-        the copy stream each iteration while the slots' KV Gen runs, and
+        the copy stream each iteration while the slots' KV Gen runs, with
+        the streamer's prefetch window spanning the whole chunk, and
         ``self.measured_steps`` exposes the measured per-iteration lane
         timelines.  Tokens are identical either way.
 
-        adaptive=True runs the hybrid-cache controller between iterations
-        (DESIGN.md §9): per-iteration lane timelines (measured under
-        offload, simulated otherwise) refit the cost model, and the running
-        ACT:KV target that drives per-slot store decisions follows the
-        refit allocation.  Host-side only; the decode step is unchanged."""
+        adaptive=True runs the hybrid-cache controller between chunks
+        (DESIGN.md §9): per-chunk timeline batches (measured under offload,
+        simulated otherwise) refit the cost model, and the running ACT:KV
+        target that drives per-slot store decisions follows the refit
+        allocation, mirrored onto the block pools by bounded capacity
+        retags.  Host-side only; the decode dispatch is unchanged."""
         assert M.family(cfg) == "uniform"
         self.cfg, self.params, self.hw = cfg, params, hw
         self.n_slots, self.kv_cap, self.act_cap = slots, kv_cap, act_cap
+        self.chunk_steps = max(int(chunk_steps), 1)
         self.alloc = host_block_allocation(
             cfg, hw, device_act_blocks(cfg, hw), generalized=generalized)
         self.act_frac = self.alloc.act_fraction
@@ -90,6 +141,13 @@ class ContinuousBatchingServer:
                 generalized=generalized,
                 ctl=ctl if ctl is not None else
                 ControllerConfig(update_every=4))
+        # physical block accounting, replayed per chunk from the precomputed
+        # store schedule (the engine's pattern, DESIGN.md §5): host pools in
+        # the Algorithm-1 split, device pools as the engine sizes them
+        self.blockman = BlockManager(
+            cfg, host_kv_blocks=max(self.alloc.kv_blocks, 1),
+            host_act_blocks=max(self.alloc.act_blocks, 1),
+            dev_kv_blocks=64, dev_act_blocks=device_act_blocks(cfg, hw))
         # offload mode: per-iteration timelines drained out of the executor
         # as they complete (keeping its span store bounded) and accumulated
         # here for the measured_steps property
@@ -101,13 +159,17 @@ class ContinuousBatchingServer:
             from repro.offload import OffloadExecutor
             self.executor = OffloadExecutor(cfg, params,
                                             prefetch_depth=prefetch_depth)
-            self._decode = self.executor.decode_step
         else:
-            # cache donated: the slot pools update in place every iteration
-            self._decode = jax.jit(
-                lambda tok, cache, store: M.hybrid_decode_step(
-                    params, cfg, tok, cache, store),
-                donate_argnums=(1,))
+            # cache donated: the slot pools update in place every chunk
+            self._decode_chunk_jit = functools.partial(
+                jax.jit, static_argnames=("kv_bound", "act_bound"),
+                donate_argnums=(1,))(self._decode_chunk_impl)
+        # admission is one jitted call per boundary: batched prefill + greedy
+        # sample + slot-row writes, cache donated (offload mode included —
+        # the scheduler keeps the params resident either way)
+        self._admit_jit = functools.partial(
+            jax.jit, static_argnames=("kv_cap", "act_cap"),
+            donate_argnums=(4,))(self._admit_impl)
         self._cur_tok = np.zeros((slots,), np.int32)
 
     @property
@@ -131,31 +193,231 @@ class ContinuousBatchingServer:
     def __exit__(self, *exc):
         self.close()
 
-    # ------------------------------------------------------------- admission
-    def _admit(self, slot: int, req: Request, step_idx: int) -> None:
-        cfg = self.cfg
-        plen = len(req.prompt)
-        pb = bucket(plen)
-        toks = np.zeros((1, pb), np.int32)
-        toks[0, :plen] = req.prompt
-        toks[0, plen:] = req.prompt[-1]
-        kv_keep = int(round(pb * (1 - self.act_frac) / BLOCK_TOKENS)) * BLOCK_TOKENS
-        lg, c1 = M.hybrid_prefill(self.params, cfg, {"tokens": jnp.asarray(toks)},
-                                  kv_cap=self.kv_cap, act_cap=self.act_cap,
-                                  kv_keep=kv_keep)
-        # write the B=1 cache into this slot's rows
+    # --- jitted wrappers ------------------------------------------------------
+    def _admit_impl(self, tokens, kv_keep, last_pos, slot_idx, cache,
+                    kv_cap, act_cap):
+        """ONE dispatch per admission batch: group-batched prefill, greedy
+        sample of its logits, and the scatter of the new rows into the free
+        slots of the (donated) server cache."""
+        lg, c1 = M.hybrid_prefill_batched(
+            self.params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
+            act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos)
         for key in ("k", "v", "act"):
-            self.cache[key] = self.cache[key].at[:, slot].set(c1[key][:, 0])
+            cache[key] = cache[key].at[:, slot_idx].set(c1[key])
         for key in ("act_pos", "kv_len", "act_len"):
-            self.cache[key] = self.cache[key].at[slot].set(c1[key][0])
-        st = self.slots[slot]
-        st.rid, st.remaining = req.rid, req.max_new_tokens
-        st.generated = []
-        blocks = pb // BLOCK_TOKENS
-        st.n_act = int(round(blocks * self.act_frac))
-        st.n_kv = blocks - st.n_act
-        st.ttft_step = step_idx
-        self._cur_tok[slot] = int(np.asarray(jnp.argmax(lg[0, -1])))
+            cache[key] = cache[key].at[slot_idx].set(c1[key])
+        return jnp.argmax(lg[:, -1], -1).astype(jnp.int32), cache
+
+    def _decode_chunk_impl(self, cur, cache, store_sched, active_sched,
+                           kv_bound, act_bound):
+        return M.hybrid_decode_chunk(self.params, self.cfg, cur, cache,
+                                     store_sched, active_sched,
+                                     kv_bound=kv_bound, act_bound=act_bound)
+
+    # ------------------------------------------------------------- admission
+    def _admit_batch(self, assignments: List[Tuple[int, Request]],
+                     stats: ServeStats) -> None:
+        """Admit every queued arrival with a free slot in ONE batched prefill
+        dispatch (per-request kv_keep/last_pos, rows written into the slots
+        inside the same jit call)."""
+        k = len(assignments)
+        # pad to the batch bucket + Eq. 11 split; fails loudly on overflow
+        toks, kv_keep, pbs = pack_group([r for _, r in assignments],
+                                        self.act_frac, self.kv_cap,
+                                        self.act_cap)
+        slot_idx = np.asarray([i for i, _ in assignments], np.int32)
+        cur, self.cache = self._admit_jit(
+            jnp.asarray(toks), jnp.asarray(kv_keep),
+            jnp.asarray(np.asarray(pbs, np.int32)), jnp.asarray(slot_idx),
+            self.cache, kv_cap=self.kv_cap, act_cap=self.act_cap)
+        stats.device_calls += 1
+        stats.admission_batches += 1
+        stats.admitted += k
+        cur_np = np.asarray(cur, np.int32)
+        stats.host_syncs += 1
+        stats.sim_time += self.hw.dispatch_overhead
+        try:
+            for j, (i, r) in enumerate(assignments):
+                st = self.slots[i]
+                st.rid, st.remaining = r.rid, r.max_new_tokens
+                st.generated = []
+                st.kv_tokens = int(kv_keep[j])
+                st.act_tokens = pbs[j] - int(kv_keep[j])
+                self._cur_tok[i] = cur_np[j]
+                self.blockman.new_request(r.rid)
+                for t in range(pbs[j]):
+                    kind = BlockType.KV if t < kv_keep[j] else BlockType.ACT
+                    if self.blockman.append_token(r.rid, kind) is None:
+                        raise RuntimeError(
+                            f"{kind.value} block pool exhausted during "
+                            f"prefill of request {r.rid}")
+        except Exception:
+            # a fail-loud raise must not leak the batch's rids/blocks and
+            # poison the server for retries (the engine's guard, mirrored):
+            # release every slot of THIS batch before propagating
+            self._release_slots([i for i, _ in assignments])
+            raise
+
+    # --- adaptive controller hook (between chunks) ----------------------------
+    def _apply_alloc(self, new_alloc: HostAllocation) -> None:
+        """Retag host pool capacity toward ``new_alloc`` and commit whatever
+        actually moved (free capacity only; live blocks never stranded)."""
+        delta = new_alloc.act_blocks - self.alloc.act_blocks
+        if delta > 0:
+            moved = self.blockman.retag_capacity(
+                Location.HOST, BlockType.KV, BlockType.ACT, delta)
+        elif delta < 0:
+            moved = -self.blockman.retag_capacity(
+                Location.HOST, BlockType.ACT, BlockType.KV, -delta)
+        else:
+            moved = 0
+        self.alloc = dataclasses.replace(
+            self.alloc, act_blocks=self.alloc.act_blocks + moved,
+            kv_blocks=self.alloc.kv_blocks - moved)
+        self.act_frac = self.alloc.act_fraction
+        if self.controller is not None:
+            self.controller.alloc = self.alloc
+
+    def _release_slots(self, slot_idx) -> None:
+        """Failure-path cleanup: free the given slots' requests (block
+        tables included) and reset their states, so a fail-loud raise never
+        leaks rids/blocks and poisons the server for later requests
+        (``free_request`` is a no-op for unknown rids)."""
+        for i in slot_idx:
+            st = self.slots[i]
+            if st.active:
+                self.blockman.free_request(st.rid)
+            self.slots[i] = SlotState()
+
+    # ------------------------------------------------------------- one chunk
+    def _run_chunk(self, n_steps: int, step_idx: int,
+                   out: Dict[int, np.ndarray], stats: ServeStats) -> None:
+        """ONE decode dispatch for ``n_steps`` masked iterations, then the
+        host-side replay: block accounting, per-step pipeline simulation,
+        and sub-chunk TTFT/TBT/completion bookkeeping."""
+        B = self.n_slots
+        remaining = np.asarray([s.remaining if s.active else 0
+                                for s in self.slots])
+        active = np.zeros((n_steps, B), bool)           # (S, B)
+        for i in range(B):
+            active[:min(int(remaining[i]), n_steps), i] = True
+        at0 = np.asarray([s.act_tokens for s in self.slots], np.int64)
+        kt0 = np.asarray([s.kv_tokens for s in self.slots], np.int64)
+        # per-slot store schedule for the chunk (Eq. 11 running ratio,
+        # unrolled host-side exactly like the engine's decode loop)
+        sched = store_act_schedule(self.alloc, at0, kt0, n_steps)  # (B, S)
+        sched_t = sched.T & active                                 # (S, B)
+        # per-step region growth (host replay of what the device will do);
+        # sched_t is already active-masked, ~sched_t is not
+        act_run = at0[None, :] + np.cumsum(sched_t, 0)   # lengths AFTER step s
+        kv_run = kt0[None, :] + np.cumsum((~sched_t) & active, 0)
+        # a region overflow inside the scan would drop writes SILENTLY while
+        # the validity masks keep claiming the slots — fail loudly before the
+        # dispatch instead (the admission path already does for prefixes),
+        # releasing the doomed slots so the server stays usable
+        if n_steps and (int(kv_run[-1].max()) > self.kv_cap
+                        or int(act_run[-1].max()) > self.act_cap):
+            doomed = np.where((kv_run[-1] > self.kv_cap)
+                              | (act_run[-1] > self.act_cap))[0]
+            rids = [self.slots[i].rid for i in doomed]
+            self._release_slots(doomed)
+            raise RuntimeError(
+                f"cache region would overflow within this chunk "
+                f"(kv {int(kv_run[-1].max())}/{self.kv_cap}, "
+                f"act {int(act_run[-1].max())}/{self.act_cap}) for "
+                f"requests {rids}; raise the caps or cap max_new_tokens")
+        # static attention bounds from the known slot lengths, page-aligned
+        # so jit shapes bucket (the pages_bound idiom, DESIGN.md §7.4/§10);
+        # the overflow check above guarantees they cover every active slot
+        kv_bound = min(self.kv_cap, bucket(int(kt0.max()) + n_steps))
+        act_bound = min(self.act_cap, bucket(int(at0.max()) + n_steps))
+
+        if self.executor is not None:
+            # the layer-streamed loop blocks per layer by design: report its
+            # real dispatch and sync counts, not one-per-chunk
+            d0, b0 = self.executor.dispatches, self.executor.blocking_syncs
+            toks, cur, self.cache = self.executor.decode_chunk(
+                jnp.asarray(self._cur_tok), self.cache, sched_t, active,
+                kv_bound=kv_bound, act_bound=act_bound)
+            stats.device_calls += self.executor.dispatches - d0
+            stats.host_syncs += self.executor.blocking_syncs - b0
+        else:
+            toks, cur, self.cache = self._decode_chunk_jit(
+                jnp.asarray(self._cur_tok), self.cache,
+                jnp.asarray(sched_t), jnp.asarray(active),
+                kv_bound=kv_bound, act_bound=act_bound)
+            stats.device_calls += 1
+            stats.host_syncs += 1      # the chunk's ONE blocking readback
+        toks_np = np.asarray(toks, np.int32)
+        self._cur_tok = np.array(cur, np.int32)     # writable host copy
+        stats.chunks += 1
+        # the amortized tax: ONE host dispatch + blocking sync per chunk
+        # (per token at chunk_steps=1) — serialized on the critical path, so
+        # it lands in sim_time ahead of the chunk's per-step lane totals
+        stats.sim_time += self.hw.dispatch_overhead
+
+        # per-step token totals AFTER each step (host replay — no device
+        # sync; the mirrors advance exactly like the on-device lengths)
+        kv_tok = [int(kv_run[s][active[s]].sum()) for s in range(n_steps)]
+        act_tok = [int(act_run[s][active[s]].sum()) for s in range(n_steps)]
+        specs = [[MiniBatchSpec(int(active[s].sum()), kv_tok[s], act_tok[s],
+                                0, ctx_tokens=int(
+                                    (kv_run[s] + act_run[s])[active[s]].mean()))]
+                 for s in range(n_steps)]
+        sim_results = simulate_steps(self.cfg, self.hw, specs)
+
+        # sub-chunk bookkeeping: tokens, block replay, TTFT/TBT, retirement.
+        # A pool-exhausted raise mid-replay releases every slot (the host
+        # mirrors are no longer trustworthy) instead of leaking their blocks.
+        try:
+            for s in range(n_steps):
+                stats.sim_time += sim_results[s].total
+                stats.steps += 1
+                for i, st in enumerate(self.slots):
+                    if not active[s, i]:
+                        continue
+                    st.generated.append(int(toks_np[i, s]))
+                    st.remaining -= 1
+                    stats.generated_tokens += 1
+                    if sched_t[s, i]:
+                        st.act_tokens += 1
+                    else:
+                        st.kv_tokens += 1
+                    kind = BlockType.ACT if sched_t[s, i] else BlockType.KV
+                    if self.blockman.append_token(st.rid, kind) is None:
+                        raise RuntimeError(
+                            f"{kind.value} block pool exhausted at decode "
+                            f"step {step_idx + s} of request {st.rid}; the "
+                            "precomputed store_act schedule requires "
+                            "allocation to succeed")
+                    if st.rid not in stats.ttft:
+                        stats.ttft[st.rid] = stats.sim_time
+                    if st.remaining == 0:
+                        out[st.rid] = np.asarray(st.generated, np.int32)
+                        stats.tbt[st.rid] = stats.sim_time / max(
+                            len(st.generated), 1)
+                        stats.completed_at[st.rid] = step_idx + s
+                        self.blockman.free_request(st.rid)
+                        # free the slot (cache rows overwritten on admit)
+                        self.slots[i] = SlotState()
+        except Exception:
+            self._release_slots(range(self.n_slots))
+            raise
+
+        meas: List = []
+        if self.executor is not None:
+            # drain completed iteration timelines so the executor's span
+            # store stays bounded over a long-lived server
+            meas = self.executor.drain_timeline("decode")
+            self._measured.extend(meas)
+            stats.measured_time += sum(m.total for m in meas)
+        if self.controller is not None:
+            # per-chunk timeline batch: measured iteration timelines where
+            # they exist (offload), the simulated predictions otherwise —
+            # the engine's group-granular observe, at chunk granularity
+            self.controller.observe(meas if meas else sim_results,
+                                    kv_tok, act_tok, sim=sim_results)
+            self._apply_alloc(self.controller.update())
 
     # ---------------------------------------------------------------- serving
     def run(self, requests: List[Request],
@@ -183,71 +445,21 @@ class ContinuousBatchingServer:
         while queue or pending or any(s.active for s in self.slots):
             while pending and pending[0][0] <= step_idx:
                 queue.append(pending.pop(0)[1])
-            # admit into free slots
+            # chunk-boundary admission: coalesce ALL due arrivals with free
+            # slots into one batched prefill dispatch
+            assignments = []
             for i, s in enumerate(self.slots):
                 if not s.active and queue:
-                    self._admit(i, queue.pop(0), step_idx)
-            active = np.array([s.active for s in self.slots])
-            if not active.any():
+                    assignments.append((i, queue.pop(0)))
+            if assignments:
+                self._admit_batch(assignments, stats)
+            if not any(s.active for s in self.slots):
                 if pending:                  # idle gap before the next arrival
-                    step_idx += 1
+                    step_idx = pending[0][0]
                     continue
                 break
-            # per-slot store-type decision (Eq. 11 running ratio)
-            store = np.zeros((self.n_slots,), bool)
-            for i, s in enumerate(self.slots):
-                if s.active:
-                    kind = next_block_kind(self.alloc, s.n_act, s.n_kv)
-                    store[i] = kind == "act"
-                    if store[i]:
-                        s.n_act += 1
-                    else:
-                        s.n_kv += 1
-            lg, self.cache = self._decode(
-                jnp.asarray(self._cur_tok[:, None]), self.cache,
-                jnp.asarray(store))
-            nxt = np.asarray(jnp.argmax(lg[:, -1], -1), np.int32)
-
-            # pipeline cost of this iteration on the target hardware
-            kv_tok = int(np.asarray(self.cache["kv_len"])[active].sum())
-            act_tok = int(np.asarray(self.cache["act_len"])[active].sum())
-            ctx = int(np.asarray(self.cache["kv_len"] + self.cache["act_len"])[active].mean())
-            res = simulate_step(self.cfg, self.hw,
-                                [MiniBatchSpec(int(active.sum()), kv_tok,
-                                               act_tok, 0, ctx_tokens=ctx)])
-            stats.sim_time += res.total
-
-            meas: List = []
-            if self.executor is not None:
-                # drain completed iteration timelines so the executor's
-                # span store stays bounded over a long-lived server
-                meas = self.executor.drain_timeline("decode")
-                self._measured.extend(meas)
-            if self.controller is not None:
-                # measured iteration timelines where they exist (offload),
-                # the simulated prediction otherwise; host-side data only
-                self.controller.observe(meas if meas else [res],
-                                        [kv_tok], [act_tok], sim=[res])
-                self.alloc = self.controller.update()
-                self.controller.alloc = self.alloc
-                self.act_frac = self.alloc.act_fraction
-
-            for i, s in enumerate(self.slots):
-                if not s.active:
-                    continue
-                s.generated.append(int(self._cur_tok[i]))
-                self._cur_tok[i] = nxt[i]
-                s.remaining -= 1
-                stats.generated_tokens += 1
-                if s.ttft_step == step_idx or s.ttft_step >= 0:
-                    if s.rid not in stats.ttft:
-                        stats.ttft[s.rid] = stats.sim_time
-                if s.remaining == 0:
-                    out[s.rid] = np.asarray(s.generated, np.int32)
-                    stats.tbt[s.rid] = stats.sim_time / max(len(s.generated), 1)
-                    stats.completed_at[s.rid] = step_idx
-                    # free the slot (cache rows are overwritten on admit)
-                    self.slots[i] = SlotState()
-            stats.steps += 1
-            step_idx += 1
+            n_steps = min(self.chunk_steps,
+                          max(s.remaining for s in self.slots if s.active))
+            self._run_chunk(n_steps, step_idx, out, stats)
+            step_idx += n_steps
         return out, stats

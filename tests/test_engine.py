@@ -50,6 +50,30 @@ def test_engine_device_call_count(setup):
         np.testing.assert_array_equal(out[r.rid], ref[r.rid])
 
 
+def test_engine_heterogeneous_max_new_token_stat(setup):
+    """GenStats.generated_tokens counts each request's OWN budget
+    (sum(max_new_tokens)), not B * max(max_new_tokens): the scan decode
+    pads shorter requests to the group's longest generation, but outputs
+    are trimmed — sim_throughput must not be credited for padded steps."""
+    import numpy as np
+    from repro.data.pipeline import Request
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(11)
+    mk = lambda rid, n: Request(
+        rid=rid,
+        prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+        max_new_tokens=n)
+    reqs = [mk(0, 2), mk(1, 10), mk(2, 6)]     # heterogeneous budgets
+    eng = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=3,
+                            kv_cap=128, act_cap=128)
+    out, stats = eng.generate(reqs)
+    assert stats.generated_tokens == 2 + 10 + 6
+    for r in reqs:
+        assert len(out[r.rid]) == r.max_new_tokens
+    assert stats.sim_throughput == pytest.approx(
+        stats.generated_tokens / stats.sim_time)
+
+
 def test_engine_block_accounting(setup):
     cfg, params, reqs, ref = setup
     eng = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=2,

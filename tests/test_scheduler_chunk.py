@@ -1,0 +1,171 @@
+"""Chunked-scan continuous batching: dispatch amortization + latency metrics.
+
+Covers DESIGN.md §10's contracts:
+
+  * chunked decode (S > 1) is token-exact vs the step server (S=1) and the
+    full-KV oracle under arrival churn,
+  * the dispatch-count regression guard: jit dispatches stay within
+    ``admission_batches + ceil(total_steps / S) + slack`` (the fast-lane CI
+    guard against the per-token dispatch tax creeping back),
+  * TTFT is recorded exactly once, at the request's FIRST generated token,
+    at sub-chunk granularity — including under delayed arrivals, where
+    chunk-boundary admission may only push TTFT up, never down,
+  * the static region bounds (the scheduler-side ``pages_bound``) change
+    nothing numerically.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import Request, _zipf, open_loop_trace
+from repro.models import model as M
+from repro.serving import exact_reference_generate
+from repro.serving.scheduler import ContinuousBatchingServer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs, arrivals = open_loop_trace(cfg.vocab_size, 6, seed=17)
+    ref = exact_reference_generate(cfg, params, reqs)
+    return cfg, params, reqs, arrivals, ref
+
+
+def _serve(cfg, params, reqs, arrivals, S, **kw):
+    srv = ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                   act_cap=128, chunk_steps=S, **kw)
+    out, stats = srv.run(reqs, arrival_steps=arrivals)
+    return srv, out, stats
+
+
+@pytest.mark.parametrize("S", [1, 4, 8])
+def test_chunked_token_exact_and_leak_free(setup, S):
+    cfg, params, reqs, arrivals, ref = setup
+    srv, out, stats = _serve(cfg, params, reqs, arrivals, S)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+    assert stats.generated_tokens == sum(r.max_new_tokens for r in reqs)
+    # leak-free: every slot returned, every block freed, no request table left
+    assert not any(s.active for s in srv.slots)
+    for pool in srv.blockman.pools.values():
+        assert pool.allocated == 0
+    assert not srv.blockman.tables
+
+
+def test_dispatch_count_regression_guard(setup):
+    """CI fast-lane guard on the amortized dispatch tax: the server must
+    issue exactly one jit dispatch per admission batch plus one per chunk,
+    and the chunk count can exceed ceil(steps/S) only via drain-shortened
+    chunks, each of which abuts an admission boundary (or the end of the
+    run).  A reintroduced per-token dispatch would blow this bound by ~S x.
+    """
+    cfg, params, reqs, arrivals, ref = setup
+    stats = {}
+    for S in (1, 4, 8):
+        _, out, st = _serve(cfg, params, reqs, arrivals, S)
+        stats[S] = st
+        assert st.device_calls == st.admission_batches + st.chunks
+        assert st.chunks <= int(np.ceil(st.steps / S)) \
+            + st.admission_batches + 1
+        assert st.device_calls <= st.admission_batches \
+            + int(np.ceil(st.steps / S)) + (st.admission_batches + 1)
+        # one blocking host materialisation point per dispatch, not per token
+        assert st.host_syncs == st.device_calls
+    # the headline: S=8 must beat the per-token regime by a wide margin
+    s1, s8 = stats[1], stats[8]
+    assert s1.dispatches_per_token <= 1.0 + len(reqs) / s1.generated_tokens
+    assert s8.device_calls * 2 < s1.device_calls
+    assert s8.dispatches_per_token < 0.5 * s1.dispatches_per_token
+
+
+def test_decode_region_overflow_fails_loudly(setup):
+    """A generation budget that would grow a cache region past its capacity
+    must raise BEFORE the dispatch: inside the scan the overflowing writes
+    would be silently dropped while the validity masks keep claiming the
+    slots, corrupting outputs with no error."""
+    cfg, params, *_ = setup
+    rng = np.random.default_rng(7)
+    prompt = _zipf(rng, 1.2, cfg.vocab_size, 12).astype(np.int32)
+    # tiny caps admit the prompt but cannot hold 64 generated tokens
+    req = Request(rid=0, prompt=prompt, max_new_tokens=64)
+    srv = ContinuousBatchingServer(cfg, params, slots=1, kv_cap=32,
+                                   act_cap=32, chunk_steps=4)
+    with pytest.raises(RuntimeError, match="region would overflow"):
+        srv.run([req])
+    # the failure path released the doomed slot and its blocks: the server
+    # stays usable for requests that do fit
+    assert not any(s.active for s in srv.slots)
+    for pool in srv.blockman.pools.values():
+        assert pool.allocated == 0
+    ok = Request(rid=1, prompt=prompt, max_new_tokens=4)
+    out, _ = srv.run([ok])
+    assert len(out[1]) == 4
+
+
+def test_ttft_recorded_once_at_first_token(setup):
+    """TTFT relies only on the ``rid not in stats.ttft`` guard (the old
+    ``ttft_step == step_idx or ttft_step >= 0`` condition was dead: the
+    first disjunct was subsumed by the second)."""
+    cfg, params, *_ = setup
+    rng = np.random.default_rng(3)
+    prompt = _zipf(rng, 1.2, cfg.vocab_size, 12).astype(np.int32)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=1)
+    _, out, st = _serve(cfg, params, [req], [0], 1)
+    # a 1-token request: its TTFT IS the whole serve time, and TBT equals it
+    assert st.ttft[0] == pytest.approx(st.sim_time)
+    assert st.tbt[0] == pytest.approx(st.sim_time)
+
+
+def test_ttft_under_delayed_arrivals(setup):
+    """First-token timing under open-loop churn: a request arriving later
+    must see a strictly larger TTFT (sim_time is cumulative and every step
+    has positive cost), and chunk-boundary admission can only DELAY its
+    first token — TTFT at S=8 is >= TTFT at S=1 for the delayed request."""
+    cfg, params, *_ = setup
+    rng = np.random.default_rng(4)
+    mk = lambda rid, n: Request(
+        rid=rid, prompt=_zipf(rng, 1.2, cfg.vocab_size, 10).astype(np.int32),
+        max_new_tokens=n)
+    reqs = [mk(0, 16), mk(1, 4)]
+    arrivals = [0, 5]                   # r1 lands mid-generation of r0
+    ttft = {}
+    for S in (1, 8):
+        _, out, st = _serve(cfg, params, reqs, arrivals, S)
+        assert set(st.ttft) == {0, 1}
+        assert st.ttft[1] > st.ttft[0]
+        # r1 cannot start before it arrived: at least 5 decode steps of r0
+        # (plus its own first step) are priced into its TTFT
+        assert st.completed_at[1] >= arrivals[1]
+        ttft[S] = st.ttft[1]
+    assert ttft[8] >= ttft[1]
+
+
+def test_region_bounds_do_not_change_logits(setup):
+    """The static kv/act occupancy bounds (the scheduler-side twin of the
+    kernel's ``pages_bound``) slice away only slots the validity masks
+    already zeroed: one decode step with an exact bound is bit-identical to
+    the unbounded step."""
+    cfg, params, reqs, *_ = setup
+    pb = 32
+    toks = np.zeros((2, pb), np.int32)
+    for i, r in enumerate(reqs[:2]):
+        p = r.prompt[:pb]
+        toks[i, :len(p)] = p
+        toks[i, len(p):] = p[-1]
+    lg, cache = M.hybrid_prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                                 kv_cap=128, act_cap=128, kv_keep=16)
+    store = jnp.asarray(np.array([True, False]))
+    lg_full, c_full = M.hybrid_decode_step(params, cfg,
+                                           jnp.zeros((2, 1), jnp.int32),
+                                           dict(cache), store)
+    lg_bnd, c_bnd = M.hybrid_decode_step(params, cfg,
+                                         jnp.zeros((2, 1), jnp.int32),
+                                         dict(cache), store,
+                                         kv_bound=32, act_bound=32)
+    np.testing.assert_array_equal(np.asarray(lg_full), np.asarray(lg_bnd))
+    for k in ("kv_len", "act_len", "act_pos"):
+        np.testing.assert_array_equal(np.asarray(c_full[k]),
+                                      np.asarray(c_bnd[k]))

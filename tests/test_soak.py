@@ -20,7 +20,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.data.pipeline import Request, _zipf
+from repro.core import ControllerConfig
+from repro.data.pipeline import open_loop_trace
 from repro.models import model as M
 from repro.serving import HybridServeEngine, exact_reference_generate
 from repro.serving.scheduler import ContinuousBatchingServer
@@ -38,20 +39,9 @@ def _setup(name):
 
 
 def _random_traffic(cfg, seed, n=6):
-    """Seeded random trace: prompt lengths, token budgets, arrival times.
-
-    max_new is drawn from a small set so the scan decode loop compiles a
-    bounded number of shapes on the CPU smoke runner; prompts are free-form
-    (the bucketing layer absorbs them)."""
-    rng = np.random.default_rng(seed)
-    reqs, arrivals = [], []
-    for i in range(n):
-        plen = int(rng.integers(8, 56))
-        prompt = _zipf(rng, 1.2, cfg.vocab_size, plen).astype(np.int32)
-        reqs.append(Request(rid=i, prompt=prompt,
-                            max_new_tokens=int(rng.choice([4, 8]))))
-        arrivals.append(int(rng.integers(0, 12)))
-    return reqs, arrivals
+    """Seeded random trace (the shared open-loop generator; see
+    repro.data.pipeline.open_loop_trace for the shape rationale)."""
+    return open_loop_trace(cfg.vocab_size, n, seed=seed)
 
 
 def _engine_cases():
@@ -84,7 +74,7 @@ def test_engine_soak(name, offload):
         for wave in waves:
             out, stats = eng.generate(wave)
             assert stats.generated_tokens == \
-                len(wave) * max(r.max_new_tokens for r in wave)
+                sum(r.max_new_tokens for r in wave)
             outputs.update(out)
             completed_trace.append(len(outputs))
         # monotone non-decreasing completed-request count
@@ -141,6 +131,69 @@ def test_scheduler_soak(name, offload):
                               side="right")
         assert (np.diff(cum) >= 0).all() and cum[-1] == len(reqs)
         assert srv.controller.updates > 0
+
+
+def _chunk_cases():
+    for name in CONFIGS:
+        for offload in (False, True):
+            fast = name == "opt-6.7b-reduced" and not offload
+            marks = () if fast else (pytest.mark.slow,)
+            yield pytest.param(name, offload, marks=marks,
+                               id=f"{name}-{'offload' if offload else 'dev'}")
+
+
+@pytest.mark.parametrize("name,offload", _chunk_cases())
+def test_scheduler_chunk_soak(name, offload):
+    """Randomized-churn matrix for the chunked-scan server (DESIGN.md §10):
+    S ∈ {1, 4, 8} must be token-exact vs the step server (S=1) and the
+    full-KV oracle, leak-free on slots and blocks, with monotone
+    completions — adaptive controller on, offload on and off."""
+    cfg, params = _setup(name)
+    reqs, arrivals = _random_traffic(
+        cfg, seed=zlib.crc32(name.encode()) % 1000 + 21)
+    ref = exact_reference_generate(cfg, params, reqs)
+
+    outs = {}
+    for S in (1, 4, 8):
+        # update_every counts CHUNKS (the controller observes per-chunk
+        # timeline batches); update per chunk so even the S=8 run — only a
+        # handful of chunks long — exercises the adaptive path
+        with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                      act_cap=128, chunk_steps=S,
+                                      adaptive=True, offload=offload,
+                                      ctl=ControllerConfig(update_every=1)
+                                      ) as srv:
+            out, stats = srv.run(reqs, arrival_steps=arrivals)
+            outs[S] = out
+            # token-exactness vs the full-KV oracle, controller active
+            for r in reqs:
+                np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+            assert stats.generated_tokens == sum(r.max_new_tokens
+                                                 for r in reqs)
+            # leak-free: slots all returned, block pools drained, and the
+            # controller's retags conserved the host tier's total capacity
+            assert not any(s.active for s in srv.slots)
+            for pool in srv.blockman.pools.values():
+                assert pool.allocated == 0
+            assert not srv.blockman.tables
+            # every request completes at/after arrival; completions over
+            # time form a monotone non-decreasing count
+            assert set(stats.completed_at) == {r.rid for r in reqs}
+            for i, r in enumerate(reqs):
+                assert stats.completed_at[r.rid] >= arrivals[i]
+            # completed_at is the GLOBAL iteration index (idle gaps before
+            # late arrivals included), so the horizon must span it, not
+            # just the decode-step count
+            steps_sorted = sorted(stats.completed_at.values())
+            horizon = max(max(steps_sorted), stats.steps) + 1
+            cum = np.searchsorted(steps_sorted, np.arange(horizon + 1),
+                                  side="right")
+            assert (np.diff(cum) >= 0).all() and cum[-1] == len(reqs)
+            assert srv.controller.updates > 0
+    # chunked decode is token-exact vs the step server
+    for S in (4, 8):
+        for r in reqs:
+            np.testing.assert_array_equal(outs[S][r.rid], outs[1][r.rid])
 
 
 def test_soak_trace_is_deterministic():
