@@ -125,6 +125,65 @@ def _bench_hybrid_attention():
         _emit(f"kernel.hybrid_attention.{kind}.ref_cpu", us_ref, "pure-jnp")
 
 
+def _bench_sharded_hybrid_attention():
+    """§7.4 hybrid-attention kernel under the mesh (DESIGN.md §11): the
+    kernel's KV-head grid dimension is embarrassingly parallel, so a 2-way
+    ``shard_map`` over 'model' runs each head half on its own device with
+    the page tables replicated — output bit-identical to the replicated
+    kernel (per-head math is untouched; only placement changes).  The row
+    tracks kernel-level shard overhead (interpreter wall time is NOT TPU
+    perf, but a 10x regression in the sharded wrapper would show).  Skipped
+    below 2 devices — the shard-invariance CI lane runs it under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``."""
+    if jax.device_count() < 2:
+        _emit("kernel.hybrid_attention.sharded.skipped", 0.0,
+              "needs 2 devices (XLA_FLAGS="
+              "--xla_force_host_platform_device_count=4)")
+        return
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.hybrid_attention.kernel import hybrid_paged_attention
+    B, kvh, G, D, T, d_model = 4, 2, 4, 64, 16, 256
+    rng = np.random.default_rng(0)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, kvh, G, D))
+    ks = jax.random.normal(jax.random.PRNGKey(1), (8, T, kvh, D)) * 0.3
+    vs = jax.random.normal(jax.random.PRNGKey(2), (8, T, kvh, D)) * 0.3
+    ap = jax.random.normal(jax.random.PRNGKey(3), (8, T, d_model)) * 0.5
+    sc = jnp.ones((d_model,))
+    wk = jax.random.normal(jax.random.PRNGKey(4), (d_model, kvh, D)) * 0.05
+    wv = jax.random.normal(jax.random.PRNGKey(5), (d_model, kvh, D)) * 0.05
+    pt, pty, pn = _hybrid_tables("act_heavy", B, 12, 10, rng)
+    pt, pty, pn = jnp.asarray(pt), jnp.asarray(pty), jnp.asarray(pn)
+    args = (q, ks, vs, ap, sc, wk, wv, pt, pty, pn)
+
+    kern = lambda *a: hybrid_paged_attention(*a, norm_type="layernorm")
+    mesh = jax.make_mesh((2,), ("model",))
+    rep = P(None)
+    f_sharded = shard_map(
+        kern, mesh=mesh,
+        in_specs=(P(None, "model", None, None),      # q: kv-head sharded
+                  P(None, None, "model", None),      # k pages
+                  P(None, None, "model", None),      # v pages
+                  P(None, None, None),               # act pages: replicated
+                  rep,                               # norm scale
+                  P(None, "model", None),            # wk
+                  P(None, "model", None),            # wv
+                  P(None, None), P(None, None), P(None, None)),  # tables
+        out_specs=P(None, "model", None, None),
+        check_rep=False)
+    out_rep = kern(*args)
+    out_sh = f_sharded(*args)
+    np.testing.assert_array_equal(np.asarray(out_rep), np.asarray(out_sh))
+    us_rep = _time(lambda *a: kern(*a), *args, reps=2)
+    us_sh = _time(lambda *a: f_sharded(*a), *args, reps=2)
+    _emit("kernel.hybrid_attention.sharded.replicated", us_rep,
+          f"grid=(B,12,{kvh}) 1 device", kvh=kvh)
+    _emit("kernel.hybrid_attention.sharded.head_sharded_2way", us_sh,
+          f"grid=(B,12,{kvh // 2}) x2 devices, bit-identical, "
+          f"overhead={us_sh / max(us_rep, 1e-9):.2f}x",
+          kvh=kvh, overhead_ratio=us_sh / max(us_rep, 1e-9))
+
+
 def _bench_engine_syncs():
     """Host<->device round trips per request: the scan-based engine does ONE
     batched prefill + ONE decode-loop dispatch per group, vs (B prefills +
@@ -182,6 +241,7 @@ def run():
     _bench_kv_gen()
     _bench_ssd()
     _bench_hybrid_attention()
+    _bench_sharded_hybrid_attention()
     _bench_engine_syncs()
     _bench_weight_stream()
     with open("BENCH_kernels.json", "w") as f:

@@ -1,0 +1,110 @@
+"""Mesh-sharded serving sweep -> BENCH_sharded.json (DESIGN.md §11).
+
+Engine + chunked scheduler on 1x1 / 1x2 / 2x2 meshes (forced host devices):
+per-mesh dispatches/token and blocking-sync counts — the PR 4 guarantees,
+asserted to hold PER MESH — plus simulated throughput vs shard count (the
+policy stack prices the aggregate machine via ``costmodel.scale_for_shards``,
+so throughput climbs with the shard count while the dispatch counts do not
+move).  Every sharded row is asserted token-exact against the 1x1 run.
+
+Needs a multi-device host platform:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python -m benchmarks.run --only sharded_bench
+
+Meshes that don't fit the available devices are skipped with a note (the
+module never fails on a single-device box — it just reports the 1x1 row).
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.data.pipeline import open_loop_trace
+from repro.launch.mesh import make_test_mesh
+from repro.models import model as M
+from repro.serving import HybridServeEngine
+from repro.serving.scheduler import ContinuousBatchingServer
+from repro.sharding import make_shard_plan
+
+MESHES = [(1, 1), (1, 2), (2, 2)]
+
+
+def run():
+    name = "opt-6.7b-reduced"
+    cfg = get_config(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs, arrivals = open_loop_trace(cfg.vocab_size, 6, seed=13,
+                                     max_new_choices=(8, 16), arrival_hi=16)
+    rows = []
+    base_eng = base_srv = None
+    for shape in MESHES:
+        need = shape[0] * shape[1]
+        if jax.device_count() < need:
+            emit(f"sharded.{shape[0]}x{shape[1]}.skipped", 0.0,
+                 f"needs {need} devices, have {jax.device_count()} "
+                 f"(set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+            continue
+        plan = (make_shard_plan(cfg, make_test_mesh(*shape), params)
+                if shape != (1, 1) else None)
+        shard_factor = plan.shard_factor if plan else 1
+
+        eng = HybridServeEngine(cfg, params, mode="hybrid", plan=plan)
+        out_e, st_e = eng.generate(reqs)
+        with ContinuousBatchingServer(cfg, params, slots=3, kv_cap=128,
+                                      act_cap=128, chunk_steps=4,
+                                      plan=plan) as srv:
+            out_s, st_s = srv.run(reqs, arrival_steps=arrivals)
+        if shape == (1, 1):
+            base_eng, base_srv = out_e, out_s
+        else:  # sharded rows must reproduce the single-device tokens
+            for r in reqs:
+                np.testing.assert_array_equal(out_e[r.rid], base_eng[r.rid])
+                np.testing.assert_array_equal(out_s[r.rid], base_srv[r.rid])
+        # the PR 4 invariants, per mesh
+        assert st_s.device_calls == st_s.admission_batches + st_s.chunks
+        assert st_s.host_syncs == st_s.device_calls
+        row = dict(
+            mesh=f"{shape[0]}x{shape[1]}", shard_factor=shard_factor,
+            engine_device_calls=st_e.device_calls,
+            engine_sim_throughput=st_e.sim_throughput,
+            sched_device_calls=st_s.device_calls,
+            sched_host_syncs=st_s.host_syncs,
+            sched_dispatches_per_token=st_s.dispatches_per_token,
+            sched_sim_throughput=st_s.throughput,
+            generated_tokens=st_s.generated_tokens,
+        )
+        rows.append(row)
+        emit(f"sharded.{row['mesh']}.engine", 0.0,
+             f"calls={row['engine_device_calls']} "
+             f"sim_tps={row['engine_sim_throughput']:.1f} "
+             f"shard_factor={shard_factor}")
+        emit(f"sharded.{row['mesh']}.sched", 0.0,
+             f"calls={row['sched_device_calls']} "
+             f"syncs={row['sched_host_syncs']} "
+             f"disp/tok={row['sched_dispatches_per_token']:.2f} "
+             f"sim_tps={row['sched_sim_throughput']:.1f}")
+    # dispatch counts must be mesh-invariant; sim throughput must climb
+    by_factor = {}
+    for r in rows:
+        by_factor.setdefault(r["shard_factor"], r)
+        assert r["sched_device_calls"] == rows[0]["sched_device_calls"]
+        assert r["engine_device_calls"] == rows[0]["engine_device_calls"]
+    if 1 in by_factor and 2 in by_factor:
+        assert by_factor[2]["sched_sim_throughput"] > \
+            by_factor[1]["sched_sim_throughput"], \
+            "2-way TP must beat single-shard simulated throughput"
+    with open("BENCH_sharded.json", "w") as f:
+        json.dump(dict(arch=name, rows=rows), f, indent=1)
+    print("wrote BENCH_sharded.json")
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
+    run()

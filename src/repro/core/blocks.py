@@ -27,14 +27,17 @@ class Location(enum.Enum):
     DEVICE = "device"
 
 
-def kv_block_bytes(cfg: ModelConfig) -> int:
-    """S_KV: one KV block, all layers."""
-    return BLOCK_TOKENS * cfg.kv_bytes_per_token() * cfg.num_layers
+def kv_block_bytes(cfg: ModelConfig, shards: int = 1) -> int:
+    """S_KV: one KV block, all layers.  ``shards`` > 1 gives the PER-SHARD
+    slice of the block under an N-way model axis (KV heads split N ways;
+    DESIGN.md §11) — the bytes ONE device's PCIe lane moves per block."""
+    return BLOCK_TOKENS * cfg.kv_bytes_per_token() * cfg.num_layers // shards
 
 
-def act_block_bytes(cfg: ModelConfig) -> int:
-    """S_ACT: one ACT block, all layers (= S_KV/2 for MHA)."""
-    return BLOCK_TOKENS * cfg.act_bytes_per_token() * cfg.num_layers
+def act_block_bytes(cfg: ModelConfig, shards: int = 1) -> int:
+    """S_ACT: one ACT block, all layers (= S_KV/2 for MHA).  ``shards`` as in
+    ``kv_block_bytes`` (ACT checkpoints split on d_model)."""
+    return BLOCK_TOKENS * cfg.act_bytes_per_token() * cfg.num_layers // shards
 
 
 @dataclass
@@ -100,8 +103,17 @@ class BlockManager:
 
     def __init__(self, cfg: ModelConfig, *,
                  host_kv_blocks: int, host_act_blocks: int,
-                 dev_kv_blocks: int, dev_act_blocks: int):
+                 dev_kv_blocks: int, dev_act_blocks: int,
+                 shard_factor: int = 1):
+        """``shard_factor``: the model-axis tensor-parallel factor of the
+        serving mesh (ShardPlan.shard_factor; 1 = single device, today's
+        numbers bit-for-bit).  Blocks stay LOGICAL — one block spans all
+        shards — but per-shard byte accounting (``block_bytes``,
+        ``bytes_capacity``, ``host_bytes_to_load``) divides by it: each
+        shard's lane moves only its 1/N head/d_model slice."""
+        assert shard_factor >= 1
         self.cfg = cfg
+        self.shard_factor = int(shard_factor)
         self.pools: Dict[Tuple[BlockType, Location], PhysicalPool] = {
             (BlockType.KV, Location.HOST): PhysicalPool(host_kv_blocks),
             (BlockType.ACT, Location.HOST): PhysicalPool(host_act_blocks),
@@ -199,6 +211,33 @@ class BlockManager:
             self.retags[key] = self.retags.get(key, 0) + moved
         return moved
 
+    # -- per-shard accounting (DESIGN.md §11) ---------------------------------
+    def block_bytes(self, kind: BlockType, *, per_shard: bool = True) -> int:
+        """Bytes of one block — per shard by default (what one device's lane
+        moves), total across shards with ``per_shard=False``."""
+        f = kv_block_bytes if kind == BlockType.KV else act_block_bytes
+        return f(self.cfg, self.shard_factor if per_shard else 1)
+
+    def bytes_capacity(self, kind: BlockType, loc: Location,
+                       *, per_shard: bool = True) -> int:
+        """Byte capacity of one pool (per shard by default)."""
+        return self.pools[(kind, loc)].capacity * self.block_bytes(
+            kind, per_shard=per_shard)
+
+    def explain(self) -> str:
+        """Decision-log-style report of the pool capacities and the
+        per-shard byte math (the ShardPlan.explain() companion)."""
+        lines = [f"BlockManager shard_factor={self.shard_factor} "
+                 f"(per-shard bytes divide by this; 1 = single shard)"]
+        for (kind, loc), pool in self.pools.items():
+            per = self.block_bytes(kind)
+            tot = self.block_bytes(kind, per_shard=False)
+            lines.append(
+                f"  {loc.value:6s} {kind.value:3s}: capacity={pool.capacity} "
+                f"blocks x {tot} B ({per} B/shard), "
+                f"allocated={pool.allocated}")
+        return "\n".join(lines)
+
     # -- queries --------------------------------------------------------------
     def counts(self, rid: int) -> Dict[str, int]:
         t = self.tables[rid]
@@ -215,7 +254,11 @@ class BlockManager:
         return sum(b.ntokens for b in self.tables[rid])
 
     def host_bytes_to_load(self, rid: int) -> Tuple[int, int]:
-        """(kv_bytes, act_bytes) that must cross PCIe for one generation step."""
+        """(kv_bytes, act_bytes) that must cross ONE shard's PCIe lane for a
+        generation step.  Under tensor parallelism every shard loads only
+        its 1/shard_factor slice of each block in parallel with the others,
+        so per-shard bytes are what the lane time prices; at shard_factor=1
+        this is the total, bit-for-bit as before."""
         cfg = self.cfg
         kv = act = 0
         for b in self.tables[rid]:
@@ -223,7 +266,7 @@ class BlockManager:
                 continue
             per_tok = (cfg.kv_bytes_per_token() if b.kind == BlockType.KV
                        else cfg.act_bytes_per_token())
-            sz = b.ntokens * per_tok * cfg.num_layers
+            sz = b.ntokens * per_tok * cfg.num_layers // self.shard_factor
             if b.kind == BlockType.KV:
                 kv += sz
             else:

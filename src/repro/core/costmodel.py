@@ -75,6 +75,37 @@ TPU_V5E = HardwareSpec(
 HARDWARE = {h.name: h for h in (RTX4090, TPU_V5E)}
 
 
+def scale_for_shards(hw: HardwareSpec, shards: int) -> HardwareSpec:
+    """The aggregate machine a ``shards``-way tensor-parallel serving group
+    presents to the policy stack (DESIGN.md §11).
+
+    Every per-device resource that the model axis multiplies scales
+    linearly: compute, HBM bandwidth, device memory, and — the term the
+    KV-offloading bottleneck analysis singles out — the HOST LINK, because
+    each shard owns its own PCIe lanes and loads only its 1/N slice of
+    every block (per-shard bandwidth x shard count).  Host memory is NOT
+    scaled: the host tier is one shared DRAM pool.  Per-dispatch overhead
+    is NOT scaled either: the dispatch tax is paid once per jitted call
+    regardless of how many devices participate, which is exactly why the
+    PR 4 dispatch-count guarantees must hold per mesh.
+
+    ``shards=1`` returns ``hw`` unchanged (bit-for-bit — the single-shard
+    policy numbers are the same object), so every consumer can take the
+    scaled spec unconditionally.
+    """
+    assert shards >= 1
+    if shards == 1:
+        return hw
+    return dataclasses.replace(
+        hw,
+        name=f"{hw.name}-x{shards}",
+        flops=hw.flops * shards,
+        hbm_bw=hw.hbm_bw * shards,
+        host_link_bw=hw.host_link_bw * shards,
+        device_mem=hw.device_mem * shards,
+    )
+
+
 # =============================================================================
 # analytic per-operation costs (seconds)
 # =============================================================================

@@ -19,3 +19,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke runs (reduced configs)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small explicit (data, model) mesh for tests and benchmarks.
+
+    Runs on whatever devices exist; on a CPU-only box force a multi-device
+    host platform FIRST (before any jax import touches the backend):
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=4
+
+    — the recipe the shard-invariance suite and ``benchmarks/
+    sharded_bench.py`` use (README §serving).
+    """
+    need = data * model
+    have = jax.device_count()
+    if have < need:
+        raise RuntimeError(
+            f"mesh {data}x{model} needs {need} devices but only {have} "
+            f"exist; set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} before starting the process")
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch opt-6.7b-reduced \
       --requests 8 --mode hybrid
+
+Mesh-sharded serving (DESIGN.md §11): pass ``--mesh data,model`` to run the
+same engine tensor-parallel.  On a CPU-only box force host devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m repro.launch.serve --arch opt-6.7b-reduced \
+      --mesh 2,2 --verify
 """
 from __future__ import annotations
 
@@ -33,17 +40,36 @@ def main(argv=None):
                          "continuous server (1 = classic step server; "
                          "larger chunks amortize the dispatch tax at the "
                          "cost of admission latency, DESIGN.md §10)")
+    ap.add_argument("--mesh", default="1,1", metavar="DATA,MODEL",
+                    help="serving mesh shape; the ShardPlan built from it "
+                         "drives every subsystem (DESIGN.md §11).  Needs "
+                         "data*model devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--explain-plan", action="store_true",
+                    help="print the ShardPlan decision log and exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    data, model_ax = (int(x) for x in args.mesh.split(","))
+    plan = None
+    if (data, model_ax) != (1, 1) or args.explain_plan:
+        from repro.launch.mesh import make_test_mesh
+        from repro.sharding import make_shard_plan
+        mesh = make_test_mesh(data, model_ax)
+        plan = make_shard_plan(cfg, mesh, params)
+        print(plan.explain() if args.explain_plan else
+              plan.explain().splitlines()[0])
+        if args.explain_plan:
+            return None, None
     reqs = request_trace(cfg.vocab_size, args.requests,
                          prompt_mean=args.prompt_mean,
                          gen_tokens=args.gen_tokens, seed=1)
     if args.continuous:
         from repro.serving import ContinuousBatchingServer
         eng = ContinuousBatchingServer(cfg, params, slots=4,
-                                       chunk_steps=args.chunk_steps)
+                                       chunk_steps=args.chunk_steps,
+                                       plan=plan)
         print(f"continuous batching: 4 slots, chunk_steps="
               f"{args.chunk_steps}, act_frac={eng.act_frac:.2f}")
         t0 = time.time()
@@ -54,13 +80,12 @@ def main(argv=None):
               f"({stats.dispatches_per_token:.2f}/token, {wall:.1f}s wall); "
               f"simulated {stats.throughput:.1f} tok/s")
         if args.verify:
-            import numpy as np
             ref = exact_reference_generate(cfg, params, reqs)
             ok = all(np.array_equal(out[r.rid], ref[r.rid]) for r in reqs)
             print(f"token-exact: {ok}")
             assert ok
         return out, stats
-    eng = HybridServeEngine(cfg, params, mode=args.mode)
+    eng = HybridServeEngine(cfg, params, mode=args.mode, plan=plan)
     print(f"engine: mode={args.mode} host ACT:KV ratio="
           f"{eng.alloc.act_blocks}:{eng.alloc.kv_blocks} (act_frac={eng.act_frac:.2f})")
     t0 = time.time()

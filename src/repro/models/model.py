@@ -686,6 +686,13 @@ def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
         jnp.where(store_act[:, None, None], v[:, 0], va[arangeB, act_len]))
     ac2 = ac.at[arangeB, act_len].set(
         jnp.where(store_act[:, None], act_in.astype(ac.dtype), ac[arangeB, act_len]))
+    # mesh-sharded serving (DESIGN.md §11): pin the carried regions to the
+    # plan's layout — batch over 'data', KV heads over 'model', checkpoints
+    # over d_model — so SPMD propagation cannot drift the scan carry toward
+    # replication.  No mesh installed (single-device paths): exact no-ops.
+    kc2 = SH.constrain(kc2, SH.BATCH, None, SH.MODEL, None)
+    vc2 = SH.constrain(vc2, SH.BATCH, None, SH.MODEL, None)
+    ac2 = SH.constrain(ac2, SH.BATCH, None, SH.MODEL)
 
     # --- attention over [KV region ; ACT region (recomputed)], bounded -----
     kv_valid = jnp.arange(kv_b)[None, :] < (kv_len + (~store_act))[:, None]

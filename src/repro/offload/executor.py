@@ -39,27 +39,45 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as nn
 from repro.models import model as M
 from repro.models import transformer as T
-from repro.offload.host_pool import HostWeightPool, Region
-from repro.offload.streamer import WeightStreamer, donate_buffers
+from repro.offload.host_pool import HostWeightPool, Region, ShardedRegion
+from repro.offload.streamer import (ShardedWeightLanes, WeightStreamer,
+                                    donate_buffers)
 from repro.offload.timeline import MeasuredTimeline
 
 Cache = Dict[str, Any]
 
 
 class OffloadExecutor:
-    """Executes hybrid-cache inference with host-streamed layer weights."""
+    """Executes hybrid-cache inference with host-streamed layer weights.
+
+    ``plan`` (a ``ShardPlan``, DESIGN.md §11) turns the single weight lane
+    into per-mesh-position lanes: each device gets its own host shard,
+    staging ring and copy stream (``ShardedWeightLanes``), the resident
+    remainder is committed to the mesh, spilled KV regions live in
+    per-shard pinned arenas, and every recorded span carries its shard so
+    lane timelines aggregate across shards (max — parallel lanes) for the
+    controller.  ``plan=None`` (or a 1x1 mesh) is today's executor
+    unchanged."""
 
     def __init__(self, cfg: ModelConfig, params, *, prefetch_depth: int = 1,
-                 timeline: Optional[MeasuredTimeline] = None):
+                 timeline: Optional[MeasuredTimeline] = None, plan=None):
         assert M.family(cfg) == "uniform", \
             "offload executor drives uniform-family models"
         self.cfg = cfg
         self.is_moe = cfg.is_moe and cfg.moe_every == 1
         self.timeline = timeline if timeline is not None else MeasuredTimeline()
-        self.pool = HostWeightPool(cfg, params)
-        self.streamer = WeightStreamer(self.pool, prefetch_depth=prefetch_depth,
-                                       timeline=self.timeline)
-        self.resident = self.pool.resident
+        self.plan = plan if (plan is not None and plan.mesh.size > 1) else None
+        self.pool = HostWeightPool(cfg, params, plan=self.plan)
+        if self.plan is not None:
+            self.streamer = ShardedWeightLanes(
+                self.pool, self.plan, prefetch_depth=prefetch_depth,
+                timeline=self.timeline)
+            self.resident = self.plan.place_params(self.pool.resident)
+        else:
+            self.streamer = WeightStreamer(
+                self.pool, prefetch_depth=prefetch_depth,
+                timeline=self.timeline)
+            self.resident = self.pool.resident
         self.dispatches = 0                     # jit calls (device round trips)
         # blocking host materialisation points (block_until_ready / D2H
         # reads): the layer-streamed loops block once per layer by
@@ -79,7 +97,7 @@ class OffloadExecutor:
 
     # ========================================================== jitted stages
     # decode pre/post mirror M.hybrid_decode_step outside the layer scan
-    def _pre_impl(self, tok, kv_len, act_len, act_pos, store):
+    def _pre_impl(self, resident, tok, kv_len, act_len, act_pos, store):
         cfg = self.cfg
         B = tok.shape[0]
         ctx = kv_len + act_len
@@ -89,9 +107,9 @@ class OffloadExecutor:
             jnp.where(store, ctx, act_pos[jnp.arange(B), act_len]))
         sincos_act = (T._rope_for(cfg, act_pos2)
                       if cfg.pos_type in ("rope",) else None)
-        x = M._embed_tokens(self.resident, cfg, tok)
+        x = M._embed_tokens(resident, cfg, tok)
         if cfg.pos_type == "learned":
-            x = x + jnp.take(self.resident["pos_embed"], ctx, axis=0)[:, None]
+            x = x + jnp.take(resident["pos_embed"], ctx, axis=0)[:, None]
         return x, act_pos2, sincos_new, sincos_act
 
     def _layer_impl(self, lp, kc, vc, ac, h, kv_len, act_len, store,
@@ -101,21 +119,21 @@ class OffloadExecutor:
                                     self.is_moe, kv_bound=kv_bound,
                                     act_bound=act_bound)
 
-    def _post_impl(self, h, prev, kv_len, act_len, store, active):
+    def _post_impl(self, resident, h, prev, kv_len, act_len, store, active):
         """active: (B,) bool — inactive slots keep their carried token and
         frozen lengths (the chunked scheduler retires slots mid-chunk; the
         full-loop callers pass all-true)."""
         cfg = self.cfg
-        x = nn.apply_norm(h, self.resident["final_norm"], cfg.norm_type)
-        logits = M.unembed(self.resident, cfg, x)
+        x = nn.apply_norm(h, resident["final_norm"], cfg.norm_type)
+        logits = M.unembed(resident, cfg, x)
         nxt = jnp.where(active,
                         jnp.argmax(logits[:, -1], -1).astype(jnp.int32), prev)
         return logits, nxt, (kv_len + ((~store) & active).astype(jnp.int32),
                              act_len + (store & active).astype(jnp.int32))
 
     # prefill stages mirror M.hybrid_prefill_batched around the layer scan
-    def _prefill_embed_impl(self, tokens):
-        x, positions = M.embed_input(self.resident, self.cfg,
+    def _prefill_embed_impl(self, resident, tokens):
+        x, positions = M.embed_input(resident, self.cfg,
                                      {"tokens": tokens})
         return x, T._rope_for(self.cfg, positions)
 
@@ -139,11 +157,11 @@ class OffloadExecutor:
         ac = jnp.take_along_axis(act_in, act_idx[:, :, None], axis=1).astype(dt)
         return h, kc, vc, ac
 
-    def _prefill_post_impl(self, h, kv_keep, last_pos, kfit, act_cap):
+    def _prefill_post_impl(self, resident, h, kv_keep, last_pos, kfit, act_cap):
         cfg = self.cfg
         B = h.shape[0]
-        h = nn.apply_norm(h, self.resident["final_norm"], cfg.norm_type)
-        logits = M.unembed(self.resident, cfg,
+        h = nn.apply_norm(h, resident["final_norm"], cfg.norm_type)
+        logits = M.unembed(resident, cfg,
                            h[jnp.arange(B), last_pos - 1][:, None])
         cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
         act_pos = kv_keep[:, None] + jnp.arange(act_cap, dtype=jnp.int32)[None]
@@ -169,7 +187,7 @@ class OffloadExecutor:
         last_pos = jnp.asarray(last_pos, jnp.int32)
         S = int(tokens.shape[1])
         self.timeline.begin_step("prefill")
-        x, sincos = self._prefill_embed(tokens)
+        x, sincos = self._prefill_embed(self.resident, tokens)
         self.dispatches += 1
         ks: List[jax.Array] = []
         vs: List[jax.Array] = []
@@ -187,7 +205,8 @@ class OffloadExecutor:
             self.streamer.release(l)
             ks.append(kc); vs.append(vc); acs.append(ac)
         cur, act_pos, kv_len, act_len = self._prefill_post(
-            x, kv_keep, last_pos, kfit=min(S, kv_cap), act_cap=act_cap)
+            self.resident, x, kv_keep, last_pos, kfit=min(S, kv_cap),
+            act_cap=act_cap)
         self.dispatches += 1
         self.timeline.end_step()
         cache: Cache = {"k": ks, "v": vs, "act": acs, "act_pos": act_pos,
@@ -201,16 +220,49 @@ class OffloadExecutor:
                 [v[l] for l in range(self.cfg.num_layers)]
         return split(cache["k"]), split(cache["v"]), split(cache["act"])
 
-    def _kv_upload(self, hk_l: np.ndarray, hv_l: np.ndarray):
+    def _kv_layer_sharding(self, shape):
+        """NamedSharding of one layer's (B, kv_cap, KVH, D) KV slice under
+        the plan (the stacked cache spec with the layer dim dropped)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = self.plan.cache_spec("k", (1,) + tuple(shape))
+        return NamedSharding(self.plan.mesh, P(*tuple(spec)[1:]))
+
+    def _kv_upload(self, hk_l, hv_l):
         """Spilled-KV region load for one layer.  Runs on the caller thread:
         ``jax.device_put`` is a synchronous GIL-holding copy on this backend
         (DESIGN.md §8.4), so routing it through the copy stream would
         serialise against compute rather than overlap — the lane time is
         recorded either way and the simulator's pcie lane stays the
-        predictor for it."""
+        predictor for it.
+
+        Per-shard lanes (plan): ``hk_l``/``hv_l`` are per-lane head-slice
+        views; the put lands sharded on the mesh and the wall window is
+        recorded once per lane with that lane's bytes — N physical lanes
+        moving 1/N each in parallel."""
         t0 = time.perf_counter()
-        kc = jax.device_put(hk_l)
-        vc = jax.device_put(hv_l)
+        if isinstance(hk_l, list):              # per-shard lanes
+            full_k = np.concatenate(hk_l, axis=2)
+            full_v = np.concatenate(hv_l, axis=2)
+            sh = self._kv_layer_sharding(full_k.shape)
+            kc = jax.device_put(full_k, sh)
+            vc = jax.device_put(full_v, sh)
+            jax.block_until_ready((kc, vc))
+            self.blocking_syncs += 1
+            t1 = time.perf_counter()
+            for s, (k_s, v_s) in enumerate(zip(hk_l, hv_l)):
+                self.timeline.record("pcie", "kv", t0, t1,
+                                     k_s.nbytes + v_s.nbytes, shard=s)
+            return kc, vc
+        if self.plan is not None:
+            # single arena (cache dims indivisible) but mesh execution: the
+            # put must still land ON the mesh, or the layer jit would mix
+            # mesh-committed and device-0-committed operands
+            sh = self._kv_layer_sharding(hk_l.shape)
+            kc = jax.device_put(hk_l, sh)
+            vc = jax.device_put(hv_l, sh)
+        else:
+            kc = jax.device_put(hk_l)
+            vc = jax.device_put(hv_l)
         jax.block_until_ready((kc, vc))
         self.blocking_syncs += 1
         self.timeline.record("pcie", "kv", t0, time.perf_counter(),
@@ -220,29 +272,73 @@ class OffloadExecutor:
     def _kv_store_back(self, kc2, vc2, hk_l, hv_l, kv_idx: np.ndarray,
                        store_np: np.ndarray) -> None:
         """Write the new token's K/V row back into the spilled host region
-        (the paper's per-step store traffic, upstream lane)."""
+        (the paper's per-step store traffic, upstream lane).  Per-shard
+        lanes write their own head slice of the row."""
         t0 = time.perf_counter()
+        lanes = isinstance(hk_l, list)
+        hk0 = hk_l[0] if lanes else hk_l
         B = kv_idx.shape[0]
-        gather = jnp.asarray(np.minimum(kv_idx, hk_l.shape[1] - 1))
+        cap = hk0.shape[1]
+        gather = jnp.asarray(np.minimum(kv_idx, cap - 1))
         rows_k = np.asarray(kc2[jnp.arange(B), gather])
         rows_v = np.asarray(vc2[jnp.arange(B), gather])
         nbytes = 0
+        n = len(hk_l) if lanes else 1
+        kvh_s = rows_k.shape[1] // n
         for b in range(B):
             if not store_np[b]:                 # KV-bound token: row is new
-                hk_l[b, min(kv_idx[b], hk_l.shape[1] - 1)] = rows_k[b]
-                hv_l[b, min(kv_idx[b], hv_l.shape[1] - 1)] = rows_v[b]
+                row = min(kv_idx[b], cap - 1)
+                if lanes:
+                    for s in range(n):
+                        hk_l[s][b, row] = rows_k[b, s * kvh_s:(s + 1) * kvh_s]
+                        hv_l[s][b, row] = rows_v[b, s * kvh_s:(s + 1) * kvh_s]
+                else:
+                    hk_l[b, row] = rows_k[b]
+                    hv_l[b, row] = rows_v[b]
                 nbytes += rows_k[b].nbytes + rows_v[b].nbytes
-        self.timeline.record("pcie_up", "st", t0, time.perf_counter(), nbytes)
+        t1 = time.perf_counter()
+        if lanes:
+            for s in range(n):
+                self.timeline.record("pcie_up", "st", t0, t1, nbytes // n,
+                                     shard=s)
+        else:
+            self.timeline.record("pcie_up", "st", t0, t1, nbytes)
 
-    def _spill_out(self, ks, vs, region: Region, kv_len):
-        """Move the whole KV region device→host into the pinned arena."""
+    def _spill_out(self, ks, vs, region, kv_len):
+        """Move the whole KV region device→host into the pinned arena(s).
+
+        Single arena: per-layer views of one contiguous region.  Per-shard
+        arenas (``ShardedRegion``): each model-axis lane's arena receives
+        that lane's head slice; ``hk[l]``/``hv[l]`` become per-lane view
+        lists and the store spans carry per-shard byte counts."""
         cfg = self.cfg
         Lc = cfg.num_layers
         B, kv_cap = ks[0].shape[0], ks[0].shape[1]
+        t0 = time.perf_counter()
+        if isinstance(region, ShardedRegion):
+            n = region.n_lanes
+            kvh_s = cfg.num_kv_heads // n
+            views = [region.lane_view(
+                s, (2, Lc, B, kv_cap, kvh_s, cfg.head_dim),
+                np.dtype(cfg.dtype)) for s in range(n)]
+            hk = [[views[s][0][l] for s in range(n)] for l in range(Lc)]
+            hv = [[views[s][1][l] for s in range(n)] for l in range(Lc)]
+            nbytes = 0
+            for l in range(Lc):
+                k_np, v_np = np.asarray(ks[l]), np.asarray(vs[l])
+                for s in range(n):
+                    hk[l][s][...] = k_np[:, :, s * kvh_s:(s + 1) * kvh_s]
+                    hv[l][s][...] = v_np[:, :, s * kvh_s:(s + 1) * kvh_s]
+                nbytes += k_np.nbytes + v_np.nbytes
+                donate_buffers((ks[l], vs[l]))   # device copies are now stale
+            t1 = time.perf_counter()
+            for s in range(n):
+                self.timeline.record("pcie_up", "st", t0, t1, nbytes // n,
+                                     shard=s)
+            return hk, hv, np.asarray(kv_len).copy()
         arr = region.view((2, Lc, B, kv_cap, cfg.num_kv_heads, cfg.head_dim),
                           np.dtype(cfg.dtype))
         hk, hv = arr[0], arr[1]
-        t0 = time.perf_counter()
         nbytes = 0
         for l in range(Lc):
             hk[l][...] = np.asarray(ks[l])
@@ -288,8 +384,8 @@ class OffloadExecutor:
         for s in range(n_steps):
             self.timeline.begin_step("decode")
             store = jnp.asarray(sched[s])
-            x, act_pos, sn, sa = self._pre(cur[:, None], kv_len, act_len,
-                                           act_pos, store)
+            x, act_pos, sn, sa = self._pre(self.resident, cur[:, None],
+                                           kv_len, act_len, act_pos, store)
             self.dispatches += 1
             for l in range(Lc):
                 lp = self.streamer.acquire(seq)
@@ -316,7 +412,8 @@ class OffloadExecutor:
             toks.append(np.asarray(cur, np.int32))
             self.blocking_syncs += 1
             _, cur, (kv_len, act_len) = self._post(
-                x, cur, kv_len, act_len, store, jnp.ones((B,), bool))
+                self.resident, x, cur, kv_len, act_len, store,
+                jnp.ones((B,), bool))
             self.dispatches += 1
             if spill:
                 kv_len_np = kv_len_np + (~sched[s]).astype(kv_len_np.dtype)
@@ -346,8 +443,8 @@ class OffloadExecutor:
         kv_len, act_len = cache["kv_len"], cache["act_len"]
         store = jnp.asarray(store)
         self.timeline.begin_step("decode")
-        x, act_pos, sn, sa = self._pre(tok, kv_len, act_len,
-                                       cache["act_pos"], store)
+        x, act_pos, sn, sa = self._pre(self.resident, tok, kv_len,
+                                       act_len, cache["act_pos"], store)
         self.dispatches += 1
         self.streamer.begin(range(Lc))
         for l in range(Lc):
@@ -362,7 +459,7 @@ class OffloadExecutor:
             self.dispatches += 1
             self.streamer.release(l)
         logits, _, (kv_len2, act_len2) = self._post(
-            x, tok[:, 0], kv_len, act_len, store,
+            self.resident, x, tok[:, 0], kv_len, act_len, store,
             jnp.ones((tok.shape[0],), bool))
         self.dispatches += 1
         self.timeline.end_step()
@@ -415,8 +512,8 @@ class OffloadExecutor:
             self.timeline.begin_step("decode")
             store = jnp.asarray(sched[s])
             active = jnp.asarray(act_np[s])
-            x, act_pos, sn, sa = self._pre(cur[:, None], kv_len, act_len,
-                                           act_pos, store)
+            x, act_pos, sn, sa = self._pre(self.resident, cur[:, None],
+                                           kv_len, act_len, act_pos, store)
             self.dispatches += 1
             for l in range(Lc):
                 lp = self.streamer.acquire(seq)
@@ -432,8 +529,9 @@ class OffloadExecutor:
                 seq += 1
             toks.append(np.where(act_np[s], np.asarray(cur, np.int32), -1))
             self.blocking_syncs += 1
-            _, cur, (kv_len, act_len) = self._post(x, cur, kv_len, act_len,
-                                                   store, active)
+            _, cur, (kv_len, act_len) = self._post(self.resident, x, cur,
+                                                   kv_len, act_len, store,
+                                                   active)
             self.dispatches += 1
             self.timeline.end_step()
         out = (np.stack(toks, axis=1).astype(np.int32) if toks

@@ -37,11 +37,19 @@ class HostWeightPool:
     uploads one shard per ``jax.device_put`` dispatch.  Everything else
     (embedding, positional table, final norm, untied unembedding) is small,
     touched every token, and stays device-resident.
+
+    ``plan`` (a ``ShardPlan``, DESIGN.md §11): the host copy is ADDITIONALLY
+    pre-sliced per mesh position under the plan's serve TP specs —
+    ``lane_view(i)`` exposes one device's slice of every layer with the
+    streamer's pool interface, so each mesh position gets its own weight
+    lane (its own staging ring + copy stream) uploading only its shard.
     """
 
-    def __init__(self, cfg: ModelConfig, params: Dict[str, Any]):
+    def __init__(self, cfg: ModelConfig, params: Dict[str, Any], *,
+                 plan=None):
         assert "layers" in params, "host offload drives uniform-family models"
         self.cfg = cfg
+        self.plan = plan
         self.resident = {k: v for k, v in params.items() if k != "layers"}
         stacked = params["layers"]
         self._layers: List[Any] = [
@@ -53,6 +61,25 @@ class HostWeightPool:
             sum(leaf.nbytes for leaf in jax.tree.leaves(shard))
             for shard in self._layers
         ]
+        # per-mesh-position index maps into one layer's host tree (uniform
+        # across layers: the stacked tree is homogeneous)
+        self._lane_idx: List[List[tuple]] = []
+        self._treedef = None
+        self.layer_leaf_specs: List[Any] = []
+        if plan is not None:
+            from jax.sharding import PartitionSpec as P
+            specs = plan.param_specs_for(params)
+            proto_leaves, self._treedef = jax.tree_util.tree_flatten(
+                self._layers[0])
+            # drop the stacked leading layer dim from each leaf's spec;
+            # spec trees mirror the param tree, so flatten order matches
+            spec_leaves = jax.tree_util.tree_leaves(
+                specs["layers"], is_leaf=lambda x: isinstance(x, P))
+            self.layer_leaf_specs = [P(*tuple(s)[1:]) for s in spec_leaves]
+            for dev in plan.lane_devices():
+                self._lane_idx.append([
+                    plan.device_slices(s, a.shape)[dev]
+                    for a, s in zip(proto_leaves, self.layer_leaf_specs)])
 
     @property
     def num_layers(self) -> int:
@@ -61,6 +88,35 @@ class HostWeightPool:
     def layer(self, l: int):
         """Host (numpy) shard of layer ``l``'s weights."""
         return self._layers[l]
+
+    @property
+    def num_lanes(self) -> int:
+        return max(len(self._lane_idx), 1)
+
+    def lane_view(self, lane: int) -> "LaneView":
+        return LaneView(self, lane)
+
+
+class LaneView:
+    """One mesh position's slice of a ``HostWeightPool`` — quacks like the
+    pool for a ``WeightStreamer`` (``layer`` / ``layer_nbytes``), returning
+    zero-copy numpy views of that device's shard of each layer."""
+
+    def __init__(self, pool: HostWeightPool, lane: int):
+        self.pool, self.lane = pool, lane
+        idx = pool._lane_idx[lane]
+        self._slices = []
+        for l in range(pool.num_layers):
+            leaves = jax.tree_util.tree_leaves(pool.layer(l))
+            self._slices.append(jax.tree_util.tree_unflatten(
+                pool._treedef, [a[i] for a, i in zip(leaves, idx)]))
+        self.layer_nbytes = [
+            sum(leaf.nbytes for leaf in jax.tree.leaves(s))
+            for s in self._slices
+        ]
+
+    def layer(self, l: int):
+        return self._slices[l]
 
 
 @dataclass
@@ -171,14 +227,80 @@ def kv_region_blocks(B: int, kv_cap: int) -> int:
     return B * (kv_cap // BLOCK_TOKENS)
 
 
+class ShardedRegion:
+    """Per-mesh-position spill regions allocated together (one per model-axis
+    shard); ``lane_view`` reinterprets one lane's bytes."""
+
+    def __init__(self, regions: List[Region]):
+        self.regions = regions
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.regions)
+
+    def lane_view(self, lane: int, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        return self.regions[lane].view(shape, dtype)
+
+    def free(self) -> None:
+        for r in self.regions:
+            r.free()
+
+
+class ShardedSpillPool:
+    """Per-shard pinned arenas keyed by model-axis position (DESIGN.md §11).
+
+    Each lane's arena holds that shard's 1/N slice of every spilled block
+    (``kv_block_bytes(cfg, shards)`` per block), so spill traffic is
+    accounted — and on real hardware pinned — per PCIe lane.  The engine
+    API mirrors ``HostBlockPool`` (``alloc``/``allocated_blocks``/
+    ``check_invariants``); ``alloc`` is all-or-nothing across lanes."""
+
+    def __init__(self, lanes: List[HostBlockPool]):
+        assert lanes
+        self.lanes = lanes
+
+    def alloc(self, n_blocks: int):
+        regions: List[Region] = []
+        for lane in self.lanes:
+            r = lane.alloc(n_blocks)
+            if r is None:
+                for got in regions:
+                    got.free()
+                return None
+            regions.append(r)
+        return ShardedRegion(regions)
+
+    @property
+    def allocated_blocks(self) -> int:
+        """LOGICAL blocks allocated (every lane holds one 1/N slice of each
+        logical block, and ``alloc`` is all-or-nothing, so the lanes agree —
+        the count matches ``HostBlockPool`` semantics, not lanes x blocks)."""
+        return self.lanes[0].allocated_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return min(lane.free_blocks for lane in self.lanes)
+
+    def check_invariants(self) -> None:
+        for lane in self.lanes:
+            lane.check_invariants()
+
+
 def make_spill_pool(cfg: ModelConfig, *, max_requests: int,
-                    kv_cap: int) -> HostBlockPool:
+                    kv_cap: int, shards: int = 1):
     """The engine's once-allocated KV staging pool: enough host blocks to
     back the largest jit group's KV region, plus one group of slack for
     admission churn.  This is the *staging* arena the executor spills into,
     not the full Algorithm-1 host cache — the latter can be hundreds of GiB
     on the simulated target hardware.  (ACT blocks prefer device residency
     per §4.2.1 and are never spilled today, so no ACT arena exists; add one
-    here if ACT spill ever becomes real.)"""
+    here if ACT spill ever becomes real.)
+
+    ``shards`` > 1 returns a ``ShardedSpillPool``: one arena per model-axis
+    position, each sized for that shard's 1/N block slices."""
     kv_blocks = 2 * kv_region_blocks(max_requests, kv_cap)
-    return HostBlockPool(kv_blocks, kv_block_bytes(cfg))
+    if shards == 1:
+        return HostBlockPool(kv_blocks, kv_block_bytes(cfg))
+    return ShardedSpillPool([
+        HostBlockPool(kv_blocks, kv_block_bytes(cfg, shards))
+        for _ in range(shards)])

@@ -95,15 +95,16 @@ def _compute_only(ex: OffloadExecutor, cur, cache, sched, dev_layers):
     act_pos = cache["act_pos"]
     for s in range(sched.shape[0]):
         store = jnp.asarray(sched[s])
-        x, act_pos, sn, sa = ex._pre(cur[:, None], kv_len, act_len,
-                                     act_pos, store)
+        x, act_pos, sn, sa = ex._pre(ex.resident, cur[:, None], kv_len,
+                                     act_len, act_pos, store)
         for l in range(ex.cfg.num_layers):
             x, ks[l], vs[l], acs[l] = ex._layer(
                 dev_layers[l], ks[l], vs[l], acs[l], x, kv_len, act_len,
                 store, sn, sa)
             jax.block_until_ready(x)
         _, cur, (kv_len, act_len) = ex._post(
-            x, cur, kv_len, act_len, store, jnp.ones((cur.shape[0],), bool))
+            ex.resident, x, cur, kv_len, act_len, store,
+            jnp.ones((cur.shape[0],), bool))
     jax.block_until_ready(cur)
 
 

@@ -66,13 +66,22 @@ def donate_buffers(tree) -> None:
 
 
 class WeightStreamer:
-    """Streams per-layer weight shards from a ``HostWeightPool``."""
+    """Streams per-layer weight shards from a ``HostWeightPool`` (or one
+    mesh position's ``LaneView`` of it).
 
-    def __init__(self, pool: HostWeightPool, *, prefetch_depth: int = 1,
-                 timeline: Optional[MeasuredTimeline] = None):
+    ``device``: target device for the hand-off ``device_put`` (None = the
+    default device — today's single-lane behaviour).  ``shard``: mesh lane
+    index stamped on every recorded span, so per-shard lane times aggregate
+    by max across lanes in the timeline (DESIGN.md §11)."""
+
+    def __init__(self, pool, *, prefetch_depth: int = 1,
+                 timeline: Optional[MeasuredTimeline] = None,
+                 device=None, shard: int = 0):
         assert prefetch_depth >= 0
         self.pool = pool
         self.depth = prefetch_depth
+        self.device = device
+        self.shard = shard
         self.timeline = timeline
         self._stream = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="copy-stream")
@@ -101,7 +110,8 @@ class WeightStreamer:
         jax.tree.map(np.copyto, dst, self.pool.layer(layer))
         nbytes = self.pool.layer_nbytes[layer]
         if self.timeline is not None:
-            self.timeline.record("pcie", "w", t0, time.perf_counter(), nbytes)
+            self.timeline.record("pcie", "w", t0, time.perf_counter(), nbytes,
+                                 shard=self.shard)
         self.uploads += 1
         self.bytes_uploaded += nbytes
         return dst
@@ -139,10 +149,12 @@ class WeightStreamer:
                 self._dispatch(i)
         staged = self._staging.pop(i).result()
         t0 = time.perf_counter()
-        dev = jax.device_put(staged)
+        dev = (jax.device_put(staged) if self.device is None
+               else jax.device_put(staged, self.device))
         jax.block_until_ready(dev)
         if self.timeline is not None:       # hand-off rides the pcie lane too
-            self.timeline.record("pcie", "w", t0, time.perf_counter(), 0)
+            self.timeline.record("pcie", "w", t0, time.perf_counter(), 0,
+                                 shard=self.shard)
         self._live[i] = dev
         for j in range(i + 1, min(i + 1 + self.depth, len(self._sched))):
             self._dispatch(j)
@@ -167,3 +179,82 @@ class WeightStreamer:
     @property
     def resident_buffers(self) -> int:
         return len(self._live)
+
+
+class ShardedWeightLanes:
+    """Per-mesh-position weight lanes behind the ``WeightStreamer`` API
+    (DESIGN.md §11).
+
+    One ``WeightStreamer`` per mesh device, each with its own staging ring
+    and copy-stream thread, staging only that device's slice of every layer
+    (``HostWeightPool.lane_view``).  ``acquire`` waits on every lane's
+    staging, hands each slice to ITS device, and assembles the global
+    sharded layer tree with ``jax.make_array_from_single_device_arrays`` —
+    zero copy, the per-lane buffers ARE the global array's shards.  The
+    per-lane ``device_put`` hand-offs serialise on the caller thread (the
+    same CPU-backend tail the single-lane streamer documents); the staging
+    copies — the DMA analogue — genuinely run on N concurrent lanes.
+
+    Spans are recorded into ONE shared timeline with per-lane ``shard``
+    stamps, so lane seconds aggregate by max across shards downstream.
+    """
+
+    def __init__(self, pool, plan, *, prefetch_depth: int = 1,
+                 timeline: Optional[MeasuredTimeline] = None):
+        self.plan = plan
+        self.pool = pool
+        self.devices = plan.lane_devices()
+        self.lanes = [
+            WeightStreamer(pool.lane_view(i), prefetch_depth=prefetch_depth,
+                           timeline=timeline, device=dev, shard=i)
+            for i, dev in enumerate(self.devices)
+        ]
+        # global leaf shapes/specs for assembly (uniform across layers)
+        import jax.tree_util as jtu
+        self._leaf_shapes = [a.shape for a in jtu.tree_leaves(pool.layer(0))]
+        self._treedef = jtu.tree_structure(pool.layer(0))
+        from jax.sharding import NamedSharding
+        self._shardings = [NamedSharding(plan.mesh, s)
+                           for s in pool.layer_leaf_specs]
+
+    def begin(self, schedule) -> None:
+        sched = list(schedule)
+        for lane in self.lanes:
+            lane.begin(sched)
+
+    def acquire(self, i: int):
+        import jax.tree_util as jtu
+        per_lane = [jtu.tree_leaves(lane.acquire(i)) for lane in self.lanes]
+        leaves = [
+            jax.make_array_from_single_device_arrays(
+                shape, sharding, [per_lane[ln][j] for ln in range(
+                    len(self.lanes))])
+            for j, (shape, sharding) in enumerate(
+                zip(self._leaf_shapes, self._shardings))
+        ]
+        return jtu.tree_unflatten(self._treedef, leaves)
+
+    def release(self, i: int) -> None:
+        for lane in self.lanes:
+            lane.release(i)
+
+    def close(self) -> None:
+        for lane in self.lanes:
+            lane.close()
+
+    # aggregated stats (sums across lanes; per-lane detail on .lanes)
+    @property
+    def uploads(self) -> int:
+        return sum(lane.uploads for lane in self.lanes)
+
+    @property
+    def bytes_uploaded(self) -> int:
+        return sum(lane.bytes_uploaded for lane in self.lanes)
+
+    @property
+    def peak_resident(self) -> int:
+        return max(lane.peak_resident for lane in self.lanes)
+
+    @property
+    def resident_buffers(self) -> int:
+        return max(lane.resident_buffers for lane in self.lanes)

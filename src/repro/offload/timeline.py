@@ -38,6 +38,11 @@ class Span:
     start: float              # perf_counter seconds
     end: float
     nbytes: int = 0
+    # mesh-position lane index (DESIGN.md §11): under tensor parallelism
+    # every shard owns its own PCIe lane, so per-shard spans of one step
+    # aggregate by MAX (the lanes run in parallel), not by sum.  0 = the
+    # single-shard default, which reproduces the old sum exactly.
+    shard: int = 0
 
     @property
     def dur(self) -> float:
@@ -96,12 +101,12 @@ class MeasuredTimeline:
 
     # ------------------------------------------------------------------ spans
     def record(self, lane: str, tag: str, start: float, end: float,
-               nbytes: int = 0) -> None:
+               nbytes: int = 0, shard: int = 0) -> None:
         assert lane in LANES, lane
         with self._lock:
             if self._cur is None:           # span outside any step: open one
                 self._cur = _Step(tag="untagged", start=start)
-            self._cur.spans.append(Span(lane, tag, start, end, nbytes))
+            self._cur.spans.append(Span(lane, tag, start, end, nbytes, shard))
 
     @contextmanager
     def task(self, lane: str, tag: str, nbytes: int = 0):
@@ -124,19 +129,33 @@ class MeasuredTimeline:
         with self._lock:
             steps = [s for s in self._steps if tag is None or s.tag == tag]
         for s in steps:
-            busy = {l: 0.0 for l in LANES}
-            tag_busy: dict = {}
+            # per-(lane, shard) and per-(tag, shard) sums first; the step's
+            # lane/tag seconds are then the MAX across shards — per-shard
+            # PCIe lanes run in parallel, so the slowest lane is the lane
+            # time the controller should regress against.  Single-shard
+            # spans (shard 0 everywhere) reduce to the old plain sums, so
+            # the aggregation is one code path for every mesh.
+            busy_s: dict = {}
+            tag_s: dict = {}
             traffic = {k: 0.0 for k in TRAFFIC_TAGS}
             finish = []
             end = s.end
             for sp in s.spans:
-                busy[sp.lane] += sp.dur
-                tag_busy[sp.tag] = tag_busy.get(sp.tag, 0.0) + sp.dur
+                busy_s[(sp.lane, sp.shard)] = \
+                    busy_s.get((sp.lane, sp.shard), 0.0) + sp.dur
+                tag_s[(sp.tag, sp.shard)] = \
+                    tag_s.get((sp.tag, sp.shard), 0.0) + sp.dur
                 cat = _TAG_TO_TRAFFIC.get(sp.tag)
                 if cat is not None:
-                    traffic[cat] += sp.nbytes
+                    traffic[cat] += sp.nbytes       # bytes ARE additive
                 finish.append(sp.end - s.start)
                 end = max(end, sp.end)
+            busy = {l: 0.0 for l in LANES}
+            for (l, _), v in busy_s.items():
+                busy[l] = max(busy[l], v)
+            tag_busy: dict = {}
+            for (t, _), v in tag_s.items():
+                tag_busy[t] = max(tag_busy.get(t, 0.0), v)
             out.append(TimelineResult(
                 total=end - s.start, pcie_busy=busy["pcie"],
                 gpu_busy=busy["gpu"], traffic=traffic, finish=finish,

@@ -46,7 +46,8 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, TimelineResult, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
-from repro.serving.util import bucket, pack_group
+from repro.serving.util import bucket, pack_group, trace_ctx
+from repro.sharding import ShardPlan
 
 
 @dataclass
@@ -82,7 +83,8 @@ class HybridServeEngine:
                  generalized: bool = False, offload: bool = False,
                  budget: Optional[OffloadBudget] = None,
                  adaptive: bool = False,
-                 ctl: Optional[ControllerConfig] = None):
+                 ctl: Optional[ControllerConfig] = None,
+                 plan: Optional[ShardPlan] = None):
         """generalized=True uses the byte-ratio-aware Algorithm-1 variant
         (DESIGN.md §7) — recommended for GQA models; False reproduces the
         paper's policy exactly.
@@ -101,9 +103,22 @@ class HybridServeEngine:
         config-driven ``budget`` can't hold the group's KV blocks
         device-side.  Tokens are identical to the device-resident path;
         stats additionally carry measured lane times (``measured_time`` /
-        ``measured_gpu_busy``) next to the simulated predictions."""
+        ``measured_gpu_busy``) next to the simulated predictions.
+
+        plan=... runs the whole hot path tensor-parallel under the given
+        ``ShardPlan`` (DESIGN.md §11): weights are committed to the mesh
+        under the serve TP specs, caches carry the plan's KV-head/d_model
+        shardings through both jitted dispatches (greedy argmax included —
+        the logits reduction lowers to one on-device collective, no new
+        host syncs), and the whole policy stack prices the AGGREGATE
+        machine (``costmodel.scale_for_shards``: per-shard PCIe bandwidth x
+        shard count, device memory x shard count).  ``plan=None`` (or a
+        1x1 mesh) is bit-for-bit today's single-device engine."""
         assert mode in ("hybrid", "kv", "act")
         assert M.family(cfg) == "uniform", "engine drives uniform-family models"
+        self.plan = plan
+        shards = plan.shard_factor if plan is not None else 1
+        hw = cm.scale_for_shards(hw, shards)
         self.cfg, self.params, self.hw, self.mode = cfg, params, hw, mode
         self.max_minibatch = max_minibatch
         self.kv_cap, self.act_cap = kv_cap, act_cap
@@ -139,29 +154,37 @@ class HybridServeEngine:
             cfg,
             host_kv_blocks=max(self.alloc.kv_blocks, 1),
             host_act_blocks=max(self.alloc.act_blocks, 1),
-            dev_kv_blocks=dev_kv, dev_act_blocks=device_act_blocks(cfg, hw))
+            dev_kv_blocks=dev_kv, dev_act_blocks=device_act_blocks(cfg, hw),
+            shard_factor=shards)
 
         self.executor = None
         self.measured_steps: List[TimelineResult] = []
         if offload:
             from repro.offload import OffloadExecutor, make_spill_pool
             self.executor = OffloadExecutor(
-                cfg, params, prefetch_depth=self.budget.prefetch_depth)
+                cfg, params, prefetch_depth=self.budget.prefetch_depth,
+                plan=plan)
             self.spill_kv_pool = make_spill_pool(
-                cfg, max_requests=max_minibatch, kv_cap=kv_cap)
+                cfg, max_requests=max_minibatch, kv_cap=kv_cap,
+                shards=shards)
             # the executor owns host shards of the layer weights + the small
             # resident tree; the engine must not pin the caller's full
             # device-resident parameter set for its lifetime (the monolithic
             # jit wrappers below are the device-resident path's, not ours)
             self.params = None
         else:
+            if plan is not None:
+                # weights committed to the mesh under the serve TP specs;
+                # the jitted dispatches below inherit the placement and the
+                # cache constraints keep SPMD propagation honest
+                self.params = plan.place_params(params)
             self._prefill_batch_jit = functools.partial(
                 jax.jit, static_argnames=("kv_cap", "act_cap"))(
                     self._prefill_batch_impl)
             # cache pools are donated: each scan iteration updates the KV/ACT
             # buffers in place instead of copying the full pools
             self._decode_loop_jit = jax.jit(self._decode_loop_impl,
-                                            donate_argnums=(1,))
+                                            donate_argnums=(2,))
 
     def close(self) -> None:
         """Shut down the offload executor's copy-stream thread and staging
@@ -179,16 +202,29 @@ class HybridServeEngine:
         self.close()
 
     # --- jitted wrappers ------------------------------------------------------
-    def _prefill_batch_impl(self, tokens, kv_keep, last_pos, kv_cap, act_cap):
+    # params are an explicit jit argument (not a closure capture) so their
+    # committed mesh placement under a ShardPlan reaches XLA as the input
+    # sharding — the lowered computation is genuinely tensor-parallel
+    def _prefill_batch_impl(self, params, tokens, kv_keep, last_pos, kv_cap,
+                            act_cap):
         lg, cache = M.hybrid_prefill_batched(
-            self.params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
+            params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
             act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos)
+        if self.plan is not None:
+            cache = self.plan.constrain_cache(cache)
         # fold the greedy sample of the prefill logits into the same dispatch
+        # (under a plan the argmax reduces sharded logits with one on-device
+        # collective — the token, not the logits, crosses back to the host)
         return jnp.argmax(lg[:, -1], -1).astype(jnp.int32), cache
 
-    def _decode_loop_impl(self, cur, cache, store_sched):
-        return M.hybrid_decode_loop(self.params, self.cfg, cur, cache,
-                                    store_sched)
+    def _decode_loop_impl(self, params, cur, cache, store_sched):
+        if self.plan is not None:
+            cache = self.plan.constrain_cache(cache)
+        toks, cache = M.hybrid_decode_loop(params, self.cfg, cur, cache,
+                                           store_sched)
+        if self.plan is not None:
+            cache = self.plan.constrain_cache(cache)
+        return toks, cache
 
     # --- public API ----------------------------------------------------------
     def plan_groups(self, requests: List[Request]) -> List[List[Request]]:
@@ -295,10 +331,11 @@ class HybridServeEngine:
                 kv_cap=self.kv_cap, act_cap=self.act_cap)
             stats.device_calls += self.executor.dispatches - d0
         else:
-            cur, cache = self._prefill_batch_jit(
-                jnp.asarray(toks), jnp.asarray(kv_keep),
-                jnp.asarray(np.asarray(pbs, np.int32)),
-                kv_cap=self.kv_cap, act_cap=self.act_cap)
+            with trace_ctx(self.plan):
+                cur, cache = self._prefill_batch_jit(
+                    self.params, jnp.asarray(toks), jnp.asarray(kv_keep),
+                    jnp.asarray(np.asarray(pbs, np.int32)),
+                    kv_cap=self.kv_cap, act_cap=self.act_cap)
             stats.device_calls += 1
 
         # all block accounting under try/finally: a fail-loud raise below must
@@ -356,8 +393,9 @@ class HybridServeEngine:
                     stats.measured_gpu_busy += sum(m.gpu_busy
                                                    for m in measured)
                 else:
-                    gen_dev, _ = self._decode_loop_jit(cur, cache,
-                                                       jnp.asarray(sched.T))
+                    with trace_ctx(self.plan):
+                        gen_dev, _ = self._decode_loop_jit(
+                            self.params, cur, cache, jnp.asarray(sched.T))
                     gen = np.asarray(gen_dev, np.int32)
                     stats.device_calls += 1
             else:

@@ -53,7 +53,8 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
-from repro.serving.util import bucket, pack_group
+from repro.serving.util import bucket, pack_group, trace_ctx
+from repro.sharding import ShardPlan
 
 
 @dataclass
@@ -106,7 +107,8 @@ class ContinuousBatchingServer:
                  hw: cm.HardwareSpec = cm.TPU_V5E, generalized: bool = True,
                  offload: bool = False, prefetch_depth: int = 1,
                  adaptive: bool = False,
-                 ctl: Optional[ControllerConfig] = None):
+                 ctl: Optional[ControllerConfig] = None,
+                 plan: Optional[ShardPlan] = None):
         """chunk_steps: decode iterations per jitted dispatch.  1 reproduces
         the classic step server (admission every iteration); S>1 runs S
         masked steps per dispatch, admitting/retiring only at chunk
@@ -126,8 +128,20 @@ class ContinuousBatchingServer:
         simulated otherwise) refit the cost model, and the running ACT:KV
         target that drives per-slot store decisions follows the refit
         allocation, mirrored onto the block pools by bounded capacity
-        retags.  Host-side only; the decode dispatch is unchanged."""
+        retags.  Host-side only; the decode dispatch is unchanged.
+
+        plan=... serves tensor-parallel under the given ``ShardPlan``
+        (DESIGN.md §11): the slot cache is sharded per the plan (KV heads
+        over 'model', slots over 'data'), weights are committed to the
+        mesh, and the policy stack prices the aggregate machine
+        (``costmodel.scale_for_shards``).  The chunk structure — ONE
+        dispatch + ONE blocking sync per chunk, ONE per admission batch —
+        holds PER MESH: sharding adds collectives inside the dispatch,
+        never host syncs (the PR 4 dispatch-count guarantees)."""
         assert M.family(cfg) == "uniform"
+        self.plan = plan
+        shards = plan.shard_factor if plan is not None else 1
+        hw = cm.scale_for_shards(hw, shards)
         self.cfg, self.params, self.hw = cfg, params, hw
         self.n_slots, self.kv_cap, self.act_cap = slots, kv_cap, act_cap
         self.chunk_steps = max(int(chunk_steps), 1)
@@ -147,29 +161,36 @@ class ContinuousBatchingServer:
         self.blockman = BlockManager(
             cfg, host_kv_blocks=max(self.alloc.kv_blocks, 1),
             host_act_blocks=max(self.alloc.act_blocks, 1),
-            dev_kv_blocks=64, dev_act_blocks=device_act_blocks(cfg, hw))
+            dev_kv_blocks=64, dev_act_blocks=device_act_blocks(cfg, hw),
+            shard_factor=shards)
         # offload mode: per-iteration timelines drained out of the executor
         # as they complete (keeping its span store bounded) and accumulated
         # here for the measured_steps property
         self._measured: List = []
         self.cache = M.init_hybrid_cache(cfg, slots, kv_cap, act_cap)
+        if plan is not None:
+            self.cache = plan.place_cache(self.cache)
+            # the admission jit keeps the params resident either way
+            # (offload included); commit them to the mesh once
+            self.params = plan.place_params(params)
         self.slots = [SlotState() for _ in range(slots)]
         self.executor = None
         if offload:
             from repro.offload import OffloadExecutor
             self.executor = OffloadExecutor(cfg, params,
-                                            prefetch_depth=prefetch_depth)
+                                            prefetch_depth=prefetch_depth,
+                                            plan=plan)
         else:
             # cache donated: the slot pools update in place every chunk
             self._decode_chunk_jit = functools.partial(
                 jax.jit, static_argnames=("kv_bound", "act_bound"),
-                donate_argnums=(1,))(self._decode_chunk_impl)
+                donate_argnums=(2,))(self._decode_chunk_impl)
         # admission is one jitted call per boundary: batched prefill + greedy
         # sample + slot-row writes, cache donated (offload mode included —
         # the scheduler keeps the params resident either way)
         self._admit_jit = functools.partial(
             jax.jit, static_argnames=("kv_cap", "act_cap"),
-            donate_argnums=(4,))(self._admit_impl)
+            donate_argnums=(5,))(self._admit_impl)
         self._cur_tok = np.zeros((slots,), np.int32)
 
     @property
@@ -194,25 +215,35 @@ class ContinuousBatchingServer:
         self.close()
 
     # --- jitted wrappers ------------------------------------------------------
-    def _admit_impl(self, tokens, kv_keep, last_pos, slot_idx, cache,
+    # params are an explicit jit argument (not a closure capture) so their
+    # committed mesh placement under a ShardPlan reaches XLA as the input
+    # sharding — the lowered computation is genuinely tensor-parallel
+    def _admit_impl(self, params, tokens, kv_keep, last_pos, slot_idx, cache,
                     kv_cap, act_cap):
         """ONE dispatch per admission batch: group-batched prefill, greedy
         sample of its logits, and the scatter of the new rows into the free
         slots of the (donated) server cache."""
         lg, c1 = M.hybrid_prefill_batched(
-            self.params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
+            params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
             act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos)
         for key in ("k", "v", "act"):
             cache[key] = cache[key].at[:, slot_idx].set(c1[key])
         for key in ("act_pos", "kv_len", "act_len"):
             cache[key] = cache[key].at[slot_idx].set(c1[key])
+        if self.plan is not None:
+            cache = self.plan.constrain_cache(cache)
         return jnp.argmax(lg[:, -1], -1).astype(jnp.int32), cache
 
-    def _decode_chunk_impl(self, cur, cache, store_sched, active_sched,
-                           kv_bound, act_bound):
-        return M.hybrid_decode_chunk(self.params, self.cfg, cur, cache,
-                                     store_sched, active_sched,
-                                     kv_bound=kv_bound, act_bound=act_bound)
+    def _decode_chunk_impl(self, params, cur, cache, store_sched,
+                           active_sched, kv_bound, act_bound):
+        if self.plan is not None:
+            cache = self.plan.constrain_cache(cache)
+        toks, cur, cache = M.hybrid_decode_chunk(
+            params, self.cfg, cur, cache, store_sched, active_sched,
+            kv_bound=kv_bound, act_bound=act_bound)
+        if self.plan is not None:
+            cache = self.plan.constrain_cache(cache)
+        return toks, cur, cache
 
     # ------------------------------------------------------------- admission
     def _admit_batch(self, assignments: List[Tuple[int, Request]],
@@ -226,10 +257,11 @@ class ContinuousBatchingServer:
                                         self.act_frac, self.kv_cap,
                                         self.act_cap)
         slot_idx = np.asarray([i for i, _ in assignments], np.int32)
-        cur, self.cache = self._admit_jit(
-            jnp.asarray(toks), jnp.asarray(kv_keep),
-            jnp.asarray(np.asarray(pbs, np.int32)), jnp.asarray(slot_idx),
-            self.cache, kv_cap=self.kv_cap, act_cap=self.act_cap)
+        with trace_ctx(self.plan):
+            cur, self.cache = self._admit_jit(
+                self.params, jnp.asarray(toks), jnp.asarray(kv_keep),
+                jnp.asarray(np.asarray(pbs, np.int32)), jnp.asarray(slot_idx),
+                self.cache, kv_cap=self.kv_cap, act_cap=self.act_cap)
         stats.device_calls += 1
         stats.admission_batches += 1
         stats.admitted += k
@@ -342,10 +374,11 @@ class ContinuousBatchingServer:
             stats.device_calls += self.executor.dispatches - d0
             stats.host_syncs += self.executor.blocking_syncs - b0
         else:
-            toks, cur, self.cache = self._decode_chunk_jit(
-                jnp.asarray(self._cur_tok), self.cache,
-                jnp.asarray(sched_t), jnp.asarray(active),
-                kv_bound=kv_bound, act_bound=act_bound)
+            with trace_ctx(self.plan):
+                toks, cur, self.cache = self._decode_chunk_jit(
+                    self.params, jnp.asarray(self._cur_tok), self.cache,
+                    jnp.asarray(sched_t), jnp.asarray(active),
+                    kv_bound=kv_bound, act_bound=act_bound)
             stats.device_calls += 1
             stats.host_syncs += 1      # the chunk's ONE blocking readback
         toks_np = np.asarray(toks, np.int32)

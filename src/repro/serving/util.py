@@ -1,11 +1,23 @@
 """Shared serving helpers."""
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import List, Tuple
 
 import numpy as np
 
 from repro.core.blocks import BLOCK_TOKENS
+
+
+def trace_ctx(plan):
+    """Context for jitted-dispatch calls: installs the plan's mesh into the
+    shardhints threadlocal so ``SH.constrain`` hints resolve at TRACE time
+    (re-entering on cached executions is free).  ``plan=None`` is a no-op —
+    the single-device paths trace exactly as before."""
+    if plan is None:
+        return nullcontext()
+    from repro.models import shardhints as SH
+    return SH.use_mesh(plan.mesh)
 
 
 def bucket(n: int, mult: int = 16) -> int:

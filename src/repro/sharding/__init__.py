@@ -1,2 +1,4 @@
-from repro.sharding.rules import (batch_axes, batch_specs, cache_specs,
+from repro.sharding.rules import (ShardDecision, ShardLog, batch_axes,
+                                  batch_specs, cache_specs, check_plan,
                                   explain, param_spec, params_specs)
+from repro.sharding.plan import ShardPlan, make_shard_plan

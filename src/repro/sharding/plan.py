@@ -1,0 +1,184 @@
+"""ShardPlan: ONE mesh + partition plan that every serving subsystem consumes.
+
+DESIGN.md §11.  Before this object, the partition rules (`rules.py`) existed
+but only the train/dryrun path read them — the serving hot path (engine,
+chunked scheduler, offload lanes) silently assumed one device.  The plan is
+the single source of truth:
+
+  * ``param_specs``   — serve-mode tensor-parallel weight specs (rules.py),
+  * ``cache_spec``    — hybrid KV/ACT cache placement: batch over 'data',
+    KV heads over 'model', ACT checkpoints over d_model; the SEQUENCE dim is
+    deliberately never sharded here (per-token dynamic scatters against the
+    regions would turn every append into a cross-shard exchange),
+  * ``shard_factor``  — the model-axis factor the per-shard block math and
+    the cost model divide by (1 when the cache dims don't divide, so the
+    accounting never claims a split that placement dropped),
+  * placement helpers (``place_params`` / ``place_cache`` /
+    ``constrain_cache``) with the same drop-to-replicated fallback the
+    shardhints module uses, so one code path serves every mesh including
+    the single-device CPU smoke.
+
+``explain()`` renders the full decision trail — params, cache and block
+math, drops included (the rules.py ShardLog).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding import rules
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+@dataclass
+class ShardPlan:
+    """Mesh + partition plan for the serving stack (built by
+    ``make_shard_plan``; all subsystems read THIS, never the mesh directly)."""
+    cfg: ModelConfig
+    mesh: Mesh
+    param_specs: Any                      # tree of P matching the param tree
+    log: rules.ShardLog
+    data_shards: int                      # 'data' axis size
+    model_shards: int                     # 'model' axis size
+    kv_head_shards: int                   # factor REALLY applied to KV heads
+    act_shards: int                       # factor REALLY applied to act d_model
+    shard_factor: int                     # per-shard block-math divisor
+
+    # ------------------------------------------------------------ cache specs
+    def cache_spec(self, key: str, shape) -> P:
+        """Hybrid-cache leaf spec (serving layout; no sequence sharding)."""
+        shp = tuple(shape)
+        b = "data" if self.data_shards > 1 else None
+        t = "model" if self.model_shards > 1 else None
+
+        def fit(size, ax):
+            return ax if (ax is not None and size % _axis_size(self.mesh, ax)
+                          == 0) else None
+
+        if key in ("k", "v"):            # (L, B, S, KVH, D)
+            return P(None, fit(shp[1], b), None, fit(shp[3], t), None)
+        if key == "act":                 # (L, B, S, d_model)
+            return P(None, fit(shp[1], b), None, fit(shp[3], t))
+        if key == "act_pos":             # (B, act_cap)
+            return P(fit(shp[0], b), None)
+        if key in ("kv_len", "act_len"):  # (B,)
+            return P(fit(shp[0], b))
+        return P(*([None] * len(shp)))
+
+    def cache_shardings(self, cache) -> Dict[str, NamedSharding]:
+        return {k: NamedSharding(self.mesh, self.cache_spec(k, v.shape))
+                for k, v in cache.items()}
+
+    # -------------------------------------------------------------- placement
+    def param_specs_for(self, params):
+        """Serve-mode TP specs for ``params`` — the stored full-tree specs
+        when the shapes match (built by ``make_shard_plan(..., params)``),
+        recomputed otherwise (callers also place SUBTREES, e.g. the offload
+        executor's resident remainder)."""
+        if self.param_specs is not None:
+            spec_struct = jax.tree_util.tree_structure(
+                self.param_specs, is_leaf=lambda x: isinstance(x, P))
+            if spec_struct == jax.tree_util.tree_structure(params):
+                return self.param_specs
+        return rules.params_specs(self.cfg, params, self.mesh, train=False)
+
+    def place_params(self, params):
+        """Commit the weight tree to the mesh under the serve TP specs."""
+        specs = self.param_specs_for(params)
+        return jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+            params, specs, is_leaf=lambda x: isinstance(x, P))
+
+    def place_replicated(self, tree):
+        """Commit a small tree fully replicated on every mesh device (the
+        offload executor's resident remainder: embed/pos/final-norm)."""
+        return jax.tree.map(
+            lambda a: jax.device_put(
+                a, NamedSharding(self.mesh, P(*([None] * np.ndim(a))))),
+            tree)
+
+    def place_cache(self, cache):
+        """Commit a materialised hybrid cache to the mesh (scheduler init)."""
+        return {k: jax.device_put(v, NamedSharding(
+            self.mesh, self.cache_spec(k, v.shape))) for k, v in cache.items()}
+
+    def constrain_cache(self, cache):
+        """with_sharding_constraint on every cache leaf (inside-jit form of
+        ``place_cache``; same specs, traced)."""
+        return {k: jax.lax.with_sharding_constraint(
+            v, NamedSharding(self.mesh, self.cache_spec(k, v.shape)))
+            for k, v in cache.items()}
+
+    # ------------------------------------------------------- per-lane weights
+    def layer_leaf_spec(self, spec: P) -> P:
+        """Spec of one layer's slice of a stacked ``params['layers']`` leaf
+        (drop the leading layer dim)."""
+        return P(*tuple(spec)[1:])
+
+    def lane_devices(self) -> List[Any]:
+        """All mesh positions, row-major — the offload weight lanes are keyed
+        by these (each device gets its own host shard + copy stream)."""
+        return list(self.mesh.devices.flat)
+
+    def device_slices(self, spec: P, shape) -> Dict[Any, tuple]:
+        """device -> index tuple of that device's shard of a global array."""
+        sh = NamedSharding(self.mesh, spec)
+        return dict(sh.devices_indices_map(tuple(shape)))
+
+    # ----------------------------------------------------------------- report
+    def explain(self) -> str:
+        head = [
+            f"ShardPlan mesh={dict(self.mesh.shape)} "
+            f"(data={self.data_shards}, model={self.model_shards})",
+            f"  kv_head_shards={self.kv_head_shards} "
+            f"act_shards={self.act_shards} -> shard_factor={self.shard_factor}"
+            f" (per-shard block bytes divide by this; 1 means the cache "
+            f"dims did not divide and accounting stays single-shard)",
+        ]
+        return "\n".join(head + self.log.lines())
+
+
+def make_shard_plan(cfg: ModelConfig, mesh: Mesh, params=None) -> ShardPlan:
+    """Build the plan: serve-mode param specs + cache decisions, all logged.
+
+    ``params`` (or a shape tree) is optional — without it the param specs are
+    derived lazily at placement time, and the log carries only the cache
+    decisions.
+    """
+    log = rules.ShardLog()
+    param_specs = None
+    if params is not None:
+        param_specs = rules.params_specs(cfg, params, mesh, train=False,
+                                         log=log)
+    data = _axis_size(mesh, "data")
+    model = _axis_size(mesh, "model")
+    kvh = max(cfg.num_kv_heads, 1)
+    kv_head_shards = model if kvh % model == 0 else 1
+    act_shards = model if cfg.d_model % model == 0 else 1
+    # the block math divides by the factor BOTH cache representations really
+    # split by; a one-sided divide would misprice the other region's lane
+    shard_factor = model if (kv_head_shards == model
+                             and act_shards == model) else 1
+    log.add("cache/k,v", 3, kvh, "model",
+            "model" if kv_head_shards == model else None,
+            "sharded" if kv_head_shards == model else
+            f"replicated ({kvh} KV heads do not divide model={model})")
+    log.add("cache/act", 3, cfg.d_model, "model",
+            "model" if act_shards == model else None,
+            "sharded" if act_shards == model else
+            f"replicated (d_model={cfg.d_model} does not divide model={model})")
+    log.add("blocks/shard_factor", 0, shard_factor, "model",
+            "model" if shard_factor == model else None,
+            f"per-shard block bytes divide by {shard_factor}")
+    return ShardPlan(cfg=cfg, mesh=mesh, param_specs=param_specs, log=log,
+                     data_shards=data, model_shards=model,
+                     kv_head_shards=kv_head_shards, act_shards=act_shards,
+                     shard_factor=shard_factor)

@@ -15,13 +15,65 @@ stays replicated (whisper's 8 heads on a 16-way model axis, grok's 8 experts,
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShardDecision:
+    """One per-dimension sharding decision, drops included.
+
+    ``explain()`` formats these; the coverage test asserts every dim of
+    every leaf produced exactly one decision and no axis was used twice
+    within a leaf — the silent-replication blind spot the decision log
+    closes (a spec that *looks* sharded can still replicate every dim it
+    matters on, and before the log only param decisions were visible)."""
+    key: str                  # tree path of the leaf
+    dim: int                  # dimension index within the leaf
+    size: int                 # dimension size
+    want: Any                 # axis the rule preferred (None = replicate)
+    got: Any                  # axis actually assigned
+    reason: str               # "sharded" | "replicated (<why>)"
+
+    @property
+    def dropped(self) -> bool:
+        return self.want is not None and self.got is None
+
+
+class ShardLog:
+    """Collects ``ShardDecision``s while specs are built."""
+
+    def __init__(self):
+        self.decisions: List[ShardDecision] = []
+
+    def add(self, key: str, dim: int, size: int, want, got, reason: str):
+        self.decisions.append(ShardDecision(key, dim, size, want, got, reason))
+
+    def record_dim(self, key: str, dim: int, size: int, want, got):
+        """Standard outcome wording for a (wanted, got) pair."""
+        if want is None:
+            self.add(key, dim, size, None, None, "replicated (by rule)")
+        elif got is None:
+            self.add(key, dim, size, want, None,
+                     f"replicated (size {size} does not divide axis "
+                     f"'{want}' or axis already used)")
+        else:
+            self.add(key, dim, size, want, got, "sharded")
+
+    def lines(self) -> List[str]:
+        out = []
+        for d in self.decisions:
+            mark = "DROP" if d.dropped else ("  tp" if d.got else "    ")
+            out.append(f"  [{mark}] {d.key}[{d.dim}] size={d.size:<8d} "
+                       f"want={str(d.want):<18s} got={str(d.got):<18s} "
+                       f"{d.reason}")
+        return out
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
@@ -41,9 +93,12 @@ def _maybe(dim: int, mesh: Mesh, axis):
 
 
 def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig,
-               mesh: Mesh, *, fsdp=None) -> P:
-    """Spec for one parameter leaf; `path` is the key path in the tree."""
+               mesh: Mesh, *, fsdp=None, log: Optional[ShardLog] = None) -> P:
+    """Spec for one parameter leaf; `path` is the key path in the tree.
+
+    ``log`` records one ``ShardDecision`` per dimension (drops included)."""
     name = path[-1]
+    key = "/".join(path)
     tp = "model"
 
     def spec_for(dims_rules):
@@ -51,13 +106,18 @@ def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig,
         n_lead = len(shape) - len(dims_rules)
         out = [None] * n_lead
         used = set()
-        for d, ax in zip(shape[n_lead:], dims_rules):
-            ax = _maybe(d, mesh, ax)
+        if log is not None:
+            for i in range(n_lead):
+                log.record_dim(key, i, shape[i], None, None)
+        for i, (d, want) in enumerate(zip(shape[n_lead:], dims_rules)):
+            ax = _maybe(d, mesh, want)
             if ax in used:
                 ax = None
             if ax is not None:
                 used.add(ax)
             out.append(ax)
+            if log is not None:
+                log.record_dim(key, n_lead + i, d, want, ax)
         return P(*out)
 
     if name in ("embed",):
@@ -65,9 +125,9 @@ def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig,
     if name in ("unembed",):
         return spec_for([fsdp, tp])
     if name in ("pos_embed", "enc_pos"):
-        return spec_for([None, _maybe(shape[-1], mesh, tp)])
+        return spec_for([None, tp])
     if name in ("scale", "bias", "qnorm", "knorm", "A_log", "D", "dt_bias", "norm"):
-        return P(*([None] * len(shape)))
+        return spec_for([None] * len(shape))
     if name == "wq":
         return spec_for([fsdp, tp])
     if name in ("wk", "wv"):
@@ -96,11 +156,11 @@ def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig,
     if name == "out_proj":
         return spec_for([tp, fsdp])
     # fallback: replicate
-    return P(*([None] * len(shape)))
+    return spec_for([None] * len(shape))
 
 
 def params_specs(cfg: ModelConfig, params_shape, mesh: Mesh, *, train: bool,
-                 weights_2d: bool = False):
+                 weights_2d: bool = False, log: Optional[ShardLog] = None):
     """Tree of PartitionSpec matching the param tree (from eval_shape).
 
     ``weights_2d`` (serve mode): additionally shard the non-TP weight dim over
@@ -115,7 +175,8 @@ def params_specs(cfg: ModelConfig, params_shape, mesh: Mesh, *, train: bool,
 
     def walk(path, leaf):
         keys = tuple(_key_str(k) for k in path)
-        return param_spec(keys, tuple(leaf.shape), cfg, mesh, fsdp=fsdp)
+        return param_spec(keys, tuple(leaf.shape), cfg, mesh, fsdp=fsdp,
+                          log=log)
 
     return jax.tree_util.tree_map_with_path(walk, params_shape)
 
@@ -144,21 +205,35 @@ def batch_specs(cfg: ModelConfig, batch_shape: Dict[str, Any], mesh: Mesh) -> Di
     return out
 
 
-def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh: Mesh,
+                log: Optional[ShardLog] = None) -> Dict[str, P]:
     """Decode-cache specs.
 
     Batch dim shards over data (x pod); KV-head dim over 'model' when it
     divides.  batch=1 long-context: the SEQUENCE dim of attention caches
     shards over 'data' instead (context-parallel decode) — the attention
     reductions over S then lower to psums.
+
+    ``log`` records one ``ShardDecision`` per dimension, closing the old
+    blind spot where only param decisions were explained and a cache that
+    silently replicated every dim looked identical to a sharded one.
     """
     bx = batch_axes(mesh)
     tp = "model"
     out = {}
+
+    def _record(key, shp, wants, spec):
+        if log is None:
+            return
+        got = tuple(spec) + (None,) * (len(shp) - len(tuple(spec)))
+        for i, (size, want) in enumerate(zip(shp, wants)):
+            log.record_dim(key, i, size, want, got[i])
+
     for k, v in cache_shape.items():
         shp = tuple(v.shape)
         if k == "kv_len":
             out[k] = P(_maybe(shp[0], mesh, bx))
+            _record(k, shp, (bx,), out[k])
             continue
         if k in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
                  "global_k", "global_v", "attn_k", "attn_v"):
@@ -178,6 +253,8 @@ def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh: Mesh) -> Di
             if s_ax is not None and not _fits(S, mesh, s_ax):
                 s_ax = None
             out[k] = P(None, b_ax, s_ax, kv_ax, None)
+            _record(k, shp, (None, bx, tuple(s_axes) or None, tp, None),
+                    out[k])
         elif k in ("local_k", "local_v", "tail_k", "tail_v"):
             # (n, per, B, W, KVH, D) or (n, B, W, KVH, D)
             B_idx = len(shp) - 4
@@ -186,6 +263,9 @@ def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh: Mesh) -> Di
             spec[B_idx] = b_ax
             spec[-2] = _maybe(shp[-2], mesh, tp)
             out[k] = P(*spec)
+            wants = [None] * len(shp)
+            wants[B_idx], wants[-2] = bx, tp
+            _record(k, shp, wants, out[k])
         elif k == "state":
             # (L, B, H, Pd, N) or (n_per, n_ssd, B, H, Pd, N)
             B_idx = len(shp) - 4
@@ -193,12 +273,18 @@ def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh: Mesh) -> Di
             spec[B_idx] = _maybe(shp[B_idx], mesh, bx) or _maybe(shp[B_idx], mesh, "data")
             spec[-3] = _maybe(shp[-3], mesh, tp)    # SSD heads
             out[k] = P(*spec)
+            wants = [None] * len(shp)
+            wants[B_idx], wants[-3] = bx, tp
+            _record(k, shp, wants, out[k])
         elif k == "conv":
             B_idx = len(shp) - 3
             spec = [None] * len(shp)
             spec[B_idx] = _maybe(shp[B_idx], mesh, bx) or _maybe(shp[B_idx], mesh, "data")
             spec[-1] = _maybe(shp[-1], mesh, tp)    # conv channels
             out[k] = P(*spec)
+            wants = [None] * len(shp)
+            wants[B_idx], wants[-1] = bx, tp
+            _record(k, shp, wants, out[k])
         elif k in ("act",):
             # ACT checkpoints: d_model shards over 'model' (KV-gen contracts
             # over it -> psum); batch over data (§Perf iteration 5)
@@ -206,17 +292,58 @@ def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh: Mesh) -> Di
             b_ax = _maybe(B, mesh, bx) or _maybe(B, mesh, "data")
             s_ax = "data" if (b_ax is None and _fits(S, mesh, "data")) else None
             out[k] = P(None, b_ax, s_ax, _maybe(D, mesh, tp))
+            _record(k, shp, (None, bx, "data" if b_ax is None else None, tp),
+                    out[k])
         elif k in ("act_pos", "act_len"):
             out[k] = P(_maybe(shp[0], mesh, bx))
+            _record(k, shp, (bx,) + (None,) * (len(shp) - 1), out[k])
         else:
             out[k] = P(*([None] * len(shp)))
+            _record(k, shp, (None,) * len(shp), out[k])
     return out
 
 
-def explain(cfg: ModelConfig, specs_tree) -> str:
+def explain(cfg: ModelConfig, specs_tree, log: Optional[ShardLog] = None) -> str:
+    """Format a spec tree for the dry-run log; with a ``ShardLog`` the
+    per-dimension decision trail (drops included) is appended — cache and
+    activation specs now leave the same audit trail params always did."""
     lines = []
     for path, spec in jax.tree_util.tree_flatten_with_path(
             specs_tree, is_leaf=lambda x: isinstance(x, P))[0]:
         key = "/".join(_key_str(k) for k in path)
         lines.append(f"  {key:60s} {spec}")
+    if log is not None and log.decisions:
+        lines.append("  -- decisions (every dim, drops logged) --")
+        lines.extend(log.lines())
     return "\n".join(lines)
+
+
+def check_plan(specs_tree, log: ShardLog) -> None:
+    """Assert the decision log fully covers the spec tree and is
+    contradiction-free: no mesh axis shards two dims of one leaf, and every
+    leaf dimension has exactly one recorded decision.  Raises AssertionError
+    with the offending leaf."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))[0]
+    by_key: Dict[str, List[ShardDecision]] = {}
+    for d in log.decisions:
+        by_key.setdefault(d.key, []).append(d)
+    for path, spec in flat:
+        key = "/".join(_key_str(k) for k in path)
+        decs = by_key.get(key)
+        assert decs, f"no decisions recorded for {key}"
+        dims = sorted(d.dim for d in decs)
+        assert dims == list(range(len(dims))), \
+            f"{key}: decision dims {dims} not contiguous"
+        used = []
+        for ax in tuple(spec):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                assert a not in used, f"{key}: axis {a!r} sharded twice in {spec}"
+                used.append(a)
+        # every replicated-but-wanted dim must be an explicit, logged drop
+        got = tuple(spec) + (None,) * (len(dims) - len(tuple(spec)))
+        for d in decs:
+            assert (got[d.dim] == d.got), \
+                f"{key}[{d.dim}]: log says {d.got!r}, spec says {got[d.dim]!r}"

@@ -1,9 +1,22 @@
+import os
+import sys
+
+# The shard-invariance suite (tests/test_sharded_serving.py) needs a small
+# multi-device host platform; jax locks the device count on first backend
+# init, so the flag must land before ANY jax import.  4 tiny CPU devices
+# leave every single-device test untouched (uncommitted arrays still live on
+# device 0) while letting 1x2 / 2x2 meshes exist.  The 512-device forcing
+# for production dry-runs still happens ONLY inside launch/dryrun.py.
+if "jax" not in sys.modules and \
+        "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
 import jax
 import numpy as np
 import pytest
 
-# Tests run on the single CPU device (smoke scale).  The 512-device forcing
-# happens ONLY inside launch/dryrun.py, never here.
 jax.config.update("jax_enable_x64", False)
 
 

@@ -1,0 +1,252 @@
+"""Mesh-sharded serving: shard invariance, per-shard accounting, lanes.
+
+DESIGN.md §11's contracts, on the forced multi-device host platform the
+suite's conftest arms (``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+— ``make_test_mesh`` raises with that recipe when devices are missing):
+
+  * engine and chunked scheduler runs on 1x1 / 1x2 / 2x2 meshes are
+    token-exact vs each other and vs the full-KV oracle, block/slot
+    leak-free, and keep the PR 4 dispatch/sync-count invariants PER MESH
+    (sharding adds collectives inside dispatches, never host syncs),
+  * per-shard accounting scales with the model-axis shard factor, and
+    shard factor 1 reproduces the single-device numbers bit-for-bit,
+  * the offload path runs per-mesh-position weight lanes whose timeline
+    results aggregate across shards for the controller (soak matrix row).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.blocks import (BlockManager, BlockType, Location,
+                               act_block_bytes, kv_block_bytes)
+from repro.core import costmodel as cm
+from repro.core.policy import (device_act_blocks, host_block_allocation,
+                               store_act_schedule)
+from repro.data.pipeline import open_loop_trace
+from repro.launch.mesh import make_test_mesh
+from repro.models import model as M
+from repro.serving import HybridServeEngine, exact_reference_generate
+from repro.serving.scheduler import ContinuousBatchingServer
+from repro.sharding import make_shard_plan
+
+MESHES = [(1, 1), (1, 2), (2, 2)]
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+CONFIGS = ["opt-6.7b-reduced", "yi-6b-reduced"]
+
+_SETUP = {}
+
+
+def _setup(name):
+    if name not in _SETUP:
+        cfg = get_config(name)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        reqs, arrivals = open_loop_trace(cfg.vocab_size, 4, seed=11)
+        ref = exact_reference_generate(cfg, params, reqs)
+        _SETUP[name] = (cfg, params, reqs, arrivals, ref)
+    return _SETUP[name]
+
+
+def _plan(cfg, params, shape):
+    return make_shard_plan(cfg, make_test_mesh(*shape), params)
+
+
+# =============================================================================
+# shard invariance: same tokens, same dispatch counts, on every mesh
+# =============================================================================
+
+@needs_devices
+@pytest.mark.parametrize("name", CONFIGS)
+def test_engine_shard_invariance(name):
+    cfg, params, reqs, _, ref = _setup(name)
+    outs, calls = {}, {}
+    for shape in MESHES:
+        eng = HybridServeEngine(cfg, params, mode="hybrid",
+                                plan=_plan(cfg, params, shape))
+        out, st = eng.generate(reqs)
+        outs[shape], calls[shape] = out, st.device_calls
+        # token-exact vs the full-KV oracle on every mesh
+        for r in reqs:
+            np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+        # leak-free
+        for pool in eng.blockman.pools.values():
+            assert pool.allocated == 0
+        assert not eng.blockman.tables
+    # meshes agree with each other and with the plan-less engine
+    out0, st0 = HybridServeEngine(cfg, params, mode="hybrid").generate(reqs)
+    for shape in MESHES:
+        assert calls[shape] == st0.device_calls, \
+            "sharding must not change the dispatch count"
+        for r in reqs:
+            np.testing.assert_array_equal(outs[shape][r.rid], out0[r.rid])
+
+
+@needs_devices
+@pytest.mark.parametrize("name", CONFIGS)
+def test_scheduler_shard_invariance(name):
+    """Chunked scheduler on every mesh: token-exact vs the S=1 single-device
+    server and the oracle, with the PR 4 dispatch-count invariants intact
+    per mesh (one dispatch per admission batch + one per chunk, one host
+    sync per dispatch)."""
+    cfg, params, reqs, arrivals, ref = _setup(name)
+    base_out, base_calls = None, None
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, chunk_steps=1) as srv:
+        base_out, st = srv.run(reqs, arrival_steps=arrivals)
+        base_calls = st.device_calls
+    for shape in MESHES:
+        with ContinuousBatchingServer(
+                cfg, params, slots=2, kv_cap=128, act_cap=128, chunk_steps=4,
+                plan=_plan(cfg, params, shape)) as srv:
+            out, st = srv.run(reqs, arrival_steps=arrivals)
+            for r in reqs:
+                np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+                np.testing.assert_array_equal(out[r.rid], base_out[r.rid])
+            # dispatch/sync invariants hold on this mesh — sharding adds
+            # collectives inside the dispatch, never new host syncs
+            assert st.device_calls == st.admission_batches + st.chunks
+            assert st.host_syncs == st.device_calls
+            assert st.device_calls < base_calls  # chunking still amortizes
+            # leak-free: slots returned, pools drained, tables empty
+            assert not any(s.active for s in srv.slots)
+            for pool in srv.blockman.pools.values():
+                assert pool.allocated == 0
+            assert not srv.blockman.tables
+
+
+# =============================================================================
+# offload: per-shard lanes (the soak matrix row)
+# =============================================================================
+
+@needs_devices
+def test_offload_per_shard_lanes_soak():
+    """Offload on a 1x2 mesh: one weight lane per mesh position (own host
+    shard, staging ring, copy stream), token-exact, spill arena returned,
+    and the controller consuming shard-AGGREGATED timelines (max across
+    lanes, so a step's pcie seconds never double-count parallel lanes)."""
+    cfg, params, reqs, arrivals, ref = _setup("opt-6.7b-reduced")
+    plan = _plan(cfg, params, (1, 2))
+    with HybridServeEngine(cfg, params, mode="hybrid", offload=True,
+                           adaptive=True, plan=plan) as eng:
+        out, st = eng.generate(reqs)
+        for r in reqs:
+            np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+        assert len(eng.executor.streamer.lanes) == 2
+        for lane in eng.executor.streamer.lanes:
+            assert lane.uploads > 0          # every lane really streamed
+        assert eng.spill_kv_pool.allocated_blocks == 0
+        eng.spill_kv_pool.check_invariants()
+        for pool in eng.blockman.pools.values():
+            assert pool.allocated == 0
+        # the measured per-step results the controller consumed aggregate
+        # lanes by max: a step's pcie seconds can never exceed its wall total
+        # by the lane count (the old sum-across-lanes failure mode)
+        assert eng.measured_steps
+        for res in eng.measured_steps:
+            assert res.pcie_busy <= res.total + 1e-6
+        assert eng.controller.updates > 0
+
+    from repro.core import ControllerConfig
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, chunk_steps=4, offload=True,
+                                  adaptive=True, plan=plan,
+                                  ctl=ControllerConfig(update_every=1)) as srv:
+        out, st = srv.run(reqs, arrival_steps=arrivals)
+        for r in reqs:
+            np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+        assert srv.measured_steps and srv.controller.updates > 0
+        for pool in srv.blockman.pools.values():
+            assert pool.allocated == 0
+
+
+# =============================================================================
+# per-shard accounting properties
+# =============================================================================
+
+def test_shard_factor_one_is_bit_for_bit():
+    """shards=1 must reproduce today's numbers exactly: the scaled hardware
+    spec IS the unscaled object, block bytes and fits are identical, and
+    the Algorithm-1 allocation + store schedule match bit-for-bit."""
+    cfg = get_config("opt-6.7b-reduced")
+    hw = cm.TPU_V5E
+    assert cm.scale_for_shards(hw, 1) is hw
+    assert kv_block_bytes(cfg, 1) == kv_block_bytes(cfg)
+    assert act_block_bytes(cfg, 1) == act_block_bytes(cfg)
+    a0 = host_block_allocation(cfg, hw, device_act_blocks(cfg, hw))
+    a1 = host_block_allocation(cfg, cm.scale_for_shards(hw, 1),
+                               device_act_blocks(
+                                   cfg, cm.scale_for_shards(hw, 1)))
+    assert a0 == a1
+    s0 = store_act_schedule(a0, [3, 0], [5, 8], 16)
+    s1 = store_act_schedule(a1, [3, 0], [5, 8], 16)
+    np.testing.assert_array_equal(s0, s1)
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_capacities_scale_with_shard_factor(shards):
+    """Aggregate device capacity and link bandwidth scale linearly with the
+    model-axis shard factor; per-shard block bytes divide by it."""
+    cfg = get_config("opt-6.7b-reduced")
+    hw = cm.TPU_V5E
+    hws = cm.scale_for_shards(hw, shards)
+    assert hws.device_mem == hw.device_mem * shards
+    assert hws.host_link_bw == hw.host_link_bw * shards
+    assert hws.flops == hw.flops * shards
+    assert hws.host_mem == hw.host_mem          # one shared host DRAM
+    assert hws.dispatch_overhead == hw.dispatch_overhead  # per-call tax
+    base = device_act_blocks(cfg, hw)
+    scaled = device_act_blocks(cfg, hws)
+    assert abs(scaled - shards * base) < shards  # int-floor slack only
+    assert kv_block_bytes(cfg, shards) == kv_block_bytes(cfg) // shards
+    assert act_block_bytes(cfg, shards) == act_block_bytes(cfg) // shards
+    # Algorithm-1 lane fits: both lanes speed up ~linearly, so the fitted
+    # slopes drop by ~the shard factor (profiling noise aside)
+    g0, l0 = cm.profile_cost_fns(cfg, hw, noise=0.0)
+    g1, l1 = cm.profile_cost_fns(cfg, hws, noise=0.0)
+    assert g1.slope == pytest.approx(g0.slope / shards, rel=1e-9)
+    assert l1.slope == pytest.approx(l0.slope / shards, rel=1e-9)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_blockman_per_shard_accounting(shards):
+    cfg = get_config("opt-6.7b-reduced")
+    bm = BlockManager(cfg, host_kv_blocks=8, host_act_blocks=8,
+                      dev_kv_blocks=4, dev_act_blocks=4, shard_factor=shards)
+    # per-shard block bytes divide by the factor; totals don't
+    assert bm.block_bytes(BlockType.KV) == kv_block_bytes(cfg) // shards
+    assert bm.block_bytes(BlockType.KV, per_shard=False) == kv_block_bytes(cfg)
+    assert bm.bytes_capacity(BlockType.KV, Location.HOST) == \
+        8 * (kv_block_bytes(cfg) // shards)
+    # host_bytes_to_load prices ONE shard's lane
+    bm.new_request(0)
+    for _ in range(20):
+        assert bm.append_token(0, BlockType.KV) is not None
+    kv, act = bm.host_bytes_to_load(0)
+    bm1 = BlockManager(cfg, host_kv_blocks=8, host_act_blocks=8,
+                       dev_kv_blocks=4, dev_act_blocks=4)
+    bm1.new_request(0)
+    for _ in range(20):
+        bm1.append_token(0, BlockType.KV)
+    kv1, _ = bm1.host_bytes_to_load(0)
+    assert kv == kv1 // shards if shards > 1 else kv == kv1
+    # the explain() log names the factor (the ShardPlan companion trail)
+    assert f"shard_factor={shards}" in bm.explain()
+    bm.free_request(0)
+
+
+@needs_devices
+def test_plan_shard_factor_follows_divisibility():
+    """yi-6b-reduced has ONE kv head: the 1x2 plan must fall back to
+    shard_factor 1 (accounting never claims a split placement dropped),
+    while opt (8 kv heads, d_model 256) genuinely splits."""
+    opt = get_config("opt-6.7b-reduced")
+    yi = get_config("yi-6b-reduced")
+    p_opt = make_shard_plan(opt, make_test_mesh(1, 2))
+    p_yi = make_shard_plan(yi, make_test_mesh(1, 2))
+    assert p_opt.shard_factor == 2
+    assert p_yi.shard_factor == 1
+    assert "replicated" in p_yi.explain()

@@ -101,3 +101,56 @@ def test_batch_specs_multi_pod():
     b = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
     sp = batch_specs(cfg, b, MESH2)
     assert tuple(sp["tokens"])[0] == ("pod", "data")
+
+
+# =============================================================================
+# decision-log coverage: the silent-replication blind spot is closed
+# =============================================================================
+
+from repro.sharding import ShardLog, check_plan      # noqa: E402
+
+REDUCED = ["opt-6.7b-reduced", "yi-6b-reduced", "minitron-4b-reduced"]
+SHAPES_MATRIX = [(1, 1), (1, 2), (2, 2), (16, 16)]
+
+
+@pytest.mark.parametrize("arch", REDUCED)
+@pytest.mark.parametrize("mesh_shape", SHAPES_MATRIX)
+def test_param_and_cache_decisions_fully_covered(arch, mesh_shape):
+    """Every reduced config x mesh shape must produce a fully-covered,
+    contradiction-free plan: every dim of every PARAM and CACHE leaf has
+    exactly one logged decision, no mesh axis shards two dims of a leaf,
+    and every wanted-but-dropped axis is an explicit drop record —
+    ``explain()`` no longer records param decisions only."""
+    cfg = get_config(arch)
+    mesh = AbstractMesh(mesh_shape, ("data", "model"))
+    p_shape = SP.params_shape(cfg)
+    plog = ShardLog()
+    p_specs = params_specs(cfg, p_shape, mesh, train=False, log=plog)
+    check_plan(p_specs, plog)
+
+    # the serving hybrid cache AND the plain decode cache both leave trails
+    for c_shape in (SP.hybrid_cache_shape(cfg, 4, 128, 128),
+                    SP.cache_shape(cfg, 4, 256)):
+        clog = ShardLog()
+        c_specs = cache_specs(cfg, c_shape, mesh, log=clog)
+        check_plan(c_specs, clog)
+
+    # drops are loud: on the 16x16 mesh SOME dim of a reduced config cannot
+    # divide — the log must carry the drop with its reason
+    if mesh_shape == (16, 16):
+        drops = [d for d in plog.decisions + clog.decisions if d.dropped]
+        assert drops, "a 16-way axis over a reduced config must drop somewhere"
+        assert all("replicated" in d.reason for d in drops)
+
+
+def test_explain_includes_decision_trail():
+    cfg = get_config("opt-6.7b-reduced")
+    mesh = AbstractMesh((1, 2), ("data", "model"))
+    log = ShardLog()
+    c_shape = SP.hybrid_cache_shape(cfg, 4, 128, 128)
+    specs = cache_specs(cfg, c_shape, mesh, log=log)
+    from repro.sharding import explain
+    txt = explain(cfg, specs, log)
+    assert "-- decisions" in txt
+    # the KV-head dim of the hybrid cache is a logged 'model' shard
+    assert any(d.key == "k" and d.got == "model" for d in log.decisions)
