@@ -26,6 +26,7 @@ MODULES = [
     "beyond_paper",
     "roofline",
     "kernel_bench",
+    "recovery_bench",
 ]
 
 

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import json
 import os
+import zipfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -16,6 +18,11 @@ import numpy as np
 
 
 SEP = "/"
+
+
+def _crc(arr: np.ndarray) -> int:
+    """Content checksum of one saved leaf (bytes as stored in the npz)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -46,7 +53,12 @@ def save(path: str, tree, metadata: Optional[Dict[str, Any]] = None,
     flat = _flatten(tree)
     np.savez(path + shard_suffix + ".npz", **flat)
     with open(path + ".meta.json", "w") as f:
-        json.dump({"keys": sorted(flat), "metadata": metadata or {}}, f, indent=1)
+        json.dump({"keys": sorted(flat),
+                   # per-leaf content checksums: restore verifies them so a
+                   # bit-flipped shard fails loudly instead of loading
+                   # garbage tensors (DESIGN.md §12)
+                   "crc32": {k: _crc(v) for k, v in flat.items()},
+                   "metadata": metadata or {}}, f, indent=1)
 
 
 def _structure_keys(like) -> set:
@@ -97,16 +109,41 @@ def restore(path: str, like, shard_suffix: str = "",
                 raise ValueError(
                     f"checkpoint metadata mismatch for {k!r}: stored "
                     f"{got!r}, expected {want!r}")
-    data = np.load(path + shard_suffix + ".npz")
+    npz_path = path + shard_suffix + ".npz"
+    # a truncated or bit-corrupted shard must fail loudly and actionably:
+    # np.load defers member decompression, so both the open and every member
+    # read are guarded (zip directory damage surfaces at open; member CRC /
+    # truncation damage surfaces at read)
+    try:
+        data = np.load(npz_path)
+    except (zipfile.BadZipFile, ValueError, EOFError, OSError) as e:
+        raise ValueError(
+            f"checkpoint shard {npz_path!r} is unreadable ({e}); the file "
+            f"is truncated or corrupted — re-save or fetch it again") from e
+    crcs = meta.get("crc32", {}) if has_meta else {}
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for p, leaf in leaves_paths:
         key = SEP.join(_key_str(k) for k in p)
-        if key + "::bf16" in data:
+        stored_key = key + "::bf16" if key + "::bf16" in data else key
+        try:
+            raw = data[stored_key]
+        except (zipfile.BadZipFile, zlib.error, ValueError, EOFError,
+                OSError, KeyError) as e:
+            raise ValueError(
+                f"checkpoint shard {npz_path!r} failed reading member "
+                f"{stored_key!r} ({e}); the file is truncated or corrupted "
+                f"— re-save or fetch it again") from e
+        if stored_key in crcs and _crc(raw) != crcs[stored_key]:
+            raise ValueError(
+                f"checkpoint shard {npz_path!r} member {stored_key!r} "
+                f"fails its content checksum; the file is bit-corrupted — "
+                f"re-save or fetch it again")
+        if stored_key.endswith("::bf16"):
             import ml_dtypes
-            arr = data[key + "::bf16"].view(ml_dtypes.bfloat16)
+            arr = raw.view(ml_dtypes.bfloat16)
         else:
-            arr = data[key]
+            arr = raw
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
         out.append(jnp.asarray(arr).astype(leaf.dtype))

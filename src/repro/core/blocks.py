@@ -128,6 +128,12 @@ class BlockManager:
         # KV<->ACT capacity retags, counted per (location, from, to): the
         # adaptive controller's bounded role migrations (DESIGN.md §9).
         self.retags: Dict[Tuple[Location, BlockType, BlockType], int] = {}
+        # LIVE-block representation changes, counted per (from, to): the
+        # preemption path demotes a victim's KV blocks to ACT checkpoints
+        # (DESIGN.md §12) — distinct from ``retags``, which only ever moves
+        # FREE capacity.  The soak matrix asserts against these to prove
+        # preemption demoted rather than dropped.
+        self.kind_transitions: Dict[Tuple[BlockType, BlockType], int] = {}
 
     # -- allocation ----------------------------------------------------------
     def new_request(self, rid: int) -> None:
@@ -192,6 +198,39 @@ class BlockManager:
             if blk.kind == kind and blk.location != new_loc:
                 moved += self.move_block(rid, i, new_loc)
         return moved
+
+    # -- preemption demotion (pressure recovery, DESIGN.md §12) ---------------
+    def demote_request_kv(self, rid: int) -> int:
+        """Demote every KV block of ``rid`` to an ACT block in place — the
+        paper-native preemption move: the checkpoint representation costs
+        d_model/token instead of 2·L·d_kv, and the regenerate lane can
+        rebuild the KV from it on resume.  Each demoted block allocates in
+        the ACT pools first (ACT's DEVICE-preferring order) and only then
+        frees its KV slot, so a mid-table exhaustion never loses accounting:
+        blocks that could not demote stay KV and the caller decides whether
+        the partial demotion freed enough.  Token counts are preserved
+        (ntokens tracks context coverage, not bytes).  Returns the number of
+        blocks demoted; counted in ``kind_transitions[(KV, ACT)]``."""
+        moved = 0
+        for blk in self.tables[rid]:
+            if blk.kind != BlockType.KV:
+                continue
+            new = self._alloc_block(BlockType.ACT)
+            if new is None:
+                break
+            self.pools[(blk.kind, blk.location)].free(blk.pbn)
+            blk.kind, blk.location, blk.pbn = BlockType.ACT, new.location, new.pbn
+            moved += 1
+        if moved:
+            key = (BlockType.KV, BlockType.ACT)
+            self.kind_transitions[key] = \
+                self.kind_transitions.get(key, 0) + moved
+        return moved
+
+    def free_blocks(self, kind: BlockType) -> int:
+        """Total free capacity of ``kind`` across both tiers."""
+        return sum(pool.free_blocks for (k, _), pool in self.pools.items()
+                   if k == kind)
 
     # -- role retagging (adaptive controller) ---------------------------------
     def retag_capacity(self, loc: Location, src: BlockType, dst: BlockType,

@@ -97,6 +97,7 @@ class HybridCacheController:
         self._since_update = 0
         self.updates = 0                 # refit+retarget passes run
         self.migrated_blocks = 0         # blocks stepped across all updates
+        self.faulted_skipped = 0         # degraded steps not fit (§12)
         self.frac_history: List[float] = [alloc.act_fraction]
 
     # ---------------------------------------------------------------- observe
@@ -111,10 +112,24 @@ class HybridCacheController:
         steps: measured executors fuse KV Gen into the layer forward, so a
         result without a "gen" tag has its GPU time attributed by the
         simulator's gen:fwd share (DESIGN.md §9).  Returns samples added.
+
+        Degraded steps — measured results carrying robustness events
+        (watchdog timeouts, retries, lane fallbacks; DESIGN.md §12) — are
+        substituted by their simulated prediction when available and
+        skipped otherwise: a stalled lane's seconds are the fault's cost,
+        not the hardware's, and fitting them would poison the cost model
+        that every allocation downstream prices from.  Substitutions are
+        counted in ``self.faulted_skipped``.
         """
         L = max(self.cfg.num_layers, 1)
         added = 0
         for i, res in enumerate(results):
+            if res.faulted:
+                self.faulted_skipped += 1
+                if sim is not None and i < len(sim) and sim[i] is not res:
+                    res = sim[i]
+                else:
+                    continue
             nk = float(kv_tokens[i]) if i < len(kv_tokens) else 0.0
             na = float(act_tokens[i]) if i < len(act_tokens) else 0.0
             tb = res.tag_busy or {}

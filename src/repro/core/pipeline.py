@@ -53,6 +53,17 @@ class TimelineResult:
     # per-lane samples the adaptive controller refits the cost model from
     # (DESIGN.md §9); simulated and measured timelines both populate it.
     tag_busy: Dict[str, float] = field(default_factory=dict)
+    # robustness events observed during the step ("watchdog_timeout",
+    # "copy_retry", "sync_fallback", "arena_denied", ... — DESIGN.md §12),
+    # counted by name.  Simulated steps are fault-free ({}); measured steps
+    # under fault injection or real lane trouble carry them so the adaptive
+    # controller can SKIP degraded steps instead of mis-fitting the cost
+    # model to them.
+    events: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def faulted(self) -> bool:
+        return bool(self.events)
 
     @property
     def gpu_util(self) -> float:

@@ -7,6 +7,8 @@ device-resident decode loop, and measured lane timelines in the analytic
 simulator's schema.
 """
 from repro.offload.executor import OffloadExecutor, stack_cache
+from repro.offload.faults import (FAULT_KINDS, FaultEvent, FaultPlan,
+                                  TransientCopyError)
 from repro.offload.host_pool import (HostBlockPool, HostWeightPool, Region,
                                      kv_region_blocks, make_spill_pool)
 from repro.offload.streamer import WeightStreamer, donate_buffers

@@ -60,23 +60,28 @@ class OffloadExecutor:
     unchanged."""
 
     def __init__(self, cfg: ModelConfig, params, *, prefetch_depth: int = 1,
-                 timeline: Optional[MeasuredTimeline] = None, plan=None):
+                 timeline: Optional[MeasuredTimeline] = None, plan=None,
+                 faults=None, watchdog_s: Optional[float] = None,
+                 max_copy_retries: int = 2):
         assert M.family(cfg) == "uniform", \
             "offload executor drives uniform-family models"
         self.cfg = cfg
         self.is_moe = cfg.is_moe and cfg.moe_every == 1
         self.timeline = timeline if timeline is not None else MeasuredTimeline()
         self.plan = plan if (plan is not None and plan.mesh.size > 1) else None
+        self.faults = faults
         self.pool = HostWeightPool(cfg, params, plan=self.plan)
         if self.plan is not None:
             self.streamer = ShardedWeightLanes(
                 self.pool, self.plan, prefetch_depth=prefetch_depth,
-                timeline=self.timeline)
+                timeline=self.timeline, faults=faults, watchdog_s=watchdog_s,
+                max_retries=max_copy_retries)
             self.resident = self.plan.place_params(self.pool.resident)
         else:
             self.streamer = WeightStreamer(
                 self.pool, prefetch_depth=prefetch_depth,
-                timeline=self.timeline)
+                timeline=self.timeline, faults=faults, watchdog_s=watchdog_s,
+                max_retries=max_copy_retries)
             self.resident = self.pool.resident
         self.dispatches = 0                     # jit calls (device round trips)
         # blocking host materialisation points (block_until_ready / D2H
@@ -554,7 +559,26 @@ class OffloadExecutor:
         return self.timeline.drain(tag)
 
     def close(self) -> None:
+        """Deterministic teardown: joins the copy-stream thread(s).  Also the
+        context-manager exit, so engine teardown can't leak threads."""
         self.streamer.close()
+
+    def __enter__(self) -> "OffloadExecutor":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    @property
+    def lane_health(self) -> str:
+        """"healthy" | "degraded" — the weight lane(s)' current state."""
+        return self.streamer.lane_health
+
+    @property
+    def fault_counters(self) -> Dict[str, int]:
+        """Cumulative robustness counters from the weight lane(s)."""
+        return self.streamer.fault_counters
 
 
 def stack_cache(cache: Cache) -> Cache:

@@ -45,11 +45,13 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro.offload.faults import FaultPlan, TransientCopyError
 from repro.offload.host_pool import HostWeightPool
 from repro.offload.timeline import MeasuredTimeline
 
@@ -72,17 +74,37 @@ class WeightStreamer:
     ``device``: target device for the hand-off ``device_put`` (None = the
     default device — today's single-lane behaviour).  ``shard``: mesh lane
     index stamped on every recorded span, so per-shard lane times aggregate
-    by max across lanes in the timeline (DESIGN.md §11)."""
+    by max across lanes in the timeline (DESIGN.md §11).
+
+    Robustness (DESIGN.md §12): ``watchdog_s`` arms a deadline on every
+    staged upload — a staging copy that has not landed within it (a stalled
+    lane) trips the watchdog, the lane drops to DEGRADED, and all further
+    acquires of the pass stage *synchronously* on the caller thread through
+    a dedicated emergency buffer (never the staging ring, whose in-flight
+    slot the stalled copy may still write).  ``TransientCopyError`` from a
+    staging copy is retried up to ``max_retries`` times with exponential
+    backoff before the same synchronous fallback engages.  ``begin()``
+    drains stragglers and restores the lane to HEALTHY — a lane recovers at
+    pass granularity, counters persist.  ``faults`` injects deterministic
+    stalls / slowdowns / copy failures at the staging site (``FaultPlan``);
+    the emergency path deliberately bypasses injection, modelling the
+    direct, reliable-but-serial load the degraded mode IS."""
 
     def __init__(self, pool, *, prefetch_depth: int = 1,
                  timeline: Optional[MeasuredTimeline] = None,
-                 device=None, shard: int = 0):
+                 device=None, shard: int = 0,
+                 faults: Optional[FaultPlan] = None,
+                 watchdog_s: Optional[float] = None, max_retries: int = 2):
         assert prefetch_depth >= 0
+        assert watchdog_s is None or watchdog_s > 0.0
         self.pool = pool
         self.depth = prefetch_depth
         self.device = device
         self.shard = shard
         self.timeline = timeline
+        self.faults = faults
+        self.watchdog_s = watchdog_s
+        self.max_retries = max(int(max_retries), 0)
         self._stream = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="copy-stream")
         # the double buffers: depth+1 staging slots shaped like a layer shard
@@ -91,12 +113,20 @@ class WeightStreamer:
             jax.tree.map(lambda a: np.empty_like(a), pool.layer(0))
             for _ in range(prefetch_depth + 1)
         ]
+        self._spare = None        # emergency slot, allocated on first fallback
         self._sched: List[int] = []
         self._staging: Dict[int, Future] = {}       # seq index -> Future[slot]
+        self._abandoned: List[Future] = []          # timed-out / failed stages
         self._live: Dict[int, object] = {}          # seq index -> device tree
         self.uploads = 0
         self.bytes_uploaded = 0
         self.peak_resident = 0
+        self.degraded = False     # lane health: False=healthy, True=degraded
+        # robustness counters (cumulative across passes; see lane_health)
+        self.counters: Dict[str, int] = {
+            "watchdog_timeouts": 0, "copy_retries": 0, "copy_failures": 0,
+            "sync_fallbacks": 0, "stalls_injected": 0,
+        }
 
     # ----------------------------------------------------------------- stream
     def submit(self, fn: Callable[[], object]) -> Future:
@@ -105,8 +135,25 @@ class WeightStreamer:
 
     def _stage(self, layer: int, slot: int):
         """Copy-stream phase: pinned staging copy (overlaps with compute)."""
+        if self.faults is not None:
+            ev = self.faults.draw(f"stage:{self.shard}",
+                                  kinds=("stall", "copy_fail", "slow"))
+            if ev is not None:
+                if ev.kind == "copy_fail":
+                    if self.timeline is not None:
+                        self.timeline.record_event("copy_fail_injected")
+                    raise TransientCopyError(
+                        f"injected staging failure "
+                        f"(layer {layer}, shard {self.shard})")
+                if ev.kind == "stall":
+                    self.counters["stalls_injected"] += 1
+                if self.timeline is not None:
+                    self.timeline.record_event(f"{ev.kind}_injected")
+                time.sleep(ev.seconds)
+        return self._stage_into(layer, self._slots[slot])
+
+    def _stage_into(self, layer: int, dst):
         t0 = time.perf_counter()
-        dst = self._slots[slot]
         jax.tree.map(np.copyto, dst, self.pool.layer(layer))
         nbytes = self.pool.layer_nbytes[layer]
         if self.timeline is not None:
@@ -116,18 +163,53 @@ class WeightStreamer:
         self.bytes_uploaded += nbytes
         return dst
 
+    def _stage_emergency(self, layer: int):
+        """Degraded-mode stage: synchronous copy on the caller thread into a
+        dedicated spare buffer.  Never touches the staging ring — an
+        abandoned (stalled) stage may still write into its ring slot — and
+        deliberately bypasses fault injection: this IS the direct, serial,
+        reliable load path the lane falls back to."""
+        if self._spare is None:
+            self._spare = jax.tree.map(
+                lambda a: np.empty_like(a), self.pool.layer(0))
+        self.counters["sync_fallbacks"] += 1
+        if self.timeline is not None:
+            self.timeline.record_event("sync_fallback")
+        return self._stage_into(layer, self._spare)
+
     # ------------------------------------------------------------------- pass
     def begin(self, schedule: Sequence[int]) -> None:
-        """Arm a pass; any leftover device buffers are donated first."""
+        """Arm a pass; any leftover device buffers are donated first.  A
+        degraded lane recovers here — pass granularity — once stragglers
+        (including abandoned, timed-out stages) have drained, so ring slots
+        are provably quiescent before reuse."""
         for i in list(self._live):
             self.release(i)
-        for fut in self._staging.values():
-            fut.result()                # drain stragglers before slot reuse
+        self._drain_staging()           # drain stragglers before slot reuse
         self._sched = list(schedule)
-        self._staging = {}
         self._live = {}
+        self.degraded = False
         for j in range(min(self.depth, len(self._sched))):
             self._dispatch(j)
+
+    def _drain_staging(self) -> None:
+        """Wait out every in-flight or abandoned staging future, swallowing
+        their failures — a drained fault is already counted."""
+        for fut in list(self._staging.values()) + self._abandoned:
+            try:
+                fut.result()
+            except Exception:           # injected/transient copy failures
+                pass
+        self._staging = {}
+        self._abandoned = []
+
+    def _degrade(self, i: int) -> None:
+        """Drop the lane to degraded mode: abandon every in-flight staging
+        (their futures drain at the next ``begin``/``close``; their ring
+        slots are off-limits until then) and stop prefetching."""
+        self.degraded = True
+        for j in list(self._staging):
+            self._abandoned.append(self._staging.pop(j))
 
     def _dispatch(self, i: int) -> None:
         if i in self._staging or not (0 <= i < len(self._sched)):
@@ -137,17 +219,14 @@ class WeightStreamer:
 
     def acquire(self, i: int):
         """Device weights for schedule position ``i``: wait for the staging
-        copy, then hand the slot off to the device (serial tail)."""
+        copy (bounded by the watchdog, retried on transient failure), then
+        hand the slot off to the device (serial tail)."""
         if i in self._live:
             return self._live[i]
-        if i not in self._staging:
-            if self.depth == 0:
-                fut: Future = Future()      # synchronous: stage inline
-                fut.set_result(self._stage(self._sched[i], 0))
-                self._staging[i] = fut
-            else:
-                self._dispatch(i)
-        staged = self._staging.pop(i).result()
+        if self.degraded:
+            staged = self._stage_emergency(self._sched[i])
+        else:
+            staged = self._acquire_staged(i)
         t0 = time.perf_counter()
         dev = (jax.device_put(staged) if self.device is None
                else jax.device_put(staged, self.device))
@@ -156,11 +235,58 @@ class WeightStreamer:
             self.timeline.record("pcie", "w", t0, time.perf_counter(), 0,
                                  shard=self.shard)
         self._live[i] = dev
-        for j in range(i + 1, min(i + 1 + self.depth, len(self._sched))):
-            self._dispatch(j)
+        if not self.degraded:               # degraded: no prefetch top-up
+            for j in range(i + 1, min(i + 1 + self.depth, len(self._sched))):
+                self._dispatch(j)
         self.peak_resident = max(self.peak_resident,
                                  len(self._live) + len(self._staging))
         return dev
+
+    def _acquire_staged(self, i: int):
+        """Healthy-path wait: watchdog deadline on the staged future, bounded
+        retry with exponential backoff on ``TransientCopyError``; either
+        ladder exhausting drops the lane to degraded and falls back to the
+        emergency synchronous stage."""
+        layer = self._sched[i]
+        if i not in self._staging:
+            if self.depth == 0:             # synchronous: stage inline
+                fut: Future = Future()
+                try:
+                    fut.set_result(self._stage(layer, 0))
+                except TransientCopyError as e:
+                    fut = Future()
+                    fut.set_exception(e)
+                self._staging[i] = fut
+            else:
+                self._dispatch(i)
+        retries = 0
+        while True:
+            fut = self._staging[i]
+            try:
+                staged = fut.result(timeout=self.watchdog_s)
+            except FuturesTimeout:
+                self.counters["watchdog_timeouts"] += 1
+                if self.timeline is not None:
+                    self.timeline.record_event("watchdog_timeout")
+                self._degrade(i)
+                return self._stage_emergency(layer)
+            except TransientCopyError:
+                retries += 1
+                if retries > self.max_retries:
+                    self.counters["copy_failures"] += 1
+                    if self.timeline is not None:
+                        self.timeline.record_event("copy_give_up")
+                    self._degrade(i)
+                    return self._stage_emergency(layer)
+                self.counters["copy_retries"] += 1
+                if self.timeline is not None:
+                    self.timeline.record_event("copy_retry")
+                time.sleep(min(0.001 * (2 ** (retries - 1)), 0.05))
+                self._staging[i] = self._stream.submit(
+                    self._stage, layer, i % (self.depth + 1))
+                continue
+            del self._staging[i]
+            return staged
 
     def release(self, i: int) -> None:
         """Donate schedule position ``i``'s stale device buffer."""
@@ -169,16 +295,34 @@ class WeightStreamer:
             donate_buffers(dev)
 
     def close(self) -> None:
-        for fut in self._staging.values():
-            fut.result()
+        """Deterministic teardown: drain every outstanding staging (faults
+        swallowed — already counted), donate live buffers, and join the
+        copy-stream thread.  Idempotent; also the context-manager exit."""
+        self._drain_staging()
         for i in list(self._live):
             self.release(i)
         self._stream.shutdown(wait=True)
+
+    def __enter__(self) -> "WeightStreamer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # ------------------------------------------------------------------ stats
     @property
     def resident_buffers(self) -> int:
         return len(self._live)
+
+    @property
+    def lane_health(self) -> str:
+        """"healthy" | "degraded" — degraded clears at the next ``begin``."""
+        return "degraded" if self.degraded else "healthy"
+
+    @property
+    def fault_counters(self) -> Dict[str, int]:
+        return dict(self.counters)
 
 
 class ShardedWeightLanes:
@@ -200,13 +344,17 @@ class ShardedWeightLanes:
     """
 
     def __init__(self, pool, plan, *, prefetch_depth: int = 1,
-                 timeline: Optional[MeasuredTimeline] = None):
+                 timeline: Optional[MeasuredTimeline] = None,
+                 faults=None, watchdog_s: Optional[float] = None,
+                 max_retries: int = 2):
         self.plan = plan
         self.pool = pool
         self.devices = plan.lane_devices()
         self.lanes = [
             WeightStreamer(pool.lane_view(i), prefetch_depth=prefetch_depth,
-                           timeline=timeline, device=dev, shard=i)
+                           timeline=timeline, device=dev, shard=i,
+                           faults=faults, watchdog_s=watchdog_s,
+                           max_retries=max_retries)
             for i, dev in enumerate(self.devices)
         ]
         # global leaf shapes/specs for assembly (uniform across layers)
@@ -242,6 +390,13 @@ class ShardedWeightLanes:
         for lane in self.lanes:
             lane.close()
 
+    def __enter__(self) -> "ShardedWeightLanes":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     # aggregated stats (sums across lanes; per-lane detail on .lanes)
     @property
     def uploads(self) -> int:
@@ -258,3 +413,17 @@ class ShardedWeightLanes:
     @property
     def resident_buffers(self) -> int:
         return max(lane.resident_buffers for lane in self.lanes)
+
+    @property
+    def lane_health(self) -> str:
+        """Worst health across lanes: one degraded lane degrades the mesh."""
+        return ("degraded" if any(l.degraded for l in self.lanes)
+                else "healthy")
+
+    @property
+    def fault_counters(self) -> Dict[str, int]:
+        agg: Dict[str, int] = {}
+        for lane in self.lanes:
+            for k, v in lane.counters.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg

@@ -55,6 +55,7 @@ class _Step:
     start: float
     end: float = 0.0
     spans: List[Span] = field(default_factory=list)
+    events: dict = field(default_factory=dict)    # robustness events by name
 
 
 #: span tag -> traffic category (compute tags carry no bytes)
@@ -108,6 +109,17 @@ class MeasuredTimeline:
                 self._cur = _Step(tag="untagged", start=start)
             self._cur.spans.append(Span(lane, tag, start, end, nbytes, shard))
 
+    def record_event(self, name: str, n: int = 1) -> None:
+        """Count a robustness event (watchdog timeout, copy retry, lane
+        fallback, arena denial, ...) against the current step.  Events ride
+        the ``TimelineResult.events`` field so downstream consumers — the
+        adaptive controller above all — can tell a degraded step from a
+        clean one instead of fitting the cost model to it."""
+        with self._lock:
+            if self._cur is None:
+                self._cur = _Step(tag="untagged", start=time.perf_counter())
+            self._cur.events[name] = self._cur.events.get(name, 0) + n
+
     @contextmanager
     def task(self, lane: str, tag: str, nbytes: int = 0):
         t0 = time.perf_counter()
@@ -159,7 +171,7 @@ class MeasuredTimeline:
             out.append(TimelineResult(
                 total=end - s.start, pcie_busy=busy["pcie"],
                 gpu_busy=busy["gpu"], traffic=traffic, finish=finish,
-                tag_busy=tag_busy))
+                tag_busy=tag_busy, events=dict(s.events)))
         return out
 
     def step_tags(self) -> List[str]:

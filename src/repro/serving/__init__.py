@@ -1,3 +1,5 @@
 from repro.serving.engine import (GenStats, HybridServeEngine,
                                   exact_reference_generate)
+from repro.serving.recovery import (CapacityError, ParkedRequest,
+                                    RecoveryConfig, RecoveryStats)
 from repro.serving.scheduler import ContinuousBatchingServer, ServeStats

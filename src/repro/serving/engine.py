@@ -46,6 +46,7 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, TimelineResult, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
+from repro.serving.recovery import CapacityError
 from repro.serving.util import bucket, pack_group, trace_ctx
 from repro.sharding import ShardPlan
 
@@ -83,6 +84,7 @@ class HybridServeEngine:
                  generalized: bool = False, offload: bool = False,
                  budget: Optional[OffloadBudget] = None,
                  adaptive: bool = False,
+                 faults=None, watchdog_s: Optional[float] = None,
                  ctl: Optional[ControllerConfig] = None,
                  plan: Optional[ShardPlan] = None):
         """generalized=True uses the byte-ratio-aware Algorithm-1 variant
@@ -159,11 +161,16 @@ class HybridServeEngine:
 
         self.executor = None
         self.measured_steps: List[TimelineResult] = []
+        # robustness (DESIGN.md §12): deterministic fault injection + lane
+        # watchdog forwarded to the offload runtime; arena denials (real or
+        # injected) degrade to device-resident serving instead of raising
+        self.faults = faults
+        self.arena_denials = 0
         if offload:
             from repro.offload import OffloadExecutor, make_spill_pool
             self.executor = OffloadExecutor(
                 cfg, params, prefetch_depth=self.budget.prefetch_depth,
-                plan=plan)
+                plan=plan, faults=faults, watchdog_s=watchdog_s)
             self.spill_kv_pool = make_spill_pool(
                 cfg, max_requests=max_minibatch, kv_cap=kv_cap,
                 shards=shards)
@@ -348,9 +355,12 @@ class HybridServeEngine:
                 for t in range(pbs[i]):
                     kind = BlockType.KV if t < kv_keep[i] else BlockType.ACT
                     if self.blockman.append_token(r.rid, kind) is None:
-                        raise RuntimeError(
+                        raise CapacityError(
                             f"{kind.value} block pool exhausted during "
-                            f"prefill of request {r.rid}")
+                            f"prefill of request {r.rid}",
+                            rids=[rr.rid for rr in group],
+                            resource=f"{kind.value} blocks",
+                            hint="grow the host pools or shrink the group")
 
             # precomputed store schedule -> one on-device scan for all tokens
             max_new = max(r.max_new_tokens for r in group)
@@ -372,11 +382,23 @@ class HybridServeEngine:
                     (BlockType.KV, Location.DEVICE)].free_blocks
                 spilled = need > free
                 if spilled:
-                    region = self.spill_kv_pool.alloc(
+                    # deterministic fault site "arena": an injected deny
+                    # models transient host-arena exhaustion; a real None
+                    # from the pool is the same condition for real
+                    deny = (self.faults is not None and
+                            self.faults.draw("arena", kinds=("deny",))
+                            is not None)
+                    region = None if deny else self.spill_kv_pool.alloc(
                         kv_region_blocks(B, self.kv_cap))
                     if region is None:
-                        raise RuntimeError("host spill arena exhausted")
-                else:
+                        # degraded mode: serve the group device-resident
+                        # (best-effort block migration; tokens are exact
+                        # either way) instead of failing the requests —
+                        # surfaced to the controller via the timeline event
+                        spilled = False
+                        self.arena_denials += 1
+                        self.executor.timeline.record_event("arena_denied")
+                if not spilled:
                     for r in group:
                         self.blockman.migrate(r.rid, BlockType.KV,
                                               Location.DEVICE)
@@ -417,10 +439,13 @@ class HybridServeEngine:
                     kind = BlockType.ACT if sched[bi, step] else BlockType.KV
                     blk = self.blockman.append_token(r.rid, kind)
                     if blk is None:
-                        raise RuntimeError(
+                        raise CapacityError(
                             f"{kind.value} block pool exhausted at decode "
                             f"step {step} of request {r.rid}; the precomputed "
-                            "store_act schedule requires allocation to succeed")
+                            "store_act schedule requires allocation to succeed",
+                            rids=[rr.rid for rr in group],
+                            resource=f"{kind.value} blocks",
+                            hint="grow the host pools or shrink the group")
                     if (self.executor is not None and not spilled
                             and kind == BlockType.KV
                             and blk.location == Location.HOST):

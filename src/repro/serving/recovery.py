@@ -1,0 +1,168 @@
+"""Pressure recovery for the continuous-batching server (DESIGN.md §12).
+
+The PR 1-5 serving stack fails loudly on block-pool exhaustion: correct —
+silent overflow would corrupt caches — but brittle, because the paper's own
+mechanism makes a gentler response possible.  ACT checkpoints are
+*regenerable* KV at d_model/token: a victim request's KV blocks can be
+demoted to ACT blocks in place (``BlockManager.demote_request_kv``),
+freeing 2·L·d_kv − d_model bytes per token while keeping enough state to
+resume through the regenerate/prefill lane.  When even ACT capacity is
+gone, the paper's "conventional" fallback — recompute from token IDs —
+still applies: drop the victim's blocks entirely and re-prefill from its
+prompt + generated prefix.  Both resumes are token-exact under greedy
+decoding (prefill ≡ decode state, the tested PR 1 equivalence), so a
+preempted request finishes with the same tokens the never-preempted oracle
+produces.
+
+This module is the policy/bookkeeping layer: the structured capacity
+error, the preemption/parking types, and the resume-cost pricing.  The
+mechanism lives in ``ContinuousBatchingServer`` (victim selection, chunk
+re-planning, re-admission).
+
+Backpressure contract: parked requests hold NO blocks beyond their demoted
+ACT prefix (or none, token mode), resume at chunk boundaries with priority
+over fresh arrivals, and are bounded by ``RecoveryConfig.max_parked`` — a
+genuinely overcommitted server still raises ``CapacityError``, now with
+the affected rids and a recovery hint attached.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import BLOCK_TOKENS
+from repro.core import costmodel as cm
+from repro.data.pipeline import Request
+
+
+class CapacityError(RuntimeError):
+    """A capacity limit was hit and recovery could not absorb it.
+
+    Carries the affected request ids and a recovery hint so callers (and
+    operators reading logs) know which requests were released and what knob
+    would have prevented the raise.  The server guarantees admissibility
+    after one: every affected slot/table is released before the raise
+    (the PR 4 ``_release_slots`` contract, extended to parked state)."""
+
+    def __init__(self, message: str, *, rids: Sequence[int] = (),
+                 resource: str = "blocks", hint: str = ""):
+        self.rids = list(rids)
+        self.resource = resource
+        self.hint = hint
+        full = message
+        if rids:
+            full += f" [rids={self.rids}]"
+        if hint:
+            full += f" (hint: {hint})"
+        super().__init__(full)
+
+
+@dataclass(frozen=True)
+class RecoveryConfig:
+    """Preemption/re-admission policy knobs.
+
+    ``max_parked``: bound on the re-admission queue — the backpressure
+    valve; 0 disables preemption entirely (PR 1-5 fail-loud behaviour,
+    with ``CapacityError`` instead of bare ``RuntimeError``).
+    ``max_preempts_per_request``: progress guard — a request preempted this
+    many times is no longer a victim candidate, so a pathological workload
+    cannot livelock on preempt/resume cycles.
+    ``prefer_act``: demote victims' KV to ACT when ACT capacity exists
+    (the paper-native move); False forces the token-ID fallback always —
+    the recovery-cost baseline ``benchmarks/recovery_bench.py`` compares.
+    """
+    max_parked: int = 16
+    max_preempts_per_request: int = 8
+    prefer_act: bool = True
+
+
+@dataclass
+class ParkedRequest:
+    """A preempted request awaiting re-admission.
+
+    ``generated``: tokens emitted before preemption (prompt + these form
+    the resume prefix).  ``mode``: "act" — the victim's KV was demoted to
+    ACT blocks and its table is still live in the BlockManager (resume
+    regenerates through the prefill lane, pricing only KV Gen); "tokens" —
+    all blocks were dropped, resume recomputes the full prefix forward.
+    ``preempts``: times this request has been preempted (progress guard).
+    """
+    request: Request
+    generated: List[int] = field(default_factory=list)
+    mode: str = "act"                     # "act" | "tokens"
+    preempts: int = 1
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def remaining(self) -> int:
+        return self.request.max_new_tokens - len(self.generated)
+
+    @property
+    def prefix_tokens(self) -> int:
+        """EFFECTIVE resume-prefix length: the originally-served prompt is
+        the block-bucket-padded one (the admission padding convention), so
+        the resume prefix is that padded length plus the generated tokens —
+        NOT ``len(prompt) + len(generated)``, which would shift every
+        resumed position and break token exactness."""
+        padded = -(-len(self.request.prompt) // BLOCK_TOKENS) * BLOCK_TOKENS
+        return padded + len(self.generated)
+
+
+@dataclass
+class RecoveryStats:
+    """Preemption / degraded-mode counters, surfaced on the server."""
+    preemptions: int = 0
+    preempt_to_act: int = 0               # victims demoted KV -> ACT
+    preempt_to_tokens: int = 0            # victims dropped to token IDs
+    demoted_blocks: int = 0
+    dropped_blocks: int = 0
+    resumes: int = 0
+    resume_from_act: int = 0
+    resume_from_tokens: int = 0
+    sched_clamps: int = 0                 # store flags flipped off a full region
+    parked_degraded: int = 0              # parked ACT holdings dropped to tokens
+    resume_cost_s: float = 0.0            # simulated seconds spent on resumes
+    parked_peak: int = 0
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "preemptions", "preempt_to_act", "preempt_to_tokens",
+            "demoted_blocks", "dropped_blocks", "resumes",
+            "resume_from_act", "resume_from_tokens", "sched_clamps",
+            "parked_degraded", "resume_cost_s", "parked_peak")}
+
+
+def blocks_for_tokens(t0: int, t1: int) -> int:
+    """New blocks needed to grow a region from ``t0`` to ``t1`` tokens —
+    the exact pre-dispatch forecast (block boundaries every BLOCK_TOKENS)."""
+    return -(-max(t1, 0) // BLOCK_TOKENS) - (-(-max(t0, 0) // BLOCK_TOKENS))
+
+
+def resume_cost(cfg: ModelConfig, hw: cm.HardwareSpec,
+                fits: Optional[Tuple[cm.LinearFit, cm.LinearFit]],
+                prefix_tokens: int, mode: str) -> float:
+    """Simulated seconds one resume costs, in the server's sim_time units.
+
+    "act": the regenerate lane rebuilds KV from the surviving checkpoints
+    — per-layer KV Gen over the prefix (Eq. 7), priced by the profiled
+    ``fit_kv_gen`` when available.  "tokens": the conventional fallback
+    recomputes the full forward over the prefix at prefill MFU — the
+    2·L·d_kv/d_model-times-heavier path the paper's Fig. 2 motivates
+    avoiding.  Either way the cost is per-layer × num_layers, matching the
+    fits' units (per layer, batch-aggregate tokens)."""
+    n = max(int(prefix_tokens), 0)
+    if n == 0:
+        return 0.0
+    if mode == "act":
+        if fits is not None:
+            per_layer = float(fits[0](n))
+        else:
+            per_layer = n * cm.kv_gen_flops_per_token(cfg) / (
+                hw.flops * hw.gen_mfu)
+        return per_layer * cfg.num_layers + hw.dispatch_overhead
+    flops = n * cm.forward_flops_per_token(cfg, n) * cfg.num_layers
+    return flops / (hw.flops * hw.mfu) + hw.dispatch_overhead

@@ -53,6 +53,9 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
+from repro.serving.recovery import (CapacityError, ParkedRequest,
+                                    RecoveryConfig, RecoveryStats,
+                                    blocks_for_tokens, resume_cost)
 from repro.serving.util import bucket, pack_group, trace_ctx
 from repro.sharding import ShardPlan
 
@@ -64,6 +67,8 @@ class SlotState:
     kv_tokens: int = 0          # host mirror of this slot's device kv_len
     act_tokens: int = 0         # host mirror of this slot's device act_len
     generated: List[int] = field(default_factory=list)
+    preempts: int = 0           # times this request has been preempted
+    request: Optional[Request] = None   # original request (resume prefix)
 
     @property
     def active(self) -> bool:
@@ -108,7 +113,13 @@ class ContinuousBatchingServer:
                  offload: bool = False, prefetch_depth: int = 1,
                  adaptive: bool = False,
                  ctl: Optional[ControllerConfig] = None,
-                 plan: Optional[ShardPlan] = None):
+                 plan: Optional[ShardPlan] = None,
+                 recovery: Optional[RecoveryConfig] = None,
+                 faults=None, watchdog_s: Optional[float] = None,
+                 host_kv_blocks: Optional[int] = None,
+                 host_act_blocks: Optional[int] = None,
+                 dev_kv_blocks: Optional[int] = None,
+                 dev_act_blocks: Optional[int] = None):
         """chunk_steps: decode iterations per jitted dispatch.  1 reproduces
         the classic step server (admission every iteration); S>1 runs S
         masked steps per dispatch, admitting/retiring only at chunk
@@ -137,7 +148,24 @@ class ContinuousBatchingServer:
         (``costmodel.scale_for_shards``).  The chunk structure — ONE
         dispatch + ONE blocking sync per chunk, ONE per admission batch —
         holds PER MESH: sharding adds collectives inside the dispatch,
-        never host syncs (the PR 4 dispatch-count guarantees)."""
+        never host syncs (the PR 4 dispatch-count guarantees).
+
+        recovery=RecoveryConfig(...) arms pressure recovery (DESIGN.md
+        §12; on by default): block-pool exhaustion preempts victim slots —
+        demoting their KV blocks to ACT checkpoints when ACT capacity
+        exists, dropping to token-ID recompute otherwise — and parks them
+        in a bounded re-admission queue with resume priority over fresh
+        arrivals.  Resumes re-prefill over prompt + generated prefix,
+        token-exact vs the never-preempted oracle under greedy decoding.
+        ``RecoveryConfig(max_parked=0)`` restores pure fail-loud behaviour
+        (now a structured ``CapacityError``).
+
+        faults / watchdog_s: offload-lane fault injection and upload
+        deadline, forwarded to the ``OffloadExecutor`` (offload=True only).
+
+        host_kv_blocks / host_act_blocks / dev_kv_blocks / dev_act_blocks
+        override the Algorithm-1 pool sizing — the pressure tests' knob for
+        provoking exhaustion at smoke scale."""
         assert M.family(cfg) == "uniform"
         self.plan = plan
         shards = plan.shard_factor if plan is not None else 1
@@ -159,10 +187,22 @@ class ContinuousBatchingServer:
         # store schedule (the engine's pattern, DESIGN.md §5): host pools in
         # the Algorithm-1 split, device pools as the engine sizes them
         self.blockman = BlockManager(
-            cfg, host_kv_blocks=max(self.alloc.kv_blocks, 1),
-            host_act_blocks=max(self.alloc.act_blocks, 1),
-            dev_kv_blocks=64, dev_act_blocks=device_act_blocks(cfg, hw),
+            cfg,
+            host_kv_blocks=(host_kv_blocks if host_kv_blocks is not None
+                            else max(self.alloc.kv_blocks, 1)),
+            host_act_blocks=(host_act_blocks if host_act_blocks is not None
+                             else max(self.alloc.act_blocks, 1)),
+            dev_kv_blocks=(dev_kv_blocks if dev_kv_blocks is not None
+                           else 64),
+            dev_act_blocks=(dev_act_blocks if dev_act_blocks is not None
+                            else device_act_blocks(cfg, hw)),
             shard_factor=shards)
+        # pressure recovery (DESIGN.md §12): parked re-admission queue +
+        # counters; profiled fits price resume costs in sim_time units
+        self.recovery = recovery if recovery is not None else RecoveryConfig()
+        self.recovery_stats = RecoveryStats()
+        self.parked: List[ParkedRequest] = []
+        self.fits = cm.profile_cost_fns(cfg, hw)
         # offload mode: per-iteration timelines drained out of the executor
         # as they complete (keeping its span store bounded) and accumulated
         # here for the measured_steps property
@@ -179,7 +219,8 @@ class ContinuousBatchingServer:
             from repro.offload import OffloadExecutor
             self.executor = OffloadExecutor(cfg, params,
                                             prefetch_depth=prefetch_depth,
-                                            plan=plan)
+                                            plan=plan, faults=faults,
+                                            watchdog_s=watchdog_s)
         else:
             # cache donated: the slot pools update in place every chunk
             self._decode_chunk_jit = functools.partial(
@@ -246,21 +287,125 @@ class ContinuousBatchingServer:
         return toks, cur, cache
 
     # ------------------------------------------------------------- admission
-    def _admit_batch(self, assignments: List[Tuple[int, Request]],
+    def _admission_split(self, pb: int) -> Tuple[int, int]:
+        """(kv_tokens, act_tokens) the admission prefill will use for a
+        ``pb``-token prefix — the host-side twin of ``pack_group``'s
+        clamped Eq. 11 split, for pre-admission capacity forecasting."""
+        kk = int(round(pb * (1 - self.act_frac) / BLOCK_TOKENS)) * BLOCK_TOKENS
+        if pb <= self.kv_cap + self.act_cap:
+            lo = bucket(max(pb - self.act_cap, 0)) if pb > self.act_cap else 0
+            kk = min(max(kk, lo), min(self.kv_cap, pb))
+        return kk, pb - kk
+
+    def _plan_admission(self, queue: List[Request]
+                        ) -> List[Tuple[int, Request,
+                                        Optional[ParkedRequest]]]:
+        """Chunk-boundary admission plan: parked resumes strictly first
+        (backpressure — fresh arrivals never starve a preempted request),
+        then queued arrivals, each capacity-checked against the free block
+        pools so admission cannot trigger the exhaustion it exists to
+        relieve.  Candidates that do not fit stay parked/queued.  Mutates
+        ``self.parked``/``queue`` for what it admits."""
+        free_slots = [i for i, s in enumerate(self.slots) if not s.active]
+        free_kv = self.blockman.free_blocks(BlockType.KV)
+        free_act = self.blockman.free_blocks(BlockType.ACT)
+        out: List[Tuple[int, Request, Optional[ParkedRequest]]] = []
+        for slot in free_slots:
+            if self.parked:
+                pk = self.parked[0]
+                pb = bucket(pk.prefix_tokens)
+                kk, at = self._admission_split(pb)
+                kb = blocks_for_tokens(0, kk)
+                ab = blocks_for_tokens(0, at)
+                # an "act" resume releases its parked holdings on admission
+                credit = (self.blockman.counts(pk.rid)["act_blocks"]
+                          if pk.mode == "act" else 0)
+                if kb <= free_kv and ab <= free_act + credit:
+                    free_kv -= kb
+                    free_act += credit - ab
+                    out.append((slot, pk.request, self.parked.pop(0)))
+                    continue
+                break           # head-of-line blocked: hold ALL admissions
+            if not queue:
+                break
+            pb = bucket(len(queue[0].prompt))
+            kk, at = self._admission_split(pb)
+            kb, ab = blocks_for_tokens(0, kk), blocks_for_tokens(0, at)
+            if kb > free_kv or ab > free_act:
+                break           # backpressure: wait for blocks to free
+            free_kv -= kb
+            free_act -= ab
+            out.append((slot, queue.pop(0), None))
+        return out
+
+    def _admit_batch(self, assignments: List[Tuple[int, Request,
+                                                   Optional[ParkedRequest]]],
                      stats: ServeStats) -> None:
-        """Admit every queued arrival with a free slot in ONE batched prefill
-        dispatch (per-request kv_keep/last_pos, rows written into the slots
-        inside the same jit call)."""
+        """Admit every planned candidate in ONE batched prefill dispatch
+        (per-request kv_keep/last_pos, rows written into the slots inside
+        the same jit call).  Resumes ride the same dispatch: their prefix
+        is prompt + generated-so-far, their parked holdings are released
+        first, and the resume's simulated cost (KV Gen regenerate for
+        "act", full-forward recompute for "tokens") is priced into
+        sim_time."""
         k = len(assignments)
-        # pad to the batch bucket + Eq. 11 split; fails loudly on overflow
-        toks, kv_keep, pbs = pack_group([r for _, r in assignments],
-                                        self.act_frac, self.kv_cap,
-                                        self.act_cap)
-        slot_idx = np.asarray([i for i, _ in assignments], np.int32)
+        reqs: List[Request] = []
+        lens: List[int] = []      # true prefill lengths (-1: fill from pbs)
+        rstats = self.recovery_stats
+        for i, r, pk in assignments:
+            if pk is None:
+                reqs.append(r)
+                lens.append(-1)   # fresh: the padded bucket IS the prompt
+                continue
+            # release the parked holdings (the demoted ACT checkpoints this
+            # resume regenerates from), then re-prefill over the prefix
+            if pk.mode == "act":
+                self.blockman.free_request(pk.rid)
+                rstats.resume_from_act += 1
+            else:
+                rstats.resume_from_tokens += 1
+            rstats.resumes += 1
+            cost = resume_cost(self.cfg, self.hw, self.fits,
+                               pk.prefix_tokens, pk.mode)
+            rstats.resume_cost_s += cost
+            stats.sim_time += cost
+            # the resume prefix is the EFFECTIVE served context: the prompt
+            # as originally admitted — bucket-padded with its last token —
+            # plus every generated token.  Its true length (generally not a
+            # bucket multiple) becomes this row's last_pos, so re-prefill
+            # padding can never shift the resumed positions.
+            pp = np.asarray(r.prompt, np.int32)
+            pad = bucket(len(pp)) - len(pp)
+            prefix = np.concatenate([pp, np.full((pad,), pp[-1], np.int32),
+                                     np.asarray(pk.generated, np.int32)])
+            reqs.append(Request(rid=r.rid, prompt=prefix,
+                                max_new_tokens=pk.remaining))
+            lens.append(len(prefix))
+        # pad to the batch bucket + Eq. 11 split (clamped off full regions);
+        # a prefix that fits neither region combined is infeasible
+        try:
+            toks, kv_keep, pbs = pack_group(reqs, self.act_frac, self.kv_cap,
+                                            self.act_cap, clamp=True)
+        except ValueError as e:
+            raise CapacityError(
+                f"admission prefix does not fit the cache regions: {e}",
+                rids=[r.rid for r in reqs], resource="cache region",
+                hint="raise kv_cap/act_cap or shorten prompts") from e
+        lens = [pbs[j] if lens[j] < 0 else lens[j] for j in range(k)]
+        kv_keep = np.asarray(kv_keep, np.int32).copy()
+        for j, tl in enumerate(lens):
+            if tl != pbs[j]:
+                # resume row: re-clamp the bucket-derived split into the TRUE
+                # prefix length's feasible window (act span <= act_cap, kv
+                # prefix <= kv_cap); pack_group validated the bucket >= tl
+                kv_keep[j] = min(max(int(kv_keep[j]), max(tl - self.act_cap,
+                                                          0)),
+                                 min(self.kv_cap, tl))
+        slot_idx = np.asarray([i for i, _, _ in assignments], np.int32)
         with trace_ctx(self.plan):
             cur, self.cache = self._admit_jit(
                 self.params, jnp.asarray(toks), jnp.asarray(kv_keep),
-                jnp.asarray(np.asarray(pbs, np.int32)), jnp.asarray(slot_idx),
+                jnp.asarray(np.asarray(lens, np.int32)), jnp.asarray(slot_idx),
                 self.cache, kv_cap=self.kv_cap, act_cap=self.act_cap)
         stats.device_calls += 1
         stats.admission_batches += 1
@@ -269,25 +414,31 @@ class ContinuousBatchingServer:
         stats.host_syncs += 1
         stats.sim_time += self.hw.dispatch_overhead
         try:
-            for j, (i, r) in enumerate(assignments):
+            for j, (i, orig, pk) in enumerate(assignments):
+                r = reqs[j]
                 st = self.slots[i]
                 st.rid, st.remaining = r.rid, r.max_new_tokens
-                st.generated = []
+                st.generated = list(pk.generated) if pk is not None else []
+                st.preempts = pk.preempts if pk is not None else 0
+                st.request = orig
                 st.kv_tokens = int(kv_keep[j])
-                st.act_tokens = pbs[j] - int(kv_keep[j])
+                st.act_tokens = lens[j] - int(kv_keep[j])
                 self._cur_tok[i] = cur_np[j]
                 self.blockman.new_request(r.rid)
-                for t in range(pbs[j]):
+                for t in range(lens[j]):
                     kind = BlockType.KV if t < kv_keep[j] else BlockType.ACT
                     if self.blockman.append_token(r.rid, kind) is None:
-                        raise RuntimeError(
+                        raise CapacityError(
                             f"{kind.value} block pool exhausted during "
-                            f"prefill of request {r.rid}")
+                            f"prefill of request {r.rid}",
+                            rids=[rr.rid for rr in reqs],
+                            resource=f"{kind.value} blocks",
+                            hint="grow the host pools or lower concurrency")
         except Exception:
             # a fail-loud raise must not leak the batch's rids/blocks and
             # poison the server for retries (the engine's guard, mirrored):
             # release every slot of THIS batch before propagating
-            self._release_slots([i for i, _ in assignments])
+            self._release_slots([i for i, _, _ in assignments])
             raise
 
     # --- adaptive controller hook (between chunks) ----------------------------
@@ -321,6 +472,128 @@ class ContinuousBatchingServer:
                 self.blockman.free_request(st.rid)
             self.slots[i] = SlotState()
 
+    # ----------------------------------------------- pressure recovery (§12)
+    def _release_parked(self) -> List[int]:
+        """Failure-path cleanup for the re-admission queue: drop every
+        parked request's holdings and return their rids — after a
+        ``CapacityError`` the server must be fully admissible again."""
+        rids = []
+        for pk in self.parked:
+            if pk.mode == "act":
+                self.blockman.free_request(pk.rid)
+            rids.append(pk.rid)
+        self.parked.clear()
+        return rids
+
+    def _degrade_parked(self) -> bool:
+        """Backpressure relief: drop the YOUNGEST parked "act" holding to
+        token-ID mode, freeing its ACT blocks (youngest first — oldest
+        resumes first and should keep its cheap resume).  True if one was
+        degraded."""
+        for pk in reversed(self.parked):
+            if pk.mode == "act":
+                self.blockman.free_request(pk.rid)
+                pk.mode = "tokens"
+                self.recovery_stats.parked_degraded += 1
+                return True
+        return False
+
+    def _preempt_slot(self, v: int, active: np.ndarray,
+                      sched_t: np.ndarray, allow_demote: bool) -> None:
+        """Evict slot ``v`` pre-dispatch: demote its KV blocks to ACT
+        checkpoints (paper-native — the regenerate lane resumes from them)
+        when allowed, else drop everything to token-IDs; park it for
+        re-admission and mask it out of this chunk."""
+        st = self.slots[v]
+        c = self.blockman.counts(st.rid)
+        rstats = self.recovery_stats
+        mode = "tokens"
+        if allow_demote:
+            demoted = self.blockman.demote_request_kv(st.rid)
+            if demoted == c["kv_blocks"]:
+                mode = "act"
+                rstats.demoted_blocks += demoted
+        if mode == "tokens":
+            self.blockman.free_request(st.rid)
+            rstats.dropped_blocks += c["kv_blocks"] + c["act_blocks"]
+            rstats.preempt_to_tokens += 1
+        else:
+            rstats.preempt_to_act += 1
+        rstats.preemptions += 1
+        self.parked.append(ParkedRequest(
+            request=st.request, generated=list(st.generated), mode=mode,
+            preempts=st.preempts + 1))
+        rstats.parked_peak = max(rstats.parked_peak, len(self.parked))
+        active[:, v] = False
+        sched_t[:, v] = False
+        self.slots[v] = SlotState()
+
+    def _relieve_pressure(self, active: np.ndarray, sched_t: np.ndarray,
+                          kt0: np.ndarray, at0: np.ndarray) -> None:
+        """Pre-dispatch pool-pressure loop: forecast exactly how many new
+        blocks each kind needs for this chunk (block boundaries every
+        BLOCK_TOKENS) and, while a pool cannot cover its forecast, free
+        capacity — first by degrading parked ACT holdings (ACT pressure),
+        then by preempting the victim slot holding the most blocks.  After
+        this returns, the replay's ``append_token`` calls cannot exhaust.
+
+        Raises ``CapacityError`` (all slots + parked released) when
+        preemption cannot help: recovery disabled, re-admission queue full,
+        every candidate exhausted its progress guard, or only one runnable
+        slot remains (preempting it frees nothing another slot could use —
+        its own resume needs at least as much)."""
+        B = self.n_slots
+
+        def forecast() -> Tuple[int, int]:
+            kv_need = act_need = 0
+            for i in range(B):
+                if not self.slots[i].active:
+                    continue
+                col = active[:, i]
+                kv_end = int(kt0[i]) + int((~sched_t[:, i] & col).sum())
+                act_end = int(at0[i]) + int((sched_t[:, i] & col).sum())
+                kv_need += blocks_for_tokens(int(kt0[i]), kv_end)
+                act_need += blocks_for_tokens(int(at0[i]), act_end)
+            return kv_need, act_need
+
+        while True:
+            kv_need, act_need = forecast()
+            free_kv = self.blockman.free_blocks(BlockType.KV)
+            free_act = self.blockman.free_blocks(BlockType.ACT)
+            if kv_need <= free_kv and act_need <= free_act:
+                return
+            if act_need > free_act and self._degrade_parked():
+                continue                     # parked holdings freed ACT
+            runnable = [i for i in range(B) if self.slots[i].active]
+            victims = [i for i in runnable if self.slots[i].preempts <
+                       self.recovery.max_preempts_per_request]
+            if (self.recovery.max_parked <= 0
+                    or len(self.parked) >= self.recovery.max_parked
+                    or not victims or len(runnable) < 2):
+                rids = [self.slots[i].rid for i in runnable]
+                self._release_slots(range(B))
+                rids += self._release_parked()
+                raise CapacityError(
+                    f"block pools exhausted mid-chunk and preemption "
+                    f"cannot relieve the pressure (need kv={kv_need}/"
+                    f"{free_kv} act={act_need}/{free_act} free blocks)",
+                    rids=rids, resource="blocks",
+                    hint="grow the host pools, raise max_parked, or lower "
+                         "concurrency")
+
+            def held(i: int) -> int:
+                c = self.blockman.counts(self.slots[i].rid)
+                return c["kv_blocks"] + c["act_blocks"]
+
+            v = max(victims, key=lambda i: (held(i), i))
+            c_kv = self.blockman.counts(self.slots[v].rid)["kv_blocks"]
+            # demote only under KV pressure with ACT slack left over AFTER
+            # the chunk's own ACT forecast — demoting into ACT pressure
+            # would just move the exhaustion across pools
+            allow = (self.recovery.prefer_act
+                     and c_kv <= free_act - act_need)
+            self._preempt_slot(v, active, sched_t, allow)
+
     # ------------------------------------------------------------- one chunk
     def _run_chunk(self, n_steps: int, step_idx: int,
                    out: Dict[int, np.ndarray], stats: ServeStats) -> None:
@@ -338,26 +611,57 @@ class ContinuousBatchingServer:
         # per-slot store schedule for the chunk (Eq. 11 running ratio,
         # unrolled host-side exactly like the engine's decode loop)
         sched = store_act_schedule(self.alloc, at0, kt0, n_steps)  # (B, S)
-        sched_t = sched.T & active                                 # (S, B)
+        sched_t = (sched.T & active).copy()                        # (S, B)
+        # a region overflow inside the scan would drop writes SILENTLY while
+        # the validity masks keep claiming the slots.  First remedy: CLAMP
+        # the store schedule — flip store flags toward the non-full region
+        # (token-exact by the hybrid representation equivalence; caps are
+        # per-slot, so preemption cannot help here).  A slot whose context
+        # cannot fit BOTH regions combined is genuinely infeasible: release
+        # it and fail loudly, structured (DESIGN.md §12).
+        doomed: List[int] = []
+        for i in range(B):
+            if not self.slots[i].active:
+                continue
+            kv, act = int(kt0[i]), int(at0[i])
+            for s in range(n_steps):
+                if not active[s, i]:
+                    continue
+                store = bool(sched_t[s, i])
+                if store and act + 1 > self.act_cap:
+                    if kv + 1 > self.kv_cap:
+                        doomed.append(i)
+                        break
+                    sched_t[s, i] = store = False
+                    self.recovery_stats.sched_clamps += 1
+                elif not store and kv + 1 > self.kv_cap:
+                    if act + 1 > self.act_cap:
+                        doomed.append(i)
+                        break
+                    sched_t[s, i] = store = True
+                    self.recovery_stats.sched_clamps += 1
+                if store:
+                    act += 1
+                else:
+                    kv += 1
+        if doomed:
+            rids = [self.slots[i].rid for i in doomed]
+            self._release_slots(doomed)
+            raise CapacityError(
+                f"cache region would overflow within this chunk "
+                f"(kv_cap={self.kv_cap}, act_cap={self.act_cap}) for "
+                f"requests {rids}",
+                rids=rids, resource="cache region",
+                hint="raise the caps or cap max_new_tokens")
+        # second remedy: pool pressure — preempt victims until the block
+        # forecast fits the free pools (may mask slots out of this chunk)
+        self._relieve_pressure(active, sched_t, kt0, at0)
+        if not active.any():
+            return
         # per-step region growth (host replay of what the device will do);
         # sched_t is already active-masked, ~sched_t is not
         act_run = at0[None, :] + np.cumsum(sched_t, 0)   # lengths AFTER step s
         kv_run = kt0[None, :] + np.cumsum((~sched_t) & active, 0)
-        # a region overflow inside the scan would drop writes SILENTLY while
-        # the validity masks keep claiming the slots — fail loudly before the
-        # dispatch instead (the admission path already does for prefixes),
-        # releasing the doomed slots so the server stays usable
-        if n_steps and (int(kv_run[-1].max()) > self.kv_cap
-                        or int(act_run[-1].max()) > self.act_cap):
-            doomed = np.where((kv_run[-1] > self.kv_cap)
-                              | (act_run[-1] > self.act_cap))[0]
-            rids = [self.slots[i].rid for i in doomed]
-            self._release_slots(doomed)
-            raise RuntimeError(
-                f"cache region would overflow within this chunk "
-                f"(kv {int(kv_run[-1].max())}/{self.kv_cap}, "
-                f"act {int(act_run[-1].max())}/{self.act_cap}) for "
-                f"requests {rids}; raise the caps or cap max_new_tokens")
         # static attention bounds from the known slot lengths, page-aligned
         # so jit shapes bucket (the pages_bound idiom, DESIGN.md §7.4/§10);
         # the overflow check above guarantees they cover every active slot
@@ -418,11 +722,15 @@ class ContinuousBatchingServer:
                         st.kv_tokens += 1
                     kind = BlockType.ACT if sched_t[s, i] else BlockType.KV
                     if self.blockman.append_token(st.rid, kind) is None:
-                        raise RuntimeError(
+                        # unreachable in normal operation: _relieve_pressure
+                        # forecast the chunk's exact block needs pre-dispatch
+                        raise CapacityError(
                             f"{kind.value} block pool exhausted at decode "
                             f"step {step_idx + s} of request {st.rid}; the "
                             "precomputed store_act schedule requires "
-                            "allocation to succeed")
+                            "allocation to succeed",
+                            rids=[st.rid], resource=f"{kind.value} blocks",
+                            hint="grow the host pools or lower concurrency")
                     if st.rid not in stats.ttft:
                         stats.ttft[st.rid] = stats.sim_time
                     if st.remaining == 0:
@@ -435,6 +743,7 @@ class ContinuousBatchingServer:
                         self.slots[i] = SlotState()
         except Exception:
             self._release_slots(range(self.n_slots))
+            self._release_parked()
             raise
 
         meas: List = []
@@ -475,22 +784,33 @@ class ContinuousBatchingServer:
         out: Dict[int, np.ndarray] = {}
         stats = ServeStats()
         step_idx = 0
-        while queue or pending or any(s.active for s in self.slots):
+        while (queue or pending or self.parked
+               or any(s.active for s in self.slots)):
             while pending and pending[0][0] <= step_idx:
                 queue.append(pending.pop(0)[1])
-            # chunk-boundary admission: coalesce ALL due arrivals with free
-            # slots into one batched prefill dispatch
-            assignments = []
-            for i, s in enumerate(self.slots):
-                if not s.active and queue:
-                    assignments.append((i, queue.pop(0)))
+            # chunk-boundary admission: parked resumes first, then ALL due
+            # arrivals that fit, coalesced into one batched prefill dispatch
+            assignments = self._plan_admission(queue)
             if assignments:
                 self._admit_batch(assignments, stats)
             if not any(s.active for s in self.slots):
                 if pending:                  # idle gap before the next arrival
                     step_idx = pending[0][0]
                     continue
-                break
+                if not (self.parked or queue):
+                    break
+                # stalled: nothing runs, nothing fits.  Degrade parked ACT
+                # holdings (youngest first) to free blocks and retry; a
+                # stall that survives every degradation is genuine
+                # overcommit — release everything and fail structured
+                if self._degrade_parked():
+                    continue
+                rids = self._release_parked() + [r.rid for r in queue]
+                raise CapacityError(
+                    "server stalled: no admission fits the free block "
+                    "pools even with every parked holding degraded",
+                    rids=rids, resource="blocks",
+                    hint="grow the host pools or shorten prompts")
             n_steps = min(self.chunk_steps,
                           max(s.remaining for s in self.slots if s.active))
             self._run_chunk(n_steps, step_idx, out, stats)

@@ -31,7 +31,8 @@ def bucket(n: int, mult: int = 16) -> int:
 
 
 def pack_group(requests, act_frac: float, kv_cap: int, act_cap: int, *,
-               mode: str = "hybrid") -> Tuple[np.ndarray, np.ndarray, List[int]]:
+               mode: str = "hybrid", clamp: bool = False
+               ) -> Tuple[np.ndarray, np.ndarray, List[int]]:
     """Pad a group of prompts to the common bucket and split each at the
     Eq. 11 ratio (block-aligned) — the shared preamble of the engine's
     group prefill and the scheduler's coalesced admission.
@@ -42,6 +43,13 @@ def pack_group(requests, act_frac: float, kv_cap: int, act_cap: int, *,
     The batched prefill places per-request prefixes by masking, so an
     overfull region would truncate SILENTLY — fail loudly here instead
     (the seed per-request path failed at trace time).
+
+    ``clamp=True`` (the recovery path's admission): a ratio split that
+    violates a per-slot cap is clamped into the feasible block-aligned
+    window [pbs − act_cap, kv_cap] instead of raising — the representation
+    shifts off the full region, which is token-exact by the hybrid
+    equivalence.  A prefix that fits NEITHER region combined
+    (pbs > kv_cap + act_cap) is genuinely infeasible and still raises.
     """
     plens = [len(r.prompt) for r in requests]
     pbs = [bucket(p) for p in plens]
@@ -56,6 +64,9 @@ def pack_group(requests, act_frac: float, kv_cap: int, act_cap: int, *,
             kk = pbs[i]
         if mode == "act":
             kk = 0
+        if clamp and pbs[i] <= kv_cap + act_cap:
+            lo = bucket(max(pbs[i] - act_cap, 0)) if pbs[i] > act_cap else 0
+            kk = min(max(kk, lo), min(kv_cap, pbs[i]))
         kv_keep[i] = kk
     if int(kv_keep.max()) > kv_cap:
         raise ValueError(f"kv_keep={int(kv_keep.max())} exceeds "

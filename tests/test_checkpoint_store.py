@@ -103,3 +103,59 @@ def test_restore_rejects_mismatched_metadata(tmp_path):
         restore(path, tree, expect_metadata={"arch": "yi-6b"})
     with pytest.raises(ValueError, match="metadata mismatch"):
         restore(path, tree, expect_metadata={"step": 200})
+
+
+def test_restore_rejects_truncated_shard(tmp_path):
+    """A shard file cut short (interrupted download/copy) must fail loudly
+    with an actionable message, not a cryptic zipfile traceback or —
+    worse — silently-garbage tensors."""
+    path = str(tmp_path / "ck")
+    tree = _tree(jnp.float32)
+    save(path, tree, metadata={})
+    npz = path + ".npz"
+    blob = open(npz, "rb").read()
+    with open(npz, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(ValueError, match="truncated or corrupted"):
+        restore(path, tree)
+
+
+def test_restore_rejects_bit_corrupted_member(tmp_path):
+    """A single flipped byte inside a member's data region: the zip
+    directory still parses, so the damage only surfaces at member read —
+    which must also fail loudly and actionably."""
+    path = str(tmp_path / "ck")
+    tree = _tree(jnp.float32)
+    save(path, tree, metadata={})
+    npz = path + ".npz"
+    blob = bytearray(open(npz, "rb").read())
+    # flip a byte well inside the first member's payload (past the ~100-byte
+    # local header + npy header), far from the end-of-archive directory
+    blob[200] ^= 0xFF
+    with open(npz, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(ValueError, match="truncated or corrupted"):
+        restore(path, tree)
+
+
+def test_restore_rejects_content_checksum_mismatch(tmp_path):
+    """Damage zipfile CANNOT detect — a member re-written with different
+    values but intact zip structure — is caught by the per-member content
+    checksums in the sidecar."""
+    import numpy as onp
+    path = str(tmp_path / "ck")
+    tree = _tree(jnp.float32)
+    save(path, tree, metadata={})
+    data = dict(onp.load(path + ".npz"))
+    victim = sorted(data)[0]
+    data[victim] = data[victim] + 1             # valid zip, wrong contents
+    onp.savez(path + ".npz", **data)
+    with pytest.raises(ValueError, match="content checksum"):
+        restore(path, tree)
+    # pre-checksum checkpoints (no crc32 key in the sidecar) still restore
+    meta_path = path + ".meta.json"
+    meta = json.load(open(meta_path))
+    del meta["crc32"]
+    json.dump(meta, open(meta_path, "w"))
+    out = restore(path, tree)                   # old sidecar: no crc check
+    assert jax.tree.leaves(out)[0] is not None

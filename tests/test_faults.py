@@ -1,0 +1,336 @@
+"""Fault-injected offload lanes: deterministic plans, watchdog + retry
+ladders, degraded modes, and the fault x config soak matrix (DESIGN.md §12).
+
+Fast lane: FaultPlan determinism/caps, the retry and watchdog fallbacks at
+engine scale, the arena-deny degraded mode, the controller's faulted-step
+skip, the copy-thread leak guard, and the CI smoke (one stall + one arena
+exhaustion, token-exact).  The @slow soak sweeps fault plans x configs and
+asserts every request completes token-exact with zero uncaught raises and
+leak-free counters.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import device_act_blocks, host_block_allocation
+from repro.core import costmodel as cm
+from repro.core.controller import HybridCacheController
+from repro.core.pipeline import TimelineResult
+from repro.data import request_trace
+from repro.models import model as M
+from repro.offload import FAULT_KINDS, FaultPlan, TransientCopyError
+from repro.serving import HybridServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = request_trace(cfg.vocab_size, 4, prompt_mean=40, gen_tokens=8,
+                         seed=3)
+    refs = {}
+    for mode in ("hybrid", "kv"):
+        eng = HybridServeEngine(cfg, params, mode=mode, max_minibatch=4,
+                                kv_cap=128, act_cap=128)
+        refs[mode], _ = eng.generate(reqs)
+    return cfg, params, reqs, refs
+
+
+def _copy_threads() -> int:
+    return sum(1 for t in threading.enumerate()
+               if t.name.startswith("copy-stream"))
+
+
+def _faulted_engine(cfg, params, mode, faults, **kw):
+    return HybridServeEngine(cfg, params, mode=mode, max_minibatch=4,
+                             kv_cap=128, act_cap=128, offload=True,
+                             faults=faults, **kw)
+
+
+# =============================================================================
+# FaultPlan: determinism, stream independence, event caps
+# =============================================================================
+
+def test_fault_plan_deterministic_and_site_independent():
+    """Two plans with the same seed draw the IDENTICAL event sequence at
+    every site, and each site's stream depends only on its own call order —
+    interleaving draws across sites changes nothing."""
+    mk = lambda: FaultPlan(7, stall_p=0.3, slow_p=0.3, copy_fail_p=0.2,
+                           arena_deny_p=0.4, max_events=None)
+    a, b = mk(), mk()
+    seq_a = [a.draw("stage:0") for _ in range(40)]
+    seq_a += [a.draw("arena", kinds=("deny",)) for _ in range(40)]
+    # b interleaves the two sites; per-site sequences must still match
+    seq_b_stage, seq_b_arena = [], []
+    for _ in range(40):
+        seq_b_stage.append(b.draw("stage:0"))
+        seq_b_arena.append(b.draw("arena", kinds=("deny",)))
+    assert [e.kind if e else None for e in seq_a[:40]] == \
+        [e.kind if e else None for e in seq_b_stage]
+    assert [e.kind if e else None for e in seq_a[40:]] == \
+        [e.kind if e else None for e in seq_b_arena]
+    assert a.injected == b.injected
+    assert a.draws == b.draws
+
+
+def test_fault_plan_kinds_filter_does_not_perturb_stream():
+    """Restricting ``kinds`` suppresses the filtered faults WITHOUT shifting
+    the RNG stream: the un-filtered kinds fire at exactly the same draws."""
+    full = FaultPlan(3, stall_p=0.25, copy_fail_p=0.25, max_events=None)
+    only_stall = FaultPlan(3, stall_p=0.25, copy_fail_p=0.25,
+                           max_events=None)
+    a = [full.draw("s") for _ in range(60)]
+    b = [only_stall.draw("s", kinds=("stall",)) for _ in range(60)]
+    for ea, eb in zip(a, b):
+        if ea is not None and ea.kind == "stall":
+            assert eb is not None and eb.kind == "stall"
+        else:
+            # copy_fail (or nothing) in the full plan -> nothing here, but
+            # never a DIFFERENT fault materialising from the filtered draw
+            assert eb is None or eb.kind == "stall"
+    assert only_stall.injected.get("s:stall", 0) == \
+        full.injected.get("s:stall", 0)
+    assert "s:copy_fail" not in only_stall.injected
+
+
+def test_fault_plan_max_events_guarantees_fault_free_tail():
+    plan = FaultPlan(0, stall_p=1.0, max_events=3)
+    evs = [plan.draw("s", kinds=("stall",)) for _ in range(10)]
+    assert [e.kind for e in evs[:3]] == ["stall"] * 3
+    assert all(e is None for e in evs[3:])
+    assert plan.injected == {"s:stall": 3}
+    assert plan.total_injected == 3
+    # zero-probability plan: sound no-op wrapper
+    noop = FaultPlan(0)
+    assert all(noop.draw("x") is None for _ in range(20))
+    assert noop.total_injected == 0
+
+
+def test_fault_plan_rejects_bad_probability():
+    with pytest.raises(AssertionError):
+        FaultPlan(0, stall_p=1.5)
+
+
+# =============================================================================
+# streamer ladders at engine scale: retry, watchdog, degraded mode
+# =============================================================================
+
+def test_transient_copy_failures_retried_token_exact(setup):
+    """Injected staging failures ride the bounded-retry ladder (and, if it
+    exhausts, the synchronous emergency fallback): tokens stay exact and
+    the counters record what happened."""
+    cfg, params, reqs, refs = setup
+    plan = FaultPlan(1, copy_fail_p=0.5, max_events=3)
+    eng = _faulted_engine(cfg, params, "hybrid", plan)
+    try:
+        out, _ = eng.generate(reqs)
+    finally:
+        eng.close()
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], refs["hybrid"][r.rid])
+    fc = eng.executor.fault_counters
+    assert plan.injected.get("stage:0:copy_fail", 0) > 0
+    assert fc["copy_retries"] + fc["copy_failures"] > 0
+
+
+def test_watchdog_trips_on_stall_and_degrades_token_exact(setup):
+    """A staging stall longer than the watchdog deadline trips the lane to
+    degraded mode: further acquires stage synchronously through the
+    emergency buffer, the pass finishes, and tokens stay exact."""
+    cfg, params, reqs, refs = setup
+    # four stalls at p=1.0: the prefill pass can consume at most its
+    # schedule length (= num_layers = 2) of them, so at least one stall is
+    # GUARANTEED to inject during a decode pass and mark that step faulted
+    # (``_stage`` records the event at injection time, on the copy thread,
+    # into whichever step is open) — robust to host-scheduling noise, which
+    # can let an individual stall finish before ``acquire`` ever waits on
+    # it and so hide any single watchdog trip
+    plan = FaultPlan(2, stall_p=1.0, stall_s=0.3, max_events=4)
+    eng = _faulted_engine(cfg, params, "hybrid", plan, watchdog_s=0.05)
+    try:
+        out, _ = eng.generate(reqs)
+    finally:
+        eng.close()
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], refs["hybrid"][r.rid])
+    fc = eng.executor.fault_counters
+    assert fc["stalls_injected"] == 4
+    # for every trip the same acquire falls back to an emergency sync stage;
+    # all four 0.3s stalls hiding behind >0.3s host-descheduling gaps at
+    # once is the only way this can miss, and that is not a real machine
+    assert fc["sync_fallbacks"] >= fc["watchdog_timeouts"] >= 1
+    # the events surfaced through the measured timeline for the controller
+    assert any(m.faulted for m in eng.measured_steps)
+
+
+def test_arena_deny_degrades_to_device_resident_token_exact(setup):
+    """An injected spill-arena denial (transient host exhaustion) must NOT
+    fail the group: the engine serves it device-resident instead, counts
+    the denial, surfaces it on the timeline — and tokens stay exact."""
+    cfg, params, reqs, refs = setup
+    plan = FaultPlan(4, arena_deny_p=1.0, max_events=2)
+    eng = _faulted_engine(cfg, params, "kv", plan)
+    try:
+        out, _ = eng.generate(reqs)
+    finally:
+        eng.close()
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], refs["kv"][r.rid])
+    assert eng.arena_denials >= 1
+    assert plan.injected.get("arena:deny", 0) == eng.arena_denials
+    assert eng.spill_kv_pool.allocated_blocks == 0
+
+
+def test_ci_fault_smoke_one_stall_one_exhaustion(setup):
+    """The CI fast-lane smoke (satellite S5): ONE staging stall + ONE arena
+    denial from one seeded plan, both injected sites observed, every token
+    exact, all pools drained."""
+    cfg, params, reqs, refs = setup
+    plan = FaultPlan(11, stall_p=0.5, stall_s=0.2, arena_deny_p=1.0,
+                     max_events=1)
+    eng = _faulted_engine(cfg, params, "kv", plan, watchdog_s=0.05)
+    try:
+        out, _ = eng.generate(reqs)
+    finally:
+        eng.close()
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], refs["kv"][r.rid])
+    assert plan.injected.get("stage:0:stall", 0) == 1
+    assert plan.injected.get("arena:deny", 0) == 1
+    assert eng.arena_denials == 1
+    assert eng.executor.fault_counters["stalls_injected"] == 1
+    for pool in eng.blockman.pools.values():
+        assert pool.allocated == 0
+    assert eng.spill_kv_pool.allocated_blocks == 0
+
+
+# =============================================================================
+# controller: degraded steps must not poison the cost-model refit
+# =============================================================================
+
+def test_controller_skips_or_substitutes_faulted_steps():
+    cfg = get_config("opt-6.7b-reduced")
+    hw = cm.TPU_V5E
+    n_act = device_act_blocks(cfg, hw)
+    alloc = host_block_allocation(cfg, hw, n_act)
+    mk = lambda events: TimelineResult(
+        total=1.0, pcie_busy=0.4, gpu_busy=0.6, traffic={},
+        tag_busy={"kv": 0.4, "gen": 0.6}, events=events)
+    faulted = mk({"watchdog_timeout": 1})
+    clean_sim = mk({})
+    ctl = HybridCacheController(cfg, hw, alloc, n_act)
+    # no sim available: the faulted step is skipped outright
+    added = ctl.observe([faulted], [32.0], [32.0])
+    assert added == 0 and ctl.faulted_skipped == 1
+    # sim available: the analytic prediction substitutes, samples ARE added
+    added = ctl.observe([faulted], [32.0], [32.0], sim=[clean_sim])
+    assert added == 2 and ctl.faulted_skipped == 2
+    # clean steps unaffected
+    added = ctl.observe([clean_sim], [32.0], [32.0])
+    assert added == 2 and ctl.faulted_skipped == 2
+
+
+# =============================================================================
+# deterministic teardown: no copy-thread leak across lifecycles (satellite S2)
+# =============================================================================
+
+def test_no_copy_thread_leak_across_engine_lifecycles(setup):
+    cfg, params, reqs, refs = setup
+    before = _copy_threads()
+    for i in range(3):
+        with HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=4,
+                               kv_cap=128, act_cap=128,
+                               offload=True) as eng:
+            out, _ = eng.generate(reqs[:2])
+            assert _copy_threads() > before      # the lane is really alive
+        assert _copy_threads() == before         # ...and really joined
+    for r in reqs[:2]:
+        np.testing.assert_array_equal(out[r.rid], refs["hybrid"][r.rid])
+
+
+def test_close_is_idempotent_and_drains_faulted_stagings(setup):
+    """close() after a faulted pass joins the copy thread even with
+    abandoned (timed-out) stagings outstanding, and double-close is safe."""
+    cfg, params, reqs, _ = setup
+    before = _copy_threads()
+    plan = FaultPlan(6, stall_p=1.0, stall_s=0.2, max_events=2)
+    eng = _faulted_engine(cfg, params, "hybrid", plan, watchdog_s=0.05)
+    eng.generate(reqs[:2])
+    eng.close()
+    eng.close()
+    assert _copy_threads() == before
+
+
+# =============================================================================
+# the soak matrix (satellite S5, @slow): fault plans x modes, token-exact,
+# leak-free counters, zero uncaught raises
+# =============================================================================
+
+SOAK_PLANS = {
+    "stall": dict(stall_p=0.6, stall_s=0.2, max_events=2),
+    "copy_fail": dict(copy_fail_p=0.6, max_events=4),
+    "mixed": dict(stall_p=0.3, stall_s=0.2, slow_p=0.3, copy_fail_p=0.3,
+                  arena_deny_p=0.5, max_events=2),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["hybrid", "kv"])
+@pytest.mark.parametrize("plan_name", sorted(SOAK_PLANS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fault_soak_matrix(setup, mode, plan_name, seed):
+    cfg, params, reqs, refs = setup
+    before = _copy_threads()
+    plan = FaultPlan(seed, **SOAK_PLANS[plan_name])
+    eng = _faulted_engine(cfg, params, mode, plan, watchdog_s=0.05)
+    try:
+        out, _ = eng.generate(reqs)
+    finally:
+        eng.close()
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], refs[mode][r.rid])
+    # leak-free: every pool drained, every thread joined, counters coherent
+    for pool in eng.blockman.pools.values():
+        assert pool.allocated == 0
+    assert eng.spill_kv_pool.allocated_blocks == 0
+    assert _copy_threads() == before
+    fc = eng.executor.fault_counters
+    assert fc["stalls_injected"] == plan.injected.get("stage:0:stall", 0)
+    assert eng.arena_denials == plan.injected.get("arena:deny", 0)
+
+
+@pytest.mark.slow
+def test_fault_soak_scheduler_preemption_under_faults():
+    """The acceptance run: tight pools AND a faulted offload lane at once.
+    Every request completes token-exact vs the unfaulted never-preempted
+    oracle, preemption demotes to ACT (never drops) because ACT capacity
+    exists, and nothing leaks."""
+    from repro.data.pipeline import Request, _zipf
+    from repro.serving import exact_reference_generate
+    from repro.serving.scheduler import ContinuousBatchingServer
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=_zipf(rng, 1.2, cfg.vocab_size, 64)
+                    .astype(np.int32), max_new_tokens=40) for i in range(3)]
+    ref = exact_reference_generate(cfg, params, reqs)
+    plan = FaultPlan(9, stall_p=0.5, stall_s=0.2, copy_fail_p=0.3,
+                     max_events=2)
+    with ContinuousBatchingServer(
+            cfg, params, slots=2, kv_cap=192, act_cap=192, chunk_steps=4,
+            offload=True, faults=plan, watchdog_s=0.05,
+            host_kv_blocks=3, dev_kv_blocks=0, host_act_blocks=64,
+            dev_act_blocks=8) as srv:
+        out, _ = srv.run(reqs)
+        rs = srv.recovery_stats
+        for r in reqs:
+            np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+        assert rs.preemptions > 0
+        assert rs.preempt_to_act == rs.preemptions
+        assert rs.preempt_to_tokens == 0
+        assert plan.total_injected > 0
+        for pool in srv.blockman.pools.values():
+            assert pool.allocated == 0

@@ -1,0 +1,260 @@
+"""Pressure-safe serving: ACT-checkpoint preemption, re-admission, and
+structured capacity failures (DESIGN.md §12).
+
+The contract under test: when the block pools exhaust mid-chunk, the server
+PREEMPTS victims instead of raising — demoting their KV blocks to ACT
+checkpoints (the paper-native move, d_model/token vs 2·L·d_kv) when ACT
+capacity exists, dropping to token-ID recompute otherwise — parks them in a
+bounded re-admission queue, and resumes them token-exact vs the
+never-preempted oracle.  A genuinely overcommitted server still fails, but
+structured (``CapacityError`` with rids + hint) and fully released: the
+server stays admissible after every raise.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import BLOCK_TOKENS
+from repro.core.blocks import BlockManager, BlockType, Location
+from repro.data.pipeline import Request, _zipf
+from repro.models import model as M
+from repro.serving import (CapacityError, RecoveryConfig,
+                           exact_reference_generate)
+from repro.serving.recovery import ParkedRequest, blocks_for_tokens
+from repro.serving.scheduler import ContinuousBatchingServer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+
+    def mk(rid, plen, n):
+        return Request(
+            rid=rid,
+            prompt=_zipf(rng, 1.2, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=n)
+
+    # short prompts stress joint pressure; 64-token prompts hold one KV
+    # block each under the Eq. 11 split, so KV-pool pressure with ACT slack
+    # exercises the demote path specifically
+    short = [mk(0, 16, 40), mk(1, 16, 40), mk(2, 16, 40)]
+    long = [mk(10, 64, 40), mk(11, 64, 40), mk(12, 64, 40)]
+    refs = {r.rid: v for reqs in (short, long)
+            for r, v in zip(reqs, exact_reference_generate(
+                cfg, params, reqs).values())}
+    return cfg, params, short, long, refs
+
+
+def _serve(cfg, params, reqs, **kw):
+    srv = ContinuousBatchingServer(cfg, params, slots=2, kv_cap=192,
+                                   act_cap=192, chunk_steps=4, **kw)
+    out, stats = srv.run(reqs)
+    return srv, out, stats
+
+
+def _assert_exact_and_leak_free(srv, out, reqs, refs):
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], refs[r.rid])
+    assert not any(s.active for s in srv.slots)
+    assert not srv.parked
+    for pool in srv.blockman.pools.values():
+        assert pool.allocated == 0
+    assert not srv.blockman.tables
+
+
+# =============================================================================
+# the tentpole: preemption is token-exact and demotes when it can
+# =============================================================================
+
+def test_preempt_demotes_to_act_when_act_has_slack(setup):
+    """KV pressure with a roomy ACT pool: every preemption must demote the
+    victim's KV blocks to ACT checkpoints (verified by the live-block
+    transition counter), never drop to token-IDs, and every request must
+    finish token-exact vs the never-preempted oracle."""
+    cfg, params, _, long, refs = setup
+    srv, out, _ = _serve(cfg, params, long, host_kv_blocks=3,
+                         dev_kv_blocks=0, host_act_blocks=64,
+                         dev_act_blocks=8)
+    rs = srv.recovery_stats
+    assert rs.preemptions > 0
+    assert rs.preempt_to_act == rs.preemptions    # ACT slack: demote, always
+    assert rs.preempt_to_tokens == 0
+    assert rs.demoted_blocks > 0
+    assert srv.blockman.kind_transitions[
+        (BlockType.KV, BlockType.ACT)] == rs.demoted_blocks
+    assert rs.resumes == rs.preemptions
+    assert rs.resume_from_act == rs.preempt_to_act
+    assert rs.resume_cost_s > 0
+    _assert_exact_and_leak_free(srv, out, long, refs)
+
+
+def test_preempt_falls_back_to_tokens_when_forced(setup):
+    """prefer_act=False (the recovery-cost baseline): victims drop all
+    their blocks and resume by full token-ID recompute — still token-exact,
+    still leak-free, no demotions recorded."""
+    cfg, params, _, long, refs = setup
+    srv, out, _ = _serve(cfg, params, long, host_kv_blocks=3,
+                         dev_kv_blocks=0, host_act_blocks=64,
+                         dev_act_blocks=8,
+                         recovery=RecoveryConfig(prefer_act=False))
+    rs = srv.recovery_stats
+    assert rs.preemptions > 0
+    assert rs.preempt_to_tokens == rs.preemptions
+    assert rs.preempt_to_act == 0 and rs.demoted_blocks == 0
+    assert rs.dropped_blocks > 0
+    assert not srv.blockman.kind_transitions
+    _assert_exact_and_leak_free(srv, out, long, refs)
+
+
+def test_preempt_under_joint_pressure_token_exact(setup):
+    """Both pools tight: demotion would just move the exhaustion across
+    pools, so the server must pick the token-ID fallback on its own (the
+    ``free_act - act_need`` guard) and still finish token-exact."""
+    cfg, params, short, _, refs = setup
+    srv, out, _ = _serve(cfg, params, short, host_kv_blocks=5,
+                         dev_kv_blocks=0, host_act_blocks=5,
+                         dev_act_blocks=0)
+    rs = srv.recovery_stats
+    assert rs.preemptions > 0
+    assert rs.preempt_to_tokens == rs.preemptions
+    assert rs.parked_peak >= 1
+    _assert_exact_and_leak_free(srv, out, short, refs)
+
+
+def test_preempt_resume_under_arrival_churn(setup):
+    """Open-loop arrivals riding through preemption: parked resumes take
+    priority at chunk boundaries and every request — preempted, resumed, or
+    late-arriving — finishes token-exact."""
+    cfg, params, _, long, refs = setup
+    srv = ContinuousBatchingServer(cfg, params, slots=2, kv_cap=192,
+                                   act_cap=192, chunk_steps=4,
+                                   host_kv_blocks=3, dev_kv_blocks=0,
+                                   host_act_blocks=64, dev_act_blocks=8)
+    out, stats = srv.run(long, arrival_steps=[0, 0, 30])
+    assert srv.recovery_stats.preemptions > 0
+    assert srv.recovery_stats.resumes == srv.recovery_stats.preemptions
+    assert set(stats.completed_at) == {r.rid for r in long}
+    _assert_exact_and_leak_free(srv, out, long, refs)
+
+
+def test_schedule_clamping_off_full_region_token_exact(setup):
+    """A store schedule that would overflow one region's per-slot cap is
+    CLAMPED toward the other region (token-exact by the hybrid
+    representation equivalence) instead of raising — counted in
+    sched_clamps."""
+    cfg, params, short, _, refs = setup
+    srv = ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                   act_cap=16, chunk_steps=4)
+    out, _ = srv.run(short)
+    assert srv.recovery_stats.sched_clamps > 0
+    _assert_exact_and_leak_free(srv, out, short, refs)
+
+
+# =============================================================================
+# structured failure: CapacityError + admissibility after (satellite S1)
+# =============================================================================
+
+def test_capacity_error_structured_and_server_stays_admissible(setup):
+    """Genuine overcommit (KV pool smaller than one chunk of unavoidable
+    growth for even a single survivor): the raise must be a CapacityError
+    carrying the affected rids and a recovery hint, with EVERY slot, table
+    and parked holding released — the server serves follow-up work."""
+    cfg, params, _, long, refs = setup
+    srv = ContinuousBatchingServer(cfg, params, slots=2, kv_cap=192,
+                                   act_cap=192, chunk_steps=4,
+                                   host_kv_blocks=2, dev_kv_blocks=0,
+                                   host_act_blocks=64, dev_act_blocks=8)
+    with pytest.raises(CapacityError) as ei:
+        srv.run(long)
+    err = ei.value
+    assert isinstance(err, RuntimeError)          # existing handlers keep working
+    assert err.rids and set(err.rids) <= {r.rid for r in long}
+    assert err.hint and err.resource
+    assert str(err.rids) in str(err) and err.hint in str(err)
+    # fully released: admissible for work that fits
+    assert not any(s.active for s in srv.slots)
+    assert not srv.parked
+    for pool in srv.blockman.pools.values():
+        assert pool.allocated == 0
+    ok = Request(rid=99, prompt=long[0].prompt[:16],
+                 max_new_tokens=4)
+    out, _ = srv.run([ok])
+    assert len(out[99]) == 4
+
+
+def test_max_parked_zero_restores_fail_loud(setup):
+    """RecoveryConfig(max_parked=0) disables preemption entirely: the same
+    pressure that the default config absorbs silently must raise a
+    CapacityError with zero preemptions recorded."""
+    cfg, params, _, long, _ = setup
+    srv = ContinuousBatchingServer(cfg, params, slots=2, kv_cap=192,
+                                   act_cap=192, chunk_steps=4,
+                                   host_kv_blocks=3, dev_kv_blocks=0,
+                                   host_act_blocks=64, dev_act_blocks=8,
+                                   recovery=RecoveryConfig(max_parked=0))
+    with pytest.raises(CapacityError):
+        srv.run(long)
+    assert srv.recovery_stats.preemptions == 0
+    for pool in srv.blockman.pools.values():
+        assert pool.allocated == 0
+
+
+# =============================================================================
+# units: demotion accounting + the block forecast
+# =============================================================================
+
+def test_demote_request_kv_full_and_partial():
+    cfg = get_config("opt-6.7b-reduced")
+    bm = BlockManager(cfg, host_kv_blocks=8, host_act_blocks=8,
+                      dev_kv_blocks=0, dev_act_blocks=0)
+    bm.new_request(0)
+    for _ in range(3 * BLOCK_TOKENS):
+        assert bm.append_token(0, BlockType.KV) is not None
+    moved = bm.demote_request_kv(0)
+    assert moved == 3
+    c = bm.counts(0)
+    assert c["kv_blocks"] == 0 and c["act_blocks"] == 3
+    assert bm.kind_transitions[(BlockType.KV, BlockType.ACT)] == 3
+    assert bm.pools[(BlockType.KV, Location.HOST)].allocated == 0
+    # partial: only 1 ACT slot left for a 2-block victim
+    bm.new_request(1)
+    for _ in range(2 * BLOCK_TOKENS):
+        assert bm.append_token(1, BlockType.KV) is not None
+    for _ in range(4 * BLOCK_TOKENS):
+        assert bm.append_token(1, BlockType.ACT) is not None   # ACT now 7/8
+    assert bm.demote_request_kv(1) == 1
+    assert bm.counts(1)["kv_blocks"] == 1      # second block had no ACT home
+    bm.free_request(0)
+    bm.free_request(1)
+    for pool in bm.pools.values():
+        assert pool.allocated == 0
+
+
+def test_blocks_for_tokens_forecast_exact():
+    B = BLOCK_TOKENS
+    assert blocks_for_tokens(0, 0) == 0
+    assert blocks_for_tokens(0, 1) == 1
+    assert blocks_for_tokens(0, B) == 1
+    assert blocks_for_tokens(0, B + 1) == 2
+    assert blocks_for_tokens(B, B + 1) == 1        # boundary crossing
+    assert blocks_for_tokens(B - 1, B) == 0        # same block
+    assert blocks_for_tokens(5, 5) == 0
+    # additive across a span
+    for t0, t1, t2 in [(0, 7, 40), (3, 16, 17), (16, 31, 33)]:
+        assert (blocks_for_tokens(t0, t1) + blocks_for_tokens(t1, t2)
+                == blocks_for_tokens(t0, t2))
+
+
+def test_parked_request_effective_prefix_is_bucket_padded():
+    """The resume prefix must account for the admission padding convention:
+    a 17-token prompt was served as its 32-token bucket, so its parked
+    prefix is 32 + generated — the length the re-prefill resumes at."""
+    r = Request(rid=0, prompt=np.arange(17, dtype=np.int32),
+                max_new_tokens=8)
+    pk = ParkedRequest(request=r, generated=[5, 6, 7])
+    assert pk.prefix_tokens == 32 + 3
+    assert pk.remaining == 5
+    assert pk.rid == 0
