@@ -83,8 +83,13 @@ class HybridCacheController:
                  alloc: HostAllocation, n_act_gpu_blocks: int, *,
                  fits: Optional[Tuple[LinearFit, LinearFit]] = None,
                  generalized: bool = False,
-                 ctl: ControllerConfig = ControllerConfig()):
+                 ctl: ControllerConfig = ControllerConfig(), drift=None):
         self.cfg, self.hw, self.ctl = cfg, hw, ctl
+        # optional repro.obs.drift.DriftMonitor: every (measured, sim) pair
+        # that flows through observe() also feeds the rolling lane
+        # residuals, so systematic simulate_steps error the damped refit
+        # keeps absorbing becomes a visible metric (DESIGN.md §13)
+        self.drift = drift
         self.generalized = generalized
         self.n_act_gpu_blocks = n_act_gpu_blocks
         prior = fits if fits is not None else cm.profile_cost_fns(cfg, hw)
@@ -124,6 +129,10 @@ class HybridCacheController:
         L = max(self.cfg.num_layers, 1)
         added = 0
         for i, res in enumerate(results):
+            if self.drift is not None and sim is not None and i < len(sim):
+                # fed the ORIGINAL measured result — the monitor itself
+                # skips identity pairs and fault-degraded steps
+                self.drift.observe(res, sim[i])
             if res.faulted:
                 self.faulted_skipped += 1
                 if sim is not None and i < len(sim) and sim[i] is not res:

@@ -9,6 +9,11 @@ same engine tensor-parallel.  On a CPU-only box force host devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python -m repro.launch.serve --arch opt-6.7b-reduced \
       --mesh 2,2 --verify
+
+Observability (DESIGN.md §13): ``--trace out.json`` records the full
+request/lane lifecycle and writes a Chrome-trace file (open it in
+https://ui.perfetto.dev or chrome://tracing); ``--snapshot`` prints the
+unified metrics snapshot after the run.
 """
 from __future__ import annotations
 
@@ -47,7 +52,19 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=N first")
     ap.add_argument("--explain-plan", action="store_true",
                     help="print the ShardPlan decision log and exit")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request-lifecycle + lane spans and export "
+                         "a Chrome-trace/Perfetto JSON file (DESIGN.md §13)")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="print the unified metrics snapshot after the run")
     args = ap.parse_args(argv)
+
+    tracer, metrics = None, None
+    if args.trace or args.snapshot:
+        from repro.obs import MetricsRegistry, Tracer
+        metrics = MetricsRegistry()
+        if args.trace:
+            tracer = Tracer()
 
     cfg = get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -69,7 +86,8 @@ def main(argv=None):
         from repro.serving import ContinuousBatchingServer
         eng = ContinuousBatchingServer(cfg, params, slots=4,
                                        chunk_steps=args.chunk_steps,
-                                       plan=plan)
+                                       plan=plan, tracer=tracer,
+                                       metrics=metrics)
         print(f"continuous batching: 4 slots, chunk_steps="
               f"{args.chunk_steps}, act_frac={eng.act_frac:.2f}")
         t0 = time.time()
@@ -84,8 +102,10 @@ def main(argv=None):
             ok = all(np.array_equal(out[r.rid], ref[r.rid]) for r in reqs)
             print(f"token-exact: {ok}")
             assert ok
+        _export_obs(args, eng, tracer)
         return out, stats
-    eng = HybridServeEngine(cfg, params, mode=args.mode, plan=plan)
+    eng = HybridServeEngine(cfg, params, mode=args.mode, plan=plan,
+                            tracer=tracer, metrics=metrics)
     print(f"engine: mode={args.mode} host ACT:KV ratio="
           f"{eng.alloc.act_blocks}:{eng.alloc.kv_blocks} (act_frac={eng.act_frac:.2f})")
     t0 = time.time()
@@ -103,7 +123,20 @@ def main(argv=None):
         ok = all(np.array_equal(out[r.rid], ref[r.rid]) for r in reqs)
         print(f"token-exact vs full-KV reference: {ok}")
         assert ok
+    _export_obs(args, eng, tracer)
     return out, stats
+
+
+def _export_obs(args, eng, tracer):
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"trace: {len(tracer.events())} events -> {args.trace} "
+              f"(open in https://ui.perfetto.dev)")
+    if args.snapshot:
+        snap = eng.snapshot()
+        print("metrics snapshot:")
+        for k in sorted(snap):
+            print(f"  {k} = {snap[k]}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,33 @@
+"""Unified serving telemetry (DESIGN.md §13).
+
+Three pieces, one import surface:
+
+  * :mod:`repro.obs.trace`   — request-lifecycle + lane tracer with
+    Chrome-trace/Perfetto export (``serve.py --trace out.json``);
+  * :mod:`repro.obs.metrics` — labeled counter/gauge/histogram registry
+    behind one ``snapshot()``, plus the view classes that keep the legacy
+    counter surfaces (``WeightStreamer.counters``, ``RecoveryStats``,
+    ``GenStats``) reading and writing through the registry;
+  * :mod:`repro.obs.drift`   — rolling sim-vs-measured lane residuals that
+    flag systematic ``simulate_steps`` model error before the controller's
+    damped refit silently absorbs it.
+
+Everything is host-side Python: enabling any of it adds ZERO device
+dispatches or host syncs (the invariance tests pin this).
+"""
+from .drift import DEFAULT_FLAG_REL, DRIFT_LANES, DriftMonitor
+from .metrics import (Counter, CounterDictView, DEFAULT_REGISTRY, Gauge,
+                      Histogram, MetricsRegistry, ScalarStatsView,
+                      fold_timeline_metrics, register_busy_fraction_collector)
+from .trace import (NULL_TRACER, PID_LANES, PID_REQUESTS, PID_SERVER,
+                    REQUEST_EVENTS, Tracer, assert_single_rooted,
+                    span_forest, validate_chrome_trace)
+
+__all__ = [
+    "Counter", "CounterDictView", "DEFAULT_FLAG_REL", "DEFAULT_REGISTRY",
+    "DRIFT_LANES", "DriftMonitor", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL_TRACER", "PID_LANES", "PID_REQUESTS", "PID_SERVER",
+    "REQUEST_EVENTS", "ScalarStatsView", "Tracer", "assert_single_rooted",
+    "fold_timeline_metrics", "register_busy_fraction_collector",
+    "span_forest", "validate_chrome_trace",
+]

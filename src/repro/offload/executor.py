@@ -62,12 +62,18 @@ class OffloadExecutor:
     def __init__(self, cfg: ModelConfig, params, *, prefetch_depth: int = 1,
                  timeline: Optional[MeasuredTimeline] = None, plan=None,
                  faults=None, watchdog_s: Optional[float] = None,
-                 max_copy_retries: int = 2):
+                 max_copy_retries: int = 2, tracer=None, metrics=None):
         assert M.family(cfg) == "uniform", \
             "offload executor drives uniform-family models"
         self.cfg = cfg
         self.is_moe = cfg.is_moe and cfg.moe_every == 1
         self.timeline = timeline if timeline is not None else MeasuredTimeline()
+        # obs plumbing (DESIGN.md §13): the tracer rides the shared timeline
+        # — every recorded lane span / robustness event mirrors onto the
+        # trace's lane tracks — and the registry backs the streamers' fault
+        # counters.  Both default off; neither adds dispatches or syncs.
+        if tracer is not None and self.timeline.tracer is None:
+            self.timeline.tracer = tracer
         self.plan = plan if (plan is not None and plan.mesh.size > 1) else None
         self.faults = faults
         self.pool = HostWeightPool(cfg, params, plan=self.plan)
@@ -75,13 +81,13 @@ class OffloadExecutor:
             self.streamer = ShardedWeightLanes(
                 self.pool, self.plan, prefetch_depth=prefetch_depth,
                 timeline=self.timeline, faults=faults, watchdog_s=watchdog_s,
-                max_retries=max_copy_retries)
+                max_retries=max_copy_retries, metrics=metrics)
             self.resident = self.plan.place_params(self.pool.resident)
         else:
             self.streamer = WeightStreamer(
                 self.pool, prefetch_depth=prefetch_depth,
                 timeline=self.timeline, faults=faults, watchdog_s=watchdog_s,
-                max_retries=max_copy_retries)
+                max_retries=max_copy_retries, metrics=metrics)
             self.resident = self.pool.resident
         self.dispatches = 0                     # jit calls (device round trips)
         # blocking host materialisation points (block_until_ready / D2H

@@ -51,9 +51,14 @@ from typing import Callable, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.obs.metrics import CounterDictView, MetricsRegistry
 from repro.offload.faults import FaultPlan, TransientCopyError
 from repro.offload.host_pool import HostWeightPool
 from repro.offload.timeline import MeasuredTimeline
+
+#: the streamer's robustness-counter ladder (DESIGN.md §12)
+FAULT_COUNTER_KEYS = ("watchdog_timeouts", "copy_retries", "copy_failures",
+                      "sync_fallbacks", "stalls_injected")
 
 
 def donate_buffers(tree) -> None:
@@ -94,7 +99,8 @@ class WeightStreamer:
                  timeline: Optional[MeasuredTimeline] = None,
                  device=None, shard: int = 0,
                  faults: Optional[FaultPlan] = None,
-                 watchdog_s: Optional[float] = None, max_retries: int = 2):
+                 watchdog_s: Optional[float] = None, max_retries: int = 2,
+                 metrics: Optional[MetricsRegistry] = None):
         assert prefetch_depth >= 0
         assert watchdog_s is None or watchdog_s > 0.0
         self.pool = pool
@@ -122,11 +128,17 @@ class WeightStreamer:
         self.bytes_uploaded = 0
         self.peak_resident = 0
         self.degraded = False     # lane health: False=healthy, True=degraded
-        # robustness counters (cumulative across passes; see lane_health)
-        self.counters: Dict[str, int] = {
-            "watchdog_timeouts": 0, "copy_retries": 0, "copy_failures": 0,
-            "sync_fallbacks": 0, "stalls_injected": 0,
-        }
+        # robustness counters (cumulative across passes; see lane_health).
+        # With a metrics registry the dict is a live VIEW over
+        # ``streamer_faults{key=...,shard=N}`` counters — same mapping
+        # surface, one counter source of truth (DESIGN.md §13); without one
+        # it stays the old plain dict.
+        if metrics is None:
+            self.counters: Dict[str, int] = {k: 0 for k in FAULT_COUNTER_KEYS}
+        else:
+            self.counters = CounterDictView(
+                metrics, "streamer_faults", labels={"shard": shard},
+                keys=FAULT_COUNTER_KEYS)
 
     # ----------------------------------------------------------------- stream
     def submit(self, fn: Callable[[], object]) -> Future:
@@ -346,7 +358,8 @@ class ShardedWeightLanes:
     def __init__(self, pool, plan, *, prefetch_depth: int = 1,
                  timeline: Optional[MeasuredTimeline] = None,
                  faults=None, watchdog_s: Optional[float] = None,
-                 max_retries: int = 2):
+                 max_retries: int = 2,
+                 metrics: Optional[MetricsRegistry] = None):
         self.plan = plan
         self.pool = pool
         self.devices = plan.lane_devices()
@@ -354,7 +367,7 @@ class ShardedWeightLanes:
             WeightStreamer(pool.lane_view(i), prefetch_depth=prefetch_depth,
                            timeline=timeline, device=dev, shard=i,
                            faults=faults, watchdog_s=watchdog_s,
-                           max_retries=max_retries)
+                           max_retries=max_retries, metrics=metrics)
             for i, dev in enumerate(self.devices)
         ]
         # global leaf shapes/specs for assembly (uniform across layers)

@@ -76,10 +76,15 @@ class MeasuredTimeline:
         results = tl.results()          # List[TimelineResult], one per step
     """
 
-    def __init__(self):
+    def __init__(self, tracer=None):
         self._lock = threading.Lock()
         self._steps: List[_Step] = []
         self._cur: Optional[_Step] = None
+        # optional obs bridge (repro.obs.trace.Tracer): every recorded span
+        # / robustness event is mirrored onto the tracer's lane tracks, so
+        # the offload runtime needs no second instrumentation layer.  None
+        # (the default) keeps recording exactly as before.
+        self.tracer = tracer
 
     # ------------------------------------------------------------------ steps
     def begin_step(self, tag: str = "decode",
@@ -108,6 +113,9 @@ class MeasuredTimeline:
             if self._cur is None:           # span outside any step: open one
                 self._cur = _Step(tag="untagged", start=start)
             self._cur.spans.append(Span(lane, tag, start, end, nbytes, shard))
+        if self.tracer is not None:
+            self.tracer.lane_span(lane, tag, start, end, nbytes=nbytes,
+                                  shard=shard)
 
     def record_event(self, name: str, n: int = 1) -> None:
         """Count a robustness event (watchdog timeout, copy retry, lane
@@ -119,6 +127,8 @@ class MeasuredTimeline:
             if self._cur is None:
                 self._cur = _Step(tag="untagged", start=time.perf_counter())
             self._cur.events[name] = self._cur.events.get(name, 0) + n
+        if self.tracer is not None:
+            self.tracer.lane_event(name)
 
     @contextmanager
     def task(self, lane: str, tag: str, nbytes: int = 0):

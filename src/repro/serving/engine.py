@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -46,22 +45,35 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, TimelineResult, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
+from repro.obs import (DriftMonitor, NULL_TRACER, ScalarStatsView,
+                       fold_timeline_metrics,
+                       register_busy_fraction_collector)
 from repro.serving.recovery import CapacityError
 from repro.serving.util import bucket, pack_group, trace_ctx
 from repro.sharding import ShardPlan
 
 
-@dataclass
-class GenStats:
-    generated_tokens: int = 0
-    steps: int = 0
-    sim_time: float = 0.0
-    sim_gpu_busy: float = 0.0
-    device_calls: int = 0          # jit dispatches (host<->device round trips)
-    traffic: Dict[str, float] = field(default_factory=dict)
-    # measured (offload runtime ground truth; zero on the device-resident path)
-    measured_time: float = 0.0
-    measured_gpu_busy: float = 0.0
+class GenStats(ScalarStatsView):
+    """Per-call generation stats.  Same attribute surface as the original
+    dataclass; constructed with a ``MetricsRegistry`` the scalar fields
+    become live views over ``gen_*`` counters (DESIGN.md §13) — each view
+    reads zero at construction while the registry keeps engine-lifetime
+    totals — and without one they are plain attributes, as before."""
+
+    _FIELDS = {
+        "generated_tokens": 0,
+        "steps": 0,
+        "sim_time": 0.0,
+        "sim_gpu_busy": 0.0,
+        "device_calls": 0,     # jit dispatches (host<->device round trips)
+        # measured (offload runtime ground truth; zero device-resident)
+        "measured_time": 0.0,
+        "measured_gpu_busy": 0.0,
+    }
+
+    def __init__(self, registry=None):
+        super().__init__(registry, prefix="gen")
+        self.traffic: Dict[str, float] = {}
 
     @property
     def sim_throughput(self) -> float:
@@ -86,7 +98,8 @@ class HybridServeEngine:
                  adaptive: bool = False,
                  faults=None, watchdog_s: Optional[float] = None,
                  ctl: Optional[ControllerConfig] = None,
-                 plan: Optional[ShardPlan] = None):
+                 plan: Optional[ShardPlan] = None,
+                 tracer=None, metrics=None):
         """generalized=True uses the byte-ratio-aware Algorithm-1 variant
         (DESIGN.md §7) — recommended for GQA models; False reproduces the
         paper's policy exactly.
@@ -128,6 +141,17 @@ class HybridServeEngine:
         self.offload = offload
         self.budget = budget if budget is not None else offload_budget(cfg)
 
+        # observability (DESIGN.md §13) — all host-side, zero dispatches:
+        # the tracer records request/lane lifecycle (NULL_TRACER = off, the
+        # default), the registry absorbs the scattered counters, and the
+        # drift monitor accumulates sim-vs-measured lane residuals
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self.drift = DriftMonitor(registry=metrics)
+        if metrics is not None:
+            register_busy_fraction_collector(metrics)
+            metrics.register_collector(self._collect_metrics)
+
         self.fits = profile_cost_fns(cfg, hw)
         self.alloc = host_block_allocation(cfg, hw, device_act_blocks(cfg, hw),
                                            generalized=generalized)
@@ -147,7 +171,8 @@ class HybridServeEngine:
             self.controller = HybridCacheController(
                 cfg, hw, self.alloc, device_act_blocks(cfg, hw),
                 fits=self.fits, generalized=generalized,
-                ctl=ctl if ctl is not None else ControllerConfig())
+                ctl=ctl if ctl is not None else ControllerConfig(),
+                drift=self.drift)
 
         # device KV pool: generous when device-resident; budget-derived under
         # offload so tight (reduced) budgets force real spill to the host arena
@@ -170,7 +195,8 @@ class HybridServeEngine:
             from repro.offload import OffloadExecutor, make_spill_pool
             self.executor = OffloadExecutor(
                 cfg, params, prefetch_depth=self.budget.prefetch_depth,
-                plan=plan, faults=faults, watchdog_s=watchdog_s)
+                plan=plan, faults=faults, watchdog_s=watchdog_s,
+                tracer=tracer, metrics=metrics)
             self.spill_kv_pool = make_spill_pool(
                 cfg, max_requests=max_minibatch, kv_cap=kv_cap,
                 shards=shards)
@@ -258,8 +284,37 @@ class HybridServeEngine:
                 groups.append(batch_reqs[i: i + self.max_minibatch])
         return groups
 
+    def snapshot(self) -> Dict[str, object]:
+        """One-call observability read (DESIGN.md §13): the metrics
+        registry's snapshot — collectors run, so occupancy / busy-fraction /
+        drift gauges are freshly derived — plus the drift monitor's full
+        summary.  Works without a registry too (drift summary only)."""
+        out: Dict[str, object] = (self.metrics.snapshot()
+                                  if self.metrics is not None else {})
+        out["predictor_drift"] = self.drift.summary()
+        return out
+
+    def _collect_metrics(self, reg) -> None:
+        """Pull-style collector: occupancy-by-tag, retags, and controller
+        state read at snapshot() time, never maintained on the hot path."""
+        for (kind, loc), pool in self.blockman.pools.items():
+            labels = dict(kind=kind.value, tier=loc.value)
+            reg.gauge("blocks_capacity", **labels).set(pool.capacity)
+            reg.gauge("blocks_allocated", **labels).set(pool.allocated)
+        for (loc, src, dst), n in self.blockman.retags.items():
+            reg.counter("retagged_blocks", tier=loc.value, src=src.value,
+                        dst=dst.value).set(n)
+        reg.counter("arena_denials").set(self.arena_denials)
+        reg.gauge("act_fraction").set(self.act_frac)
+        if self.controller is not None:
+            reg.gauge("controller_updates").set(self.controller.updates)
+            reg.gauge("controller_migrated_blocks").set(
+                self.controller.migrated_blocks)
+            reg.gauge("controller_faulted_skipped").set(
+                self.controller.faulted_skipped)
+
     def generate(self, requests: List[Request]) -> Tuple[Dict[int, np.ndarray], GenStats]:
-        stats = GenStats()
+        stats = GenStats(self.metrics)
         outputs: Dict[int, np.ndarray] = {}
         for group in self.plan_groups(requests):
             out, st = self._run_group(group)
@@ -324,26 +379,30 @@ class HybridServeEngine:
         cfg = self.cfg
         stats = GenStats()
         B = len(group)
+        for r in group:
+            self.tracer.request_begin(r.rid, prompt_tokens=len(r.prompt),
+                                      max_new=r.max_new_tokens)
         # batched prefill: pad every request to the group bucket (causality
         # keeps positions < pb identical to the per-request prefill); the
         # shared packer fails loudly on region overflow
         toks, kv_keep, pbs = pack_group(group, self.act_frac, self.kv_cap,
                                         self.act_cap, mode=self.mode)
-        if self.executor is not None:
-            # layer-streamed prefill: weights arrive over the copy stream,
-            # the full parameter set is never device-resident
-            d0 = self.executor.dispatches
-            cur, cache = self.executor.prefill_batched(
-                toks, kv_keep, np.asarray(pbs, np.int32),
-                kv_cap=self.kv_cap, act_cap=self.act_cap)
-            stats.device_calls += self.executor.dispatches - d0
-        else:
-            with trace_ctx(self.plan):
-                cur, cache = self._prefill_batch_jit(
-                    self.params, jnp.asarray(toks), jnp.asarray(kv_keep),
-                    jnp.asarray(np.asarray(pbs, np.int32)),
+        with self.tracer.server_span("prefill", batch=B):
+            if self.executor is not None:
+                # layer-streamed prefill: weights arrive over the copy
+                # stream, the full parameter set is never device-resident
+                d0 = self.executor.dispatches
+                cur, cache = self.executor.prefill_batched(
+                    toks, kv_keep, np.asarray(pbs, np.int32),
                     kv_cap=self.kv_cap, act_cap=self.act_cap)
-            stats.device_calls += 1
+                stats.device_calls += self.executor.dispatches - d0
+            else:
+                with trace_ctx(self.plan):
+                    cur, cache = self._prefill_batch_jit(
+                        self.params, jnp.asarray(toks), jnp.asarray(kv_keep),
+                        jnp.asarray(np.asarray(pbs, np.int32)),
+                        kv_cap=self.kv_cap, act_cap=self.act_cap)
+                stats.device_calls += 1
 
         # all block accounting under try/finally: a fail-loud raise below must
         # not leak the group's rids/blocks and poison the engine for retries
@@ -404,22 +463,25 @@ class HybridServeEngine:
                                               Location.DEVICE)
 
             if max_new:
-                if self.executor is not None:
-                    d0 = self.executor.dispatches
-                    gen, _ = self.executor.decode_loop(
-                        cur, cache, sched.T, spill_region=region)
-                    stats.device_calls += self.executor.dispatches - d0
-                    measured = self.executor.drain_timeline("decode")
-                    self.measured_steps += measured
-                    stats.measured_time += sum(m.total for m in measured)
-                    stats.measured_gpu_busy += sum(m.gpu_busy
-                                                   for m in measured)
-                else:
-                    with trace_ctx(self.plan):
-                        gen_dev, _ = self._decode_loop_jit(
-                            self.params, cur, cache, jnp.asarray(sched.T))
-                    gen = np.asarray(gen_dev, np.int32)
-                    stats.device_calls += 1
+                with self.tracer.server_span("decode", batch=B,
+                                             steps=max_new):
+                    if self.executor is not None:
+                        d0 = self.executor.dispatches
+                        gen, _ = self.executor.decode_loop(
+                            cur, cache, sched.T, spill_region=region)
+                        stats.device_calls += self.executor.dispatches - d0
+                        measured = self.executor.drain_timeline("decode")
+                        self.measured_steps += measured
+                        stats.measured_time += sum(m.total for m in measured)
+                        stats.measured_gpu_busy += sum(m.gpu_busy
+                                                       for m in measured)
+                    else:
+                        with trace_ctx(self.plan):
+                            gen_dev, _ = self._decode_loop_jit(
+                                self.params, cur, cache,
+                                jnp.asarray(sched.T))
+                        gen = np.asarray(gen_dev, np.int32)
+                        stats.device_calls += 1
             else:
                 gen = np.zeros((B, 0), np.int32)
             stats.steps += max_new
@@ -468,6 +530,11 @@ class HybridServeEngine:
                 stats.sim_gpu_busy += res.gpu_busy
                 for k, v in res.traffic.items():
                     stats.traffic[k] = stats.traffic.get(k, 0.0) + v
+            if self.metrics is not None:
+                fold_timeline_metrics(self.metrics, sim_results,
+                                      source="sim")
+                fold_timeline_metrics(self.metrics, measured,
+                                      source="measured")
             if self.controller is not None:
                 # controller food: measured lane times where they exist
                 # (offload runtime), the simulated prediction otherwise,
@@ -475,11 +542,21 @@ class HybridServeEngine:
                 self._last_obs = (measured if self.executor is not None
                                   else sim_results, sim_results,
                                   kv_tok.tolist(), act_tok.tolist())
+            elif self.executor is not None:
+                # no controller to route through: feed the drift monitor
+                # its (measured, predicted) pairs directly
+                self.drift.observe_steps(measured, sim_results)
 
             out = {}
             for bi, r in enumerate(group):
                 out[r.rid] = gen[bi, : r.max_new_tokens]
+                self.tracer.request_end(
+                    r.rid, "complete", tokens=int(len(out[r.rid])))
             return out, stats
+        except BaseException:
+            for r in group:
+                self.tracer.request_end(r.rid, "fail")
+            raise
         finally:
             if region is not None:
                 region.free()               # staging arena is reused per group

@@ -34,6 +34,7 @@ from repro.configs.base import ModelConfig
 from repro.core import BLOCK_TOKENS
 from repro.core import costmodel as cm
 from repro.data.pipeline import Request
+from repro.obs.metrics import ScalarStatsView
 
 
 class CapacityError(RuntimeError):
@@ -112,28 +113,32 @@ class ParkedRequest:
         return padded + len(self.generated)
 
 
-@dataclass
-class RecoveryStats:
-    """Preemption / degraded-mode counters, surfaced on the server."""
-    preemptions: int = 0
-    preempt_to_act: int = 0               # victims demoted KV -> ACT
-    preempt_to_tokens: int = 0            # victims dropped to token IDs
-    demoted_blocks: int = 0
-    dropped_blocks: int = 0
-    resumes: int = 0
-    resume_from_act: int = 0
-    resume_from_tokens: int = 0
-    sched_clamps: int = 0                 # store flags flipped off a full region
-    parked_degraded: int = 0              # parked ACT holdings dropped to tokens
-    resume_cost_s: float = 0.0            # simulated seconds spent on resumes
-    parked_peak: int = 0
+class RecoveryStats(ScalarStatsView):
+    """Preemption / degraded-mode counters, surfaced on the server.
 
-    def as_dict(self) -> dict:
-        return {k: getattr(self, k) for k in (
-            "preemptions", "preempt_to_act", "preempt_to_tokens",
-            "demoted_blocks", "dropped_blocks", "resumes",
-            "resume_from_act", "resume_from_tokens", "sched_clamps",
-            "parked_degraded", "resume_cost_s", "parked_peak")}
+    Same attribute surface as the original dataclass; constructed with a
+    ``MetricsRegistry`` the fields become live views over ``recovery_*``
+    counters (DESIGN.md §13) — one counter source of truth shared with
+    ``MetricsRegistry.snapshot()`` — and without one they are plain
+    attributes, exactly as before."""
+
+    _FIELDS = {
+        "preemptions": 0,
+        "preempt_to_act": 0,              # victims demoted KV -> ACT
+        "preempt_to_tokens": 0,           # victims dropped to token IDs
+        "demoted_blocks": 0,
+        "dropped_blocks": 0,
+        "resumes": 0,
+        "resume_from_act": 0,
+        "resume_from_tokens": 0,
+        "sched_clamps": 0,                # store flags flipped off a full region
+        "parked_degraded": 0,             # parked ACT holdings dropped to tokens
+        "resume_cost_s": 0.0,             # simulated seconds spent on resumes
+        "parked_peak": 0,
+    }
+
+    def __init__(self, registry=None):
+        super().__init__(registry, prefix="recovery")
 
 
 def blocks_for_tokens(t0: int, t1: int) -> int:

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from contextlib import ExitStack
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -53,6 +54,8 @@ from repro.core import costmodel as cm
 from repro.core.pipeline import MiniBatchSpec, simulate_steps
 from repro.data.pipeline import Request
 from repro.models import model as M
+from repro.obs import (DriftMonitor, NULL_TRACER, fold_timeline_metrics,
+                       register_busy_fraction_collector)
 from repro.serving.recovery import (CapacityError, ParkedRequest,
                                     RecoveryConfig, RecoveryStats,
                                     blocks_for_tokens, resume_cost)
@@ -119,7 +122,8 @@ class ContinuousBatchingServer:
                  host_kv_blocks: Optional[int] = None,
                  host_act_blocks: Optional[int] = None,
                  dev_kv_blocks: Optional[int] = None,
-                 dev_act_blocks: Optional[int] = None):
+                 dev_act_blocks: Optional[int] = None,
+                 tracer=None, metrics=None):
         """chunk_steps: decode iterations per jitted dispatch.  1 reproduces
         the classic step server (admission every iteration); S>1 runs S
         masked steps per dispatch, admitting/retiring only at chunk
@@ -173,6 +177,14 @@ class ContinuousBatchingServer:
         self.cfg, self.params, self.hw = cfg, params, hw
         self.n_slots, self.kv_cap, self.act_cap = slots, kv_cap, act_cap
         self.chunk_steps = max(int(chunk_steps), 1)
+        # observability (DESIGN.md §13) — host-side only; the dispatch- and
+        # sync-count invariants below hold bit-identical with tracing on
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self.drift = DriftMonitor(registry=metrics)
+        if metrics is not None:
+            register_busy_fraction_collector(metrics)
+            metrics.register_collector(self._collect_metrics)
         self.alloc = host_block_allocation(
             cfg, hw, device_act_blocks(cfg, hw), generalized=generalized)
         self.act_frac = self.alloc.act_fraction
@@ -182,7 +194,7 @@ class ContinuousBatchingServer:
                 cfg, hw, self.alloc, device_act_blocks(cfg, hw),
                 generalized=generalized,
                 ctl=ctl if ctl is not None else
-                ControllerConfig(update_every=4))
+                ControllerConfig(update_every=4), drift=self.drift)
         # physical block accounting, replayed per chunk from the precomputed
         # store schedule (the engine's pattern, DESIGN.md §5): host pools in
         # the Algorithm-1 split, device pools as the engine sizes them
@@ -200,7 +212,7 @@ class ContinuousBatchingServer:
         # pressure recovery (DESIGN.md §12): parked re-admission queue +
         # counters; profiled fits price resume costs in sim_time units
         self.recovery = recovery if recovery is not None else RecoveryConfig()
-        self.recovery_stats = RecoveryStats()
+        self.recovery_stats = RecoveryStats(metrics)
         self.parked: List[ParkedRequest] = []
         self.fits = cm.profile_cost_fns(cfg, hw)
         # offload mode: per-iteration timelines drained out of the executor
@@ -220,7 +232,8 @@ class ContinuousBatchingServer:
             self.executor = OffloadExecutor(cfg, params,
                                             prefetch_depth=prefetch_depth,
                                             plan=plan, faults=faults,
-                                            watchdog_s=watchdog_s)
+                                            watchdog_s=watchdog_s,
+                                            tracer=tracer, metrics=metrics)
         else:
             # cache donated: the slot pools update in place every chunk
             self._decode_chunk_jit = functools.partial(
@@ -240,6 +253,35 @@ class ContinuousBatchingServer:
         if self.executor is None:
             return []
         return self._measured + self.executor.timeline.results("decode")
+
+    def snapshot(self) -> Dict[str, object]:
+        """One-call observability read (DESIGN.md §13): TTFT/TBT
+        percentiles, lane busy fractions, fault/recovery counters, block
+        occupancy, and per-lane predictor drift — the registry snapshot
+        with collectors run, plus the drift monitor's full summary."""
+        out: Dict[str, object] = (self.metrics.snapshot()
+                                  if self.metrics is not None else {})
+        out["predictor_drift"] = self.drift.summary()
+        return out
+
+    def _collect_metrics(self, reg) -> None:
+        """Pull-style collector: occupancy-by-tag, retags, parked depth and
+        controller state read at snapshot() time, never on the hot path."""
+        for (kind, loc), pool in self.blockman.pools.items():
+            labels = dict(kind=kind.value, tier=loc.value)
+            reg.gauge("blocks_capacity", **labels).set(pool.capacity)
+            reg.gauge("blocks_allocated", **labels).set(pool.allocated)
+        for (loc, src, dst), n in self.blockman.retags.items():
+            reg.counter("retagged_blocks", tier=loc.value, src=src.value,
+                        dst=dst.value).set(n)
+        reg.gauge("parked_requests").set(len(self.parked))
+        reg.gauge("act_fraction").set(self.act_frac)
+        if self.controller is not None:
+            reg.gauge("controller_updates").set(self.controller.updates)
+            reg.gauge("controller_migrated_blocks").set(
+                self.controller.migrated_blocks)
+            reg.gauge("controller_faulted_skipped").set(
+                self.controller.faulted_skipped)
 
     def close(self) -> None:
         """Shut down the offload executor (no-op in device-resident mode).
@@ -354,9 +396,15 @@ class ContinuousBatchingServer:
         rstats = self.recovery_stats
         for i, r, pk in assignments:
             if pk is None:
+                # fresh admission opens the request's root trace span; a
+                # resume re-enters the root its first admission opened
+                self.tracer.request_begin(r.rid, prompt_tokens=len(r.prompt),
+                                          max_new=r.max_new_tokens)
                 reqs.append(r)
                 lens.append(-1)   # fresh: the padded bucket IS the prompt
                 continue
+            self.tracer.request_event(r.rid, "resume", mode=pk.mode,
+                                      generated=len(pk.generated))
             # release the parked holdings (the demoted ACT checkpoints this
             # resume regenerates from), then re-prefill over the prefix
             if pk.mode == "act":
@@ -402,11 +450,18 @@ class ContinuousBatchingServer:
                                                           0)),
                                  min(self.kv_cap, tl))
         slot_idx = np.asarray([i for i, _, _ in assignments], np.int32)
-        with trace_ctx(self.plan):
-            cur, self.cache = self._admit_jit(
-                self.params, jnp.asarray(toks), jnp.asarray(kv_keep),
-                jnp.asarray(np.asarray(lens, np.int32)), jnp.asarray(slot_idx),
-                self.cache, kv_cap=self.kv_cap, act_cap=self.act_cap)
+        with ExitStack() as tspans:
+            tspans.enter_context(self.tracer.server_span("admit", batch=k))
+            for j, (_, _, pk) in enumerate(assignments):
+                tspans.enter_context(self.tracer.request_span(
+                    reqs[j].rid,
+                    "resume_prefill" if pk is not None else "prefill"))
+            with trace_ctx(self.plan):
+                cur, self.cache = self._admit_jit(
+                    self.params, jnp.asarray(toks), jnp.asarray(kv_keep),
+                    jnp.asarray(np.asarray(lens, np.int32)),
+                    jnp.asarray(slot_idx),
+                    self.cache, kv_cap=self.kv_cap, act_cap=self.act_cap)
         stats.device_calls += 1
         stats.admission_batches += 1
         stats.admitted += k
@@ -470,6 +525,7 @@ class ContinuousBatchingServer:
             st = self.slots[i]
             if st.active:
                 self.blockman.free_request(st.rid)
+                self.tracer.request_end(st.rid, "fail")
             self.slots[i] = SlotState()
 
     # ----------------------------------------------- pressure recovery (§12)
@@ -481,6 +537,7 @@ class ContinuousBatchingServer:
         for pk in self.parked:
             if pk.mode == "act":
                 self.blockman.free_request(pk.rid)
+            self.tracer.request_end(pk.rid, "fail")
             rids.append(pk.rid)
         self.parked.clear()
         return rids
@@ -520,9 +577,12 @@ class ContinuousBatchingServer:
         else:
             rstats.preempt_to_act += 1
         rstats.preemptions += 1
+        self.tracer.request_event(st.rid, "preempt", mode=mode,
+                                  generated=len(st.generated))
         self.parked.append(ParkedRequest(
             request=st.request, generated=list(st.generated), mode=mode,
             preempts=st.preempts + 1))
+        self.tracer.request_event(st.rid, "park", depth=len(self.parked))
         rstats.parked_peak = max(rstats.parked_peak, len(self.parked))
         active[:, v] = False
         sched_t[:, v] = False
@@ -668,23 +728,32 @@ class ContinuousBatchingServer:
         kv_bound = min(self.kv_cap, bucket(int(kt0.max()) + n_steps))
         act_bound = min(self.act_cap, bucket(int(at0.max()) + n_steps))
 
-        if self.executor is not None:
-            # the layer-streamed loop blocks per layer by design: report its
-            # real dispatch and sync counts, not one-per-chunk
-            d0, b0 = self.executor.dispatches, self.executor.blocking_syncs
-            toks, cur, self.cache = self.executor.decode_chunk(
-                jnp.asarray(self._cur_tok), self.cache, sched_t, active,
-                kv_bound=kv_bound, act_bound=act_bound)
-            stats.device_calls += self.executor.dispatches - d0
-            stats.host_syncs += self.executor.blocking_syncs - b0
-        else:
-            with trace_ctx(self.plan):
-                toks, cur, self.cache = self._decode_chunk_jit(
-                    self.params, jnp.asarray(self._cur_tok), self.cache,
-                    jnp.asarray(sched_t), jnp.asarray(active),
+        with ExitStack() as tspans:
+            tspans.enter_context(self.tracer.server_span(
+                "chunk", steps=n_steps, idx=stats.chunks))
+            for i, st in enumerate(self.slots):
+                if st.active and active[:, i].any():
+                    tspans.enter_context(self.tracer.request_span(
+                        st.rid, "decode", chunk=stats.chunks,
+                        steps=int(active[:, i].sum())))
+            if self.executor is not None:
+                # the layer-streamed loop blocks per layer by design: report
+                # its real dispatch and sync counts, not one-per-chunk
+                d0, b0 = (self.executor.dispatches,
+                          self.executor.blocking_syncs)
+                toks, cur, self.cache = self.executor.decode_chunk(
+                    jnp.asarray(self._cur_tok), self.cache, sched_t, active,
                     kv_bound=kv_bound, act_bound=act_bound)
-            stats.device_calls += 1
-            stats.host_syncs += 1      # the chunk's ONE blocking readback
+                stats.device_calls += self.executor.dispatches - d0
+                stats.host_syncs += self.executor.blocking_syncs - b0
+            else:
+                with trace_ctx(self.plan):
+                    toks, cur, self.cache = self._decode_chunk_jit(
+                        self.params, jnp.asarray(self._cur_tok), self.cache,
+                        jnp.asarray(sched_t), jnp.asarray(active),
+                        kv_bound=kv_bound, act_bound=act_bound)
+                stats.device_calls += 1
+                stats.host_syncs += 1  # the chunk's ONE blocking readback
         toks_np = np.asarray(toks, np.int32)
         self._cur_tok = np.array(cur, np.int32)     # writable host copy
         stats.chunks += 1
@@ -733,11 +802,20 @@ class ContinuousBatchingServer:
                             hint="grow the host pools or lower concurrency")
                     if st.rid not in stats.ttft:
                         stats.ttft[st.rid] = stats.sim_time
+                        if self.metrics is not None:
+                            self.metrics.histogram("ttft_s").observe(
+                                stats.ttft[st.rid])
                     if st.remaining == 0:
                         out[st.rid] = np.asarray(st.generated, np.int32)
                         stats.tbt[st.rid] = stats.sim_time / max(
                             len(st.generated), 1)
                         stats.completed_at[st.rid] = step_idx + s
+                        if self.metrics is not None:
+                            self.metrics.histogram("tbt_s").observe(
+                                stats.tbt[st.rid])
+                        self.tracer.request_end(
+                            st.rid, "complete", tokens=len(st.generated),
+                            step=step_idx + s)
                         self.blockman.free_request(st.rid)
                         # free the slot (cache rows overwritten on admit)
                         self.slots[i] = SlotState()
@@ -753,6 +831,12 @@ class ContinuousBatchingServer:
             meas = self.executor.drain_timeline("decode")
             self._measured.extend(meas)
             stats.measured_time += sum(m.total for m in meas)
+        if self.metrics is not None:
+            fold_timeline_metrics(self.metrics, sim_results, source="sim")
+            fold_timeline_metrics(self.metrics, meas, source="measured")
+            self.metrics.counter("serve_generated_tokens").inc(
+                int(active.sum()))
+            self.metrics.counter("serve_chunks").inc()
         if self.controller is not None:
             # per-chunk timeline batch: measured iteration timelines where
             # they exist (offload), the simulated predictions otherwise —
@@ -760,6 +844,10 @@ class ContinuousBatchingServer:
             self.controller.observe(meas if meas else sim_results,
                                     kv_tok, act_tok, sim=sim_results)
             self._apply_alloc(self.controller.update())
+        elif self.executor is not None:
+            # no controller to route through: feed the drift monitor its
+            # (measured, predicted) pairs directly
+            self.drift.observe_steps(meas, sim_results)
 
     # ---------------------------------------------------------------- serving
     def run(self, requests: List[Request],

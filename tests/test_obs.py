@@ -1,0 +1,344 @@
+"""Unified serving telemetry (DESIGN.md §13): registry, tracer, drift.
+
+Four layers of guarantees:
+
+  * UNIT — the metrics registry (counters/gauges/histograms + labeled
+    snapshot), the legacy-surface views (``WeightStreamer.counters``,
+    ``RecoveryStats``/``GenStats``), the drift monitor's residual algebra
+    (identity/faulted skips, relative drift, flag threshold), and the
+    tracer's Chrome-trace schema on a synthetic lifecycle;
+  * INVARIANCE — tracing + metrics enabled changes NOTHING the PR 4/5
+    guards pin: tokens bit-identical, dispatch/sync/admission counts
+    equal to the untraced run (the named CI fast-lane smoke);
+  * LIFECYCLE — a request's span tree stays complete and single-rooted
+    across preemption/park/resume, and on a 1x2 mesh where lane timelines
+    aggregate across shards;
+  * SNAPSHOT — one ``snapshot()`` reports TTFT/TBT percentiles, per-lane
+    busy fractions, recovery counters, and per-lane predictor drift.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import request_trace
+from repro.data.pipeline import Request, _zipf, open_loop_trace
+from repro.models import model as M
+from repro.obs import (DriftMonitor, MetricsRegistry, NULL_TRACER, Tracer,
+                       assert_single_rooted, fold_timeline_metrics,
+                       register_busy_fraction_collector, span_forest,
+                       validate_chrome_trace)
+from repro.obs.metrics import CounterDictView, ScalarStatsView
+from repro.serving import HybridServeEngine, RecoveryConfig, \
+    exact_reference_generate
+from repro.serving.scheduler import ContinuousBatchingServer
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs, arrivals = open_loop_trace(cfg.vocab_size, 4, seed=11)
+    ref = exact_reference_generate(cfg, params, reqs)
+    return cfg, params, reqs, arrivals, ref
+
+
+# =============================================================================
+# registry + views
+# =============================================================================
+
+def test_registry_counters_gauges_histograms():
+    reg = MetricsRegistry()
+    reg.counter("reqs").inc()
+    reg.counter("reqs").inc(2)
+    reg.counter("faults", kind="stall").inc()
+    reg.gauge("depth").set(3.5)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.histogram("lat_s").observe(v)
+    snap = reg.snapshot()
+    assert snap["reqs"] == 3                      # integral counter -> int
+    assert snap["faults{kind=stall}"] == 1
+    assert snap["depth"] == 3.5
+    h = snap["lat_s"]
+    assert h["count"] == 4 and h["mean"] == 2.5
+    assert h["p50"] <= h["p90"] <= h["p99"]
+    # same labels in any kwarg order -> same instrument
+    assert reg.counter("x", a="1", b="2") is reg.counter("x", b="2", a="1")
+
+
+def test_registry_collectors_run_at_snapshot():
+    reg = MetricsRegistry()
+    reg.register_collector(lambda r: r.gauge("derived").set(7.0))
+    assert reg.snapshot()["derived"] == 7.0
+
+
+def test_counter_dict_view_preserves_dict_surface():
+    reg = MetricsRegistry()
+    d = CounterDictView(reg, "streamer_faults", labels={"shard": 0},
+                        keys=("copy_retries", "stalls_injected"))
+    assert d["copy_retries"] == 0
+    d["copy_retries"] += 2
+    d["stalls_injected"] = 1
+    assert dict(d) == {"copy_retries": 2, "stalls_injected": 1}
+    assert len(d) == 2 and "copy_retries" in d
+    snap = reg.snapshot()
+    assert snap["streamer_faults{key=copy_retries,shard=0}"] == 2
+
+
+def test_scalar_stats_view_bound_and_unbound():
+    class S(ScalarStatsView):
+        _FIELDS = {"steps": 0, "time_s": 0.0}
+
+        def __init__(self, registry=None):
+            super().__init__(registry, prefix="t")
+
+    free = S()                                    # registry-less: plain attrs
+    free.steps += 4
+    assert free.steps == 4 and free.as_dict()["time_s"] == 0.0
+    reg = MetricsRegistry()
+    bound = S(reg)
+    bound.steps += 2
+    bound.time_s += 0.5
+    assert bound.steps == 2                       # int-typed field stays int
+    assert isinstance(bound.steps, int)
+    assert reg.snapshot()["t_steps"] == 2
+    assert reg.snapshot()["t_time_s"] == 0.5
+
+
+# =============================================================================
+# drift monitor
+# =============================================================================
+
+class _Res:
+    def __init__(self, total, pcie, gpu, st=0.0, faulted=False):
+        self.total, self.pcie_busy, self.gpu_busy = total, pcie, gpu
+        self.tag_busy = {"st": st}
+        self.faulted = faulted
+
+
+def test_drift_skips_identity_and_faulted_pairs():
+    d = DriftMonitor()
+    r = _Res(1.0, 0.5, 0.4)
+    assert not d.observe(r, r)                    # device-resident path
+    assert d.skipped_identity == 1
+    assert not d.observe(_Res(1.0, 0.5, 0.4, faulted=True),
+                         _Res(1.0, 0.5, 0.4))
+    assert d.skipped_faulted == 1
+    assert d.samples == 0
+    assert d.drift("pcie") == 0.0                 # empty window -> 0
+
+
+def test_drift_relative_and_flagging():
+    d = DriftMonitor(min_samples=4, flag_rel=0.25)
+    for _ in range(4):                            # measured pcie 50% slower
+        d.observe(_Res(1.5, 1.5, 0.1), _Res(1.0, 1.0, 0.1))
+    assert d.drift("pcie") == pytest.approx(0.5)
+    assert d.drift("gpu") == pytest.approx(0.0)
+    assert d.drift_abs("pcie") == pytest.approx(0.5)
+    assert "pcie" in d.drifting() and "gpu" not in d.drifting()
+    s = d.summary()
+    assert s["samples"] == 4 and "total" in s["rel"]
+    # registry export
+    reg = MetricsRegistry()
+    d2 = DriftMonitor(min_samples=2, registry=reg)
+    d2.observe_steps([_Res(2.0, 1.0, 0.5)] * 2, [_Res(1.0, 1.0, 0.5)] * 2)
+    snap = reg.snapshot()
+    assert snap["predictor_drift_rel{lane=total}"] == pytest.approx(1.0)
+    assert snap["predictor_drift_samples"] == 2.0
+
+
+def test_fold_timeline_metrics_and_busy_fractions():
+    reg = MetricsRegistry()
+    register_busy_fraction_collector(reg)
+    register_busy_fraction_collector(reg)         # idempotent
+    res = _Res(2.0, 1.0, 0.5, st=0.25)
+    res.traffic = {"weights": 100.0}
+    res.events = {"watchdog": 1}
+    fold_timeline_metrics(reg, [res], source="measured")
+    snap = reg.snapshot()
+    assert snap["lane_busy_s{lane=pcie,source=measured}"] == 1.0
+    assert snap["lane_busy_frac{lane=pcie,source=measured}"] == 0.5
+    assert snap["lane_busy_frac{lane=pcie_up,source=measured}"] == 0.125
+    assert snap["traffic_bytes{cat=weights,source=measured}"] == 100
+    assert snap["timeline_events{event=watchdog}"] == 1
+
+
+# =============================================================================
+# tracer schema + zero-overhead disabled path
+# =============================================================================
+
+def test_null_tracer_records_nothing():
+    t = NULL_TRACER
+    t.request_begin(0)
+    with t.request_span(0, "decode"):
+        with t.server_span("chunk"):
+            pass
+    t.lane_span("pcie", "w", 0.0, 1.0)
+    t.request_end(0, "complete")
+    assert t.events() == []
+    assert all(e["ph"] == "M" for e in t.to_chrome()["traceEvents"])
+
+
+def test_tracer_lifecycle_roundtrip(tmp_path):
+    clk = iter(range(100))
+    t = Tracer(clock=lambda: float(next(clk)))
+    t.request_begin(7, prompt_tokens=8)
+    t.request_begin(7)                            # idempotent re-open
+    with t.request_span(7, "prefill"):
+        pass
+    t.request_event(7, "preempt", mode="act")
+    t.lane_span("pcie", "w", 0.5, 1.5, nbytes=64, shard=1)
+    t.lane_event("watchdog_timeout")
+    t.request_end(7, "complete", tokens=4)
+    out = tmp_path / "t.json"
+    t.export(str(out))
+    data = json.loads(out.read_text())
+    validate_chrome_trace(data)
+    assert_single_rooted(data, 7, require=("prefill", "preempt", "complete"))
+    names = [e["name"] for e in data["traceEvents"] if e["ph"] != "M"]
+    assert "watchdog_timeout" in names and "w" in names
+
+
+# =============================================================================
+# invariance: tracing ON changes no tokens and no dispatch/sync counts
+# (the named CI fast-lane smoke: test_trace_smoke_invariance)
+# =============================================================================
+
+def test_trace_smoke_invariance(setup, tmp_path):
+    cfg, params, reqs, arrivals, ref = setup
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, chunk_steps=4) as srv:
+        out0, st0 = srv.run(reqs, arrival_steps=arrivals)
+    tracer, reg = Tracer(), MetricsRegistry()
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, chunk_steps=4,
+                                  tracer=tracer, metrics=reg) as srv:
+        out1, st1 = srv.run(reqs, arrival_steps=arrivals)
+        snap = srv.snapshot()
+    # tokens bit-identical, PR 4 dispatch/sync invariants unchanged
+    for r in reqs:
+        np.testing.assert_array_equal(out1[r.rid], ref[r.rid])
+        np.testing.assert_array_equal(out1[r.rid], out0[r.rid])
+    assert st1.device_calls == st0.device_calls
+    assert st1.host_syncs == st0.host_syncs
+    assert st1.admission_batches == st0.admission_batches
+    assert st1.device_calls == st1.admission_batches + st1.chunks
+    # exported trace is schema-valid with properly nested spans, and every
+    # request's tree is complete and single-rooted
+    path = tmp_path / "smoke.json"
+    tracer.export(str(path))
+    data = json.loads(path.read_text())
+    validate_chrome_trace(data)
+    for r in reqs:
+        assert_single_rooted(data, r.rid, require=("prefill", "complete"))
+    # one snapshot reports latency percentiles, busy fractions, recovery
+    assert snap["ttft_s"]["count"] == len(reqs)
+    assert snap["tbt_s"]["count"] == len(reqs)
+    assert any(k.startswith("lane_busy_frac") for k in snap)
+    assert snap["recovery_preemptions"] == 0
+    assert "predictor_drift" in snap
+
+
+def test_engine_trace_invariance(setup):
+    """Device-resident engine: tracing adds zero dispatches (2/group)."""
+    cfg, params, reqs, _, ref = setup
+    eng0 = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=4,
+                             kv_cap=128, act_cap=128)
+    out0, st0 = eng0.generate(reqs)
+    tracer, reg = Tracer(), MetricsRegistry()
+    eng1 = HybridServeEngine(cfg, params, mode="hybrid", max_minibatch=4,
+                             kv_cap=128, act_cap=128, tracer=tracer,
+                             metrics=reg)
+    out1, st1 = eng1.generate(reqs)
+    assert st1.device_calls == st0.device_calls
+    for r in reqs:
+        np.testing.assert_array_equal(out1[r.rid], out0[r.rid])
+        np.testing.assert_array_equal(out1[r.rid], ref[r.rid])
+    data = tracer.to_chrome()
+    validate_chrome_trace(data)
+    for r in reqs:
+        assert_single_rooted(data, r.rid, require=("complete",))
+    # the engine feeds the drift monitor identity pairs only (device
+    # resident: measured IS predicted) -> no residuals, only skips
+    assert eng1.drift.samples == 0
+
+
+# =============================================================================
+# lifecycle: span trees survive park/resume and shard aggregation
+# =============================================================================
+
+def test_trace_survives_park_resume():
+    """Tight pools force preemption: every request's span tree must stay
+    single-rooted with the full preempt -> park -> resume -> complete
+    lifecycle inside the root, and tokens stay exact."""
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=_zipf(rng, 1.2, cfg.vocab_size, 64)
+                    .astype(np.int32), max_new_tokens=40) for i in range(3)]
+    ref = exact_reference_generate(cfg, params, reqs)
+    tracer, reg = Tracer(), MetricsRegistry()
+    with ContinuousBatchingServer(
+            cfg, params, slots=2, kv_cap=192, act_cap=192, chunk_steps=4,
+            recovery=RecoveryConfig(prefer_act=True),
+            host_kv_blocks=3, dev_kv_blocks=0, host_act_blocks=64,
+            dev_act_blocks=8, tracer=tracer, metrics=reg) as srv:
+        out, _ = srv.run(reqs)
+        rs = srv.recovery_stats
+        assert rs.preemptions > 0 and rs.resumes > 0
+        snap = srv.snapshot()
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+    data = tracer.to_chrome()
+    validate_chrome_trace(data)
+    preempted = 0
+    for r in reqs:
+        assert_single_rooted(data, r.rid, require=("complete",))
+        names = [e["name"] for e in span_forest(data)[r.rid]]
+        assert names.count("request") == 1        # park/resume never re-roots
+        if "preempt" in names:
+            preempted += 1
+            assert "park" in names and "resume" in names
+            assert "resume_prefill" in names
+    assert preempted > 0
+    # registry-backed RecoveryStats surface the same counts in snapshot()
+    assert snap["recovery_preemptions"] == rs.preemptions
+    assert snap["recovery_resumes"] == rs.resumes
+
+
+@needs_devices
+def test_trace_sharded_timelines_complete(setup):
+    """1x2 mesh with offload lanes: per-shard lane spans land on distinct
+    tracks, shard-aggregated timelines feed the drift monitor, and every
+    request's span tree is complete and single-rooted."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.sharding import make_shard_plan
+    cfg, params, reqs, arrivals, ref = setup
+    plan = make_shard_plan(cfg, make_test_mesh(1, 2), params)
+    tracer, reg = Tracer(), MetricsRegistry()
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, chunk_steps=4, offload=True,
+                                  plan=plan, tracer=tracer,
+                                  metrics=reg) as srv:
+        out, st = srv.run(reqs, arrival_steps=arrivals)
+        drift_samples = srv.drift.samples
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+    data = tracer.to_chrome()
+    validate_chrome_trace(data)
+    for r in reqs:
+        assert_single_rooted(data, r.rid, require=("prefill", "complete"))
+    # lane spans carry per-shard tracks (shard arg recorded on the span)
+    shards = {e["args"].get("shard") for e in data["traceEvents"]
+              if e["ph"] == "X" and e.get("cat", "").startswith("lane:")}
+    assert {0, 1} <= shards
+    # measured (aggregated) vs simulated steps entered the drift window
+    assert drift_samples > 0
+    snap = reg.snapshot()
+    assert snap["lane_time_s{source=measured}"] > 0.0

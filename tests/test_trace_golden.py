@@ -1,0 +1,105 @@
+"""Golden-trace regression for the request-lifecycle span taxonomy.
+
+The trace schema (DESIGN.md §13) is a CONTRACT: dashboards and the CI
+smoke parse event names, categories and track layout, so a refactor must
+not silently rename "preempt" or drop the "resume_prefill" span.  This
+test runs one seeded 2-request serve through the pressure path (tight KV
+pools force at least one preemption) with a seeded copy-fail fault on the
+offload lane, then snapshots the STRUCTURE of the trace — per-request
+event-name sequences, the server-track span sequence, the lane-event
+vocabulary and the fault/recovery counters — none of the timestamps,
+which are wall-clock.
+
+Update the snapshot EXPLICITLY after an intentional change:
+
+    PYTHONPATH=src python -m pytest tests/test_trace_golden.py \
+        --snapshot-update
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import Request, _zipf
+from repro.models import model as M
+from repro.obs import (MetricsRegistry, PID_SERVER, Tracer,
+                       assert_single_rooted, span_forest,
+                       validate_chrome_trace)
+from repro.offload import FaultPlan
+from repro.serving import RecoveryConfig, exact_reference_generate
+from repro.serving.scheduler import ContinuousBatchingServer
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "trace_golden.json"
+
+
+def _build() -> dict:
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=_zipf(rng, 1.2, cfg.vocab_size, 64)
+                    .astype(np.int32), max_new_tokens=40) for i in range(2)]
+    ref = exact_reference_generate(cfg, params, reqs)
+    # deterministic copy failures only — no stalls, no watchdog, so the
+    # retry ladder's event sequence depends only on the seeded plan
+    plan = FaultPlan(9, copy_fail_p=0.4, max_events=2)
+    tracer, reg = Tracer(), MetricsRegistry()
+    with ContinuousBatchingServer(
+            cfg, params, slots=2, kv_cap=192, act_cap=192, chunk_steps=4,
+            offload=True, faults=plan,
+            recovery=RecoveryConfig(prefer_act=True),
+            host_kv_blocks=3, dev_kv_blocks=0, host_act_blocks=64,
+            dev_act_blocks=8, tracer=tracer, metrics=reg) as srv:
+        out, _ = srv.run(reqs)
+        rs = srv.recovery_stats
+        fc = dict(srv.executor.fault_counters)
+    # preconditions the golden structure depends on: the run preempts,
+    # faults fired, tokens stay exact
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+    assert rs.preemptions > 0, "recipe no longer forces preemption"
+    assert plan.total_injected > 0, "fault plan no longer fires"
+    data = tracer.to_chrome()
+    validate_chrome_trace(data)
+    for r in reqs:
+        assert_single_rooted(data, r.rid, require=("complete",))
+    forest = span_forest(data)
+    server = [e["name"] for e in span_forest(data, pid=PID_SERVER).get(0, [])]
+    lane_names = sorted({e["name"] for e in data["traceEvents"]
+                         if e["ph"] == "i" and e.get("cat") == "fault"})
+    return {
+        "requests": {str(rid): [e["name"] for e in evs]
+                     for rid, evs in sorted(forest.items())},
+        "server_track": server,
+        "lane_fault_events": lane_names,
+        "fault_counters": fc,
+        "recovery": {
+            "preemptions": rs.preemptions,
+            "preempt_to_act": rs.preempt_to_act,
+            "preempt_to_tokens": rs.preempt_to_tokens,
+            "resumes": rs.resumes,
+        },
+    }
+
+
+def test_trace_golden(snapshot_update):
+    data = _build()
+    if snapshot_update:
+        GOLDEN.parent.mkdir(exist_ok=True)
+        GOLDEN.write_text(json.dumps(data, indent=2) + "\n")
+        return
+    assert GOLDEN.exists(), \
+        "golden snapshot missing; run with --snapshot-update to create it"
+    stored = json.loads(GOLDEN.read_text())
+    assert stored["requests"] == data["requests"], (
+        "request-lifecycle span taxonomy changed; if intentional, rerun "
+        "with --snapshot-update and document in DESIGN.md §13")
+    assert stored["server_track"] == data["server_track"], (
+        "server-track span sequence changed; if intentional, rerun with "
+        "--snapshot-update")
+    assert stored["lane_fault_events"] == data["lane_fault_events"], (
+        "lane fault-event vocabulary changed; if intentional, rerun with "
+        "--snapshot-update")
+    assert stored["fault_counters"] == data["fault_counters"]
+    assert stored["recovery"] == data["recovery"]
