@@ -29,6 +29,7 @@ from repro.core import costmodel as cm
 from repro.core.controller import ControllerConfig, HybridCacheController
 from repro.core.pipeline import MiniBatchSpec, simulate_step
 from repro.core.policy import device_act_blocks, host_block_allocation
+from repro.core.quant import QuantConfig
 
 #: steady-state decode spec (per mini-batch: requests, context/request)
 N_REQ, CTX, N_MB = 8, 2048, 2
@@ -43,7 +44,7 @@ SCENARIOS = [
 ]
 
 
-def _step(cfg, hw, frac):
+def _step(cfg, hw, frac, quant=None):
     """One steady-state decode iteration at host ACT fraction ``frac``."""
     mbs = []
     for _ in range(N_MB):
@@ -51,45 +52,52 @@ def _step(cfg, hw, frac):
         total = nr * CTX
         act = int(total * frac)
         mbs.append(MiniBatchSpec(nr, total - act, act, 0, ctx_tokens=CTX))
-    return simulate_step(cfg, hw, mbs)
+    return simulate_step(cfg, hw, mbs, quant=quant)
 
 
-def _throughput(cfg, hw, frac):
-    return N_REQ / _step(cfg, hw, frac).total
+def _throughput(cfg, hw, frac, quant=None):
+    return N_REQ / _step(cfg, hw, frac, quant=quant).total
 
 
-def sweep_one(name, generalized, scenario, hw_kwargs):
+def sweep_one(name, generalized, scenario, hw_kwargs, quant=None):
+    """One (config, scenario) row; ``quant`` re-prices every lane with the
+    int8 block layout (DESIGN.md §14) — the KV-load slope drops by the
+    compression factor, Algorithm 1's split moves, and the controller must
+    re-converge against the quantized truth."""
     cfg = get_config(name)
     prior_hw = cm.RTX4090
     true_hw = dataclasses.replace(prior_hw, **hw_kwargs)
 
-    static = [{"frac": f, "throughput": _throughput(cfg, true_hw, f)}
+    static = [{"frac": f, "throughput": _throughput(cfg, true_hw, f, quant)}
               for f in SWEEP]
     best = max(static, key=lambda r: r["throughput"])
     worst = min(static, key=lambda r: r["throughput"])
 
-    fits = cm.profile_cost_fns(cfg, prior_hw, noise=0.0)
-    gpu_blocks = device_act_blocks(cfg, prior_hw)
+    fits = cm.profile_cost_fns(cfg, prior_hw, noise=0.0, quant=quant)
+    gpu_blocks = device_act_blocks(cfg, prior_hw, quant=quant)
     alloc0 = host_block_allocation(cfg, prior_hw, gpu_blocks, fits=fits,
-                                   generalized=generalized)
+                                   generalized=generalized, quant=quant)
     ctl = HybridCacheController(
         cfg, prior_hw, alloc0, gpu_blocks, fits=fits, generalized=generalized,
-        ctl=ControllerConfig(min_samples=2, alpha=0.5, damping=10.0))
+        ctl=ControllerConfig(min_samples=2, alpha=0.5, damping=10.0),
+        quant=quant)
     total_tokens = N_REQ * CTX
     for _ in range(CTL_ITERS):
         frac = ctl.alloc.act_fraction
-        res = _step(cfg, true_hw, frac)          # the "measured" timeline
+        res = _step(cfg, true_hw, frac, quant)   # the "measured" timeline
         act = int(total_tokens * frac)
         ctl.observe([res], [total_tokens - act], [act])
         ctl.alloc = ctl.update()
 
     final = ctl.alloc.act_fraction
-    thr = _throughput(cfg, true_hw, final)
+    thr = _throughput(cfg, true_hw, final, quant)
     rec = {
         "config": name,
         "scenario": scenario,
         "true_hw": hw_kwargs,
         "generalized": generalized,
+        "quant": "off" if quant is None else
+                 f"kv={quant.kv_dtype},act={quant.act_dtype}",
         "static": static,
         "controller": {
             "start_frac": alloc0.act_fraction,
@@ -109,7 +117,8 @@ def sweep_one(name, generalized, scenario, hw_kwargs):
             "ge_20pct_over_worst": thr >= 1.20 * worst["throughput"],
         },
     }
-    emit(f"ratio_sweep.{name}.{scenario}", 0.0,
+    qtag = "" if quant is None else ".int8"
+    emit(f"ratio_sweep.{name}.{scenario}{qtag}", 0.0,
          f"f0={alloc0.act_fraction:.3f} f*={final:.3f} thr={thr:.1f} "
          f"best(f={best['frac']:.2f})={best['throughput']:.1f} "
          f"worst(f={worst['frac']:.2f})={worst['throughput']:.1f} "
@@ -119,9 +128,20 @@ def sweep_one(name, generalized, scenario, hw_kwargs):
 
 
 def run():
-    records = [sweep_one(*s) for s in SCENARIOS]
-    passing = [r for r in records
-               if all(r["checks"].values())]
+    records = [sweep_one(*s, quant=q)
+               for s in SCENARIOS
+               for q in (None, QuantConfig())]
+    fp = [r for r in records if r["quant"] == "off"]
+    qn = [r for r in records if r["quant"] != "off"]
+    passing = [r for r in fp if all(r["checks"].values())]
+    q_passing = [r for r in qn if all(r["checks"].values())]
+    # quant re-convergence gate: every quant-on controller ran updates and
+    # landed within the migration quantum of a fixed point (trajectory tail
+    # flat), and at least one quant-on config hits the throughput checks
+    q_converged = [r for r in qn
+                   if r["controller"]["updates"] > 0
+                   and abs(r["controller"]["trajectory"][-1]
+                           - r["controller"]["trajectory"][-2]) < 0.02]
     out = {
         "spec": {"n_requests": N_REQ, "ctx_tokens": CTX, "minibatches": N_MB,
                  "sweep": SWEEP, "controller_iters": CTL_ITERS},
@@ -129,6 +149,11 @@ def run():
         "acceptance": {
             "any_config_within_5pct_and_20pct_over_worst": bool(passing),
             "passing": [f"{r['config']}:{r['scenario']}" for r in passing],
+            "quant_rows": len(qn),
+            "quant_all_reconverged": len(q_converged) == len(qn),
+            "quant_any_within_5pct_and_20pct_over_worst": bool(q_passing),
+            "quant_passing": [f"{r['config']}:{r['scenario']}"
+                              for r in q_passing],
         },
     }
     with open("BENCH_ratio.json", "w") as f:

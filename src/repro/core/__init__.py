@@ -15,3 +15,4 @@ from repro.core.policy import (HostAllocation, host_block_allocation,
                                next_block_kind, policy_act_ratio,
                                request_block_split, device_act_blocks,
                                store_act_schedule)
+from repro.core.quant import SCALE_FLOOR, QuantConfig

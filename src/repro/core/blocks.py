@@ -13,6 +13,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.core import quant as Q
 
 BLOCK_TOKENS = 16           # vLLM default; MXU-friendly sublane count
 
@@ -27,17 +28,28 @@ class Location(enum.Enum):
     DEVICE = "device"
 
 
-def kv_block_bytes(cfg: ModelConfig, shards: int = 1) -> int:
+def _ceil_div(n: int, d: int) -> int:
+    return -(-n // d)
+
+
+def kv_block_bytes(cfg: ModelConfig, shards: int = 1,
+                   quant: "Q.QuantConfig | None" = None) -> int:
     """S_KV: one KV block, all layers.  ``shards`` > 1 gives the PER-SHARD
     slice of the block under an N-way model axis (KV heads split N ways;
-    DESIGN.md §11) — the bytes ONE device's PCIe lane moves per block."""
-    return BLOCK_TOKENS * cfg.kv_bytes_per_token() * cfg.num_layers // shards
+    DESIGN.md §11) — the bytes ONE device's PCIe lane moves per block.
+    Ceil-divided: a quantized (or otherwise non-divisible) block's shard
+    slices must COVER the block, never undercount PCIe bytes.  ``quant``
+    prices the 1-byte-payload + scale layout (DESIGN.md §14)."""
+    total = BLOCK_TOKENS * Q.kv_bytes_per_token(cfg, quant) * cfg.num_layers
+    return _ceil_div(total, shards)
 
 
-def act_block_bytes(cfg: ModelConfig, shards: int = 1) -> int:
-    """S_ACT: one ACT block, all layers (= S_KV/2 for MHA).  ``shards`` as in
-    ``kv_block_bytes`` (ACT checkpoints split on d_model)."""
-    return BLOCK_TOKENS * cfg.act_bytes_per_token() * cfg.num_layers // shards
+def act_block_bytes(cfg: ModelConfig, shards: int = 1,
+                    quant: "Q.QuantConfig | None" = None) -> int:
+    """S_ACT: one ACT block, all layers (= S_KV/2 for MHA).  ``shards`` and
+    ``quant`` as in ``kv_block_bytes`` (ACT checkpoints split on d_model)."""
+    total = BLOCK_TOKENS * Q.act_bytes_per_token(cfg, quant) * cfg.num_layers
+    return _ceil_div(total, shards)
 
 
 @dataclass
@@ -46,6 +58,12 @@ class LogicalBlock:
     location: Location
     pbn: int                 # physical block number within its (kind, location) pool
     ntokens: int = 0         # filled tokens (<= BLOCK_TOKENS)
+    # storage format metadata (DESIGN.md §14): payload dtype of this block's
+    # rows plus the absmax-scale dtype when quantized (scale_dtype=None means
+    # an unquantized block in the config dtype — today's layout, and what
+    # every block is when the manager has quant=None).
+    dtype: str = ""
+    scale_dtype: Optional[str] = None
 
     @property
     def full(self) -> bool:
@@ -104,15 +122,22 @@ class BlockManager:
     def __init__(self, cfg: ModelConfig, *,
                  host_kv_blocks: int, host_act_blocks: int,
                  dev_kv_blocks: int, dev_act_blocks: int,
-                 shard_factor: int = 1):
+                 shard_factor: int = 1,
+                 quant: "Q.QuantConfig | None" = None):
         """``shard_factor``: the model-axis tensor-parallel factor of the
         serving mesh (ShardPlan.shard_factor; 1 = single device, today's
         numbers bit-for-bit).  Blocks stay LOGICAL — one block spans all
         shards — but per-shard byte accounting (``block_bytes``,
         ``bytes_capacity``, ``host_bytes_to_load``) divides by it: each
-        shard's lane moves only its 1/N head/d_model slice."""
+        shard's lane moves only its 1/N head/d_model slice.
+
+        ``quant``: cache-block quantization (DESIGN.md §14).  When set,
+        newly allocated blocks carry the 1-byte payload + scale dtype
+        metadata and every byte query prices the quantized layout; None
+        keeps all accounting in the config dtype, bit-for-bit."""
         assert shard_factor >= 1
         self.cfg = cfg
+        self.quant = quant
         self.shard_factor = int(shard_factor)
         self.pools: Dict[Tuple[BlockType, Location], PhysicalPool] = {
             (BlockType.KV, Location.HOST): PhysicalPool(host_kv_blocks),
@@ -153,8 +178,18 @@ class BlockManager:
         for loc in order:
             pbn = self.pools[(kind, loc)].alloc()
             if pbn is not None:
-                return LogicalBlock(kind, loc, pbn)
+                return LogicalBlock(kind, loc, pbn, dtype=self._block_dtype(kind),
+                                    scale_dtype=self._block_scale_dtype())
         return None
+
+    def _block_dtype(self, kind: BlockType) -> str:
+        if self.quant is None:
+            return str(self.cfg.dtype)
+        return (self.quant.kv_dtype if kind == BlockType.KV
+                else self.quant.act_dtype)
+
+    def _block_scale_dtype(self) -> Optional[str]:
+        return None if self.quant is None else self.quant.scale_dtype
 
     def append_token(self, rid: int, kind: BlockType) -> Optional[LogicalBlock]:
         """Account one more token of the given representation; allocates a new
@@ -220,6 +255,7 @@ class BlockManager:
                 break
             self.pools[(blk.kind, blk.location)].free(blk.pbn)
             blk.kind, blk.location, blk.pbn = BlockType.ACT, new.location, new.pbn
+            blk.dtype, blk.scale_dtype = new.dtype, new.scale_dtype
             moved += 1
         if moved:
             key = (BlockType.KV, BlockType.ACT)
@@ -253,9 +289,12 @@ class BlockManager:
     # -- per-shard accounting (DESIGN.md §11) ---------------------------------
     def block_bytes(self, kind: BlockType, *, per_shard: bool = True) -> int:
         """Bytes of one block — per shard by default (what one device's lane
-        moves), total across shards with ``per_shard=False``."""
+        moves), total across shards with ``per_shard=False``.  Quant-aware:
+        under ``quant`` this is the 1-byte payload + scales, the real bytes
+        the spill arena and PCIe lanes carry (DESIGN.md §14)."""
         f = kv_block_bytes if kind == BlockType.KV else act_block_bytes
-        return f(self.cfg, self.shard_factor if per_shard else 1)
+        return f(self.cfg, self.shard_factor if per_shard else 1,
+                 quant=self.quant)
 
     def bytes_capacity(self, kind: BlockType, loc: Location,
                        *, per_shard: bool = True) -> int:
@@ -266,14 +305,23 @@ class BlockManager:
     def explain(self) -> str:
         """Decision-log-style report of the pool capacities and the
         per-shard byte math (the ShardPlan.explain() companion)."""
+        qdesc = ("off (config dtype)" if self.quant is None else
+                 f"kv={self.quant.kv_dtype} act={self.quant.act_dtype} "
+                 f"scales={self.quant.scale_dtype}")
         lines = [f"BlockManager shard_factor={self.shard_factor} "
-                 f"(per-shard bytes divide by this; 1 = single shard)"]
+                 f"(per-shard bytes divide by this; 1 = single shard), "
+                 f"quant={qdesc}"]
         for (kind, loc), pool in self.pools.items():
             per = self.block_bytes(kind)
             tot = self.block_bytes(kind, per_shard=False)
+            extra = ""
+            if self.quant is not None:
+                raw = (kv_block_bytes if kind == BlockType.KV
+                       else act_block_bytes)(self.cfg)
+                extra = f" [{raw / tot:.2f}x vs {self.cfg.dtype}]"
             lines.append(
                 f"  {loc.value:6s} {kind.value:3s}: capacity={pool.capacity} "
-                f"blocks x {tot} B ({per} B/shard), "
+                f"blocks x {tot} B ({per} B/shard){extra}, "
                 f"allocated={pool.allocated}")
         return "\n".join(lines)
 
@@ -303,9 +351,11 @@ class BlockManager:
         for b in self.tables[rid]:
             if b.location != Location.HOST:
                 continue
-            per_tok = (cfg.kv_bytes_per_token() if b.kind == BlockType.KV
-                       else cfg.act_bytes_per_token())
-            sz = b.ntokens * per_tok * cfg.num_layers // self.shard_factor
+            per_tok = (Q.kv_bytes_per_token(cfg, self.quant)
+                       if b.kind == BlockType.KV
+                       else Q.act_bytes_per_token(cfg, self.quant))
+            sz = _ceil_div(b.ntokens * per_tok * cfg.num_layers,
+                           self.shard_factor)
             if b.kind == BlockType.KV:
                 kv += sz
             else:

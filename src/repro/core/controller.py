@@ -83,8 +83,13 @@ class HybridCacheController:
                  alloc: HostAllocation, n_act_gpu_blocks: int, *,
                  fits: Optional[Tuple[LinearFit, LinearFit]] = None,
                  generalized: bool = False,
-                 ctl: ControllerConfig = ControllerConfig(), drift=None):
+                 ctl: ControllerConfig = ControllerConfig(), drift=None,
+                 quant=None):
         self.cfg, self.hw, self.ctl = cfg, hw, ctl
+        # optional QuantConfig: retargeting must price the same (quantized)
+        # block bytes the engine allocates, or Algorithm 1 would re-balance
+        # against phantom full-precision lane slopes (DESIGN.md §14)
+        self.quant = quant
         # optional repro.obs.drift.DriftMonitor: every (measured, sim) pair
         # that flows through observe() also feeds the rolling lane
         # residuals, so systematic simulate_steps error the damped refit
@@ -92,7 +97,8 @@ class HybridCacheController:
         self.drift = drift
         self.generalized = generalized
         self.n_act_gpu_blocks = n_act_gpu_blocks
-        prior = fits if fits is not None else cm.profile_cost_fns(cfg, hw)
+        prior = (fits if fits is not None
+                 else cm.profile_cost_fns(cfg, hw, quant=quant))
         self.prior_gen, self.prior_load = prior
         self.fit_gen, self.fit_load = prior
         self.alloc = alloc
@@ -183,7 +189,8 @@ class HybridCacheController:
         fixed host-block total: the target conserves act+kv exactly."""
         ref = host_block_allocation(
             self.cfg, self.hw, self.n_act_gpu_blocks,
-            fits=(self.fit_gen, self.fit_load), generalized=self.generalized)
+            fits=(self.fit_gen, self.fit_load), generalized=self.generalized,
+            quant=self.quant)
         act = int(round(ref.act_fraction * self.total_host))
         act = min(max(act, 0), self.total_host)
         return dataclasses.replace(self.alloc, act_blocks=act,

@@ -143,24 +143,31 @@ def forward_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
     return proj + ffn + attn_flops_per_token(cfg, ctx)
 
 
-def make_cost_fns(cfg: ModelConfig, hw: HardwareSpec):
+def make_cost_fns(cfg: ModelConfig, hw: HardwareSpec, quant=None):
     """-> (t_kv_gen(n_tokens), t_load_kv(n_tokens), t_load_act(n_tokens)).
 
     Per layer, batch-aggregate token counts (matching Algorithm 1's units:
-    "#blocks" scaled by BLOCK_TOKENS happens at the caller).
+    "#blocks" scaled by BLOCK_TOKENS happens at the caller).  ``quant``
+    (a ``core.quant.QuantConfig``) reprices the two PCIe lanes by the
+    quantized bytes/token — the load slopes drop 2-4x while the KV-Gen
+    lane is untouched, which is exactly the slope change Algorithm 1's
+    KV:ACT split re-balances around (DESIGN.md §14).
     """
+    from repro.core.quant import act_bytes_per_token, kv_bytes_per_token
     eff_gen = hw.flops * hw.gen_mfu
 
     def t_kv_gen(n):                     # GPU lane (skinny per-block GEMMs)
         return np.asarray(n, float) * kv_gen_flops_per_token(cfg) / eff_gen
 
     kv_bw = hw.host_link_bw * hw.gather_eff
+    kvB = kv_bytes_per_token(cfg, quant)
+    actB = act_bytes_per_token(cfg, quant)
 
     def t_load_kv(n):                    # PCIe lane (scattered block gather)
-        return np.asarray(n, float) * cfg.kv_bytes_per_token() / kv_bw
+        return np.asarray(n, float) * kvB / kv_bw
 
     def t_load_act(n):                   # PCIe lane (half-size block gather)
-        return np.asarray(n, float) * cfg.act_bytes_per_token() / kv_bw
+        return np.asarray(n, float) * actB / kv_bw
 
     return t_kv_gen, t_load_kv, t_load_act
 
@@ -205,9 +212,9 @@ def fit_linear(fn: Callable, ns: Sequence[float], noise: float = 0.0,
 
 def profile_cost_fns(cfg: ModelConfig, hw: HardwareSpec,
                      sample_tokens: Sequence[int] = (256, 1024, 4096, 16384, 65536),
-                     noise: float = 0.02) -> Tuple[LinearFit, LinearFit]:
+                     noise: float = 0.02, quant=None) -> Tuple[LinearFit, LinearFit]:
     """The paper's sampling step: returns (fit_kv_gen, fit_load_kv)."""
-    t_kv_gen, t_load_kv, _ = make_cost_fns(cfg, hw)
+    t_kv_gen, t_load_kv, _ = make_cost_fns(cfg, hw, quant=quant)
     return (fit_linear(t_kv_gen, sample_tokens, noise, seed=1),
             fit_linear(t_load_kv, sample_tokens, noise, seed=2))
 

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import costmodel as cm
+from repro.core import quant as Q
 from repro.core.blocks import BLOCK_TOKENS
 
 
@@ -148,14 +149,16 @@ def _run_timeline_arrays(tasks: List[LaneTask], n: int):
 
 def simulate_step(cfg: ModelConfig, hw: cm.HardwareSpec,
                   minibatches: List[MiniBatchSpec],
-                  step_cfg: StepConfig = StepConfig()) -> TimelineResult:
+                  step_cfg: StepConfig = StepConfig(),
+                  quant=None) -> TimelineResult:
     """One token-generation iteration across all layers x mini-batches."""
-    return simulate_steps(cfg, hw, [minibatches], step_cfg)[0]
+    return simulate_steps(cfg, hw, [minibatches], step_cfg, quant=quant)[0]
 
 
 def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
                    steps: List[List[MiniBatchSpec]],
-                   step_cfg: StepConfig = StepConfig()) -> List[TimelineResult]:
+                   step_cfg: StepConfig = StepConfig(),
+                   quant=None) -> List[TimelineResult]:
     """Vectorized ``simulate_step`` over a whole decode schedule.
 
     All steps must share the same mini-batch count (the task graph is
@@ -163,7 +166,10 @@ def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
     timeline recurrence runs once instead of once per generated token.  The
     engine calls this with the precomputed store_act schedule's per-step token
     totals; results are element-for-element identical to calling
-    ``simulate_step`` per step.
+    ``simulate_step`` per step.  ``quant`` (core.quant.QuantConfig) prices
+    KV/ACT loads and the new-token store at the quantized bytes/token —
+    lane durations and traffic shrink together, matching what the offload
+    runtime's measured ``Span`` byte counts report (DESIGN.md §14).
     """
     n = len(steps)
     if n == 0:
@@ -174,7 +180,8 @@ def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
     L = cfg.num_layers
     w_bytes = cm.layer_weight_bytes(cfg) * step_cfg.weight_host_frac
     t_w = np.full((n,), w_bytes / hw.host_link_bw)
-    kvB, actB = cfg.kv_bytes_per_token(), cfg.act_bytes_per_token()
+    kvB = Q.kv_bytes_per_token(cfg, quant)
+    actB = Q.act_bytes_per_token(cfg, quant)
 
     # (n, M) per-step spec fields
     f = lambda attr: np.array([[getattr(mb, attr) for mb in s] for s in steps],

@@ -12,6 +12,7 @@ from typing import Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import quant as Q
 from repro.core.blocks import BLOCK_TOKENS, act_block_bytes, kv_block_bytes
 from repro.core.costmodel import HardwareSpec, LinearFit, profile_cost_fns, t_load_w
 
@@ -58,7 +59,7 @@ def initial_cache_allocation(cfg: ModelConfig, hw: HardwareSpec,
 def alloc_remaining(cfg: ModelConfig, hw: HardwareSpec,
                     fit_gen: LinearFit, fit_load: LinearFit,
                     act_init: int, kv_init: int,
-                    generalized: bool = False) -> Tuple[int, int]:
+                    generalized: bool = False, quant=None) -> Tuple[int, int]:
     """Algorithm 1 lines 20-27: fill remaining host memory with the balanced
     2x2 linear system  {S_ACT*a + S_KV*k = M_rem ; T_gen(a) = T_load(k)}.
 
@@ -69,7 +70,8 @@ def alloc_remaining(cfg: ModelConfig, hw: HardwareSpec,
     replaces.  The generalized balance moves T_load_act to the PCIe side:
        T_gen(a) = T_load_kv(k) - T_load_act(a).
     """
-    S_act, S_kv = act_block_bytes(cfg), kv_block_bytes(cfg)
+    S_act = act_block_bytes(cfg, quant=quant)
+    S_kv = kv_block_bytes(cfg, quant=quant)
     S_weight = cfg.num_params() * cfg.bytes_per_param()
     M_occ = S_act * act_init + S_kv * kv_init
     M_rem = hw.host_mem - S_weight - M_occ
@@ -85,7 +87,8 @@ def alloc_remaining(cfg: ModelConfig, hw: HardwareSpec,
         # byte ratio) rather than the analytic hw constants, so an online
         # refit of fit_load re-prices ACT loads consistently (DESIGN.md §9).
         la = (fit_load.slope * BLOCK_TOKENS
-              * cfg.act_bytes_per_token() / cfg.kv_bytes_per_token())
+              * Q.act_bytes_per_token(cfg, quant)
+              / Q.kv_bytes_per_token(cfg, quant))
         ga = ga + la
     # solve: S_act*a + S_kv*k = M_rem ;  ga*a - lk*k = c
     A = np.array([[S_act, S_kv], [ga, -lk]], float)
@@ -104,13 +107,18 @@ def alloc_remaining(cfg: ModelConfig, hw: HardwareSpec,
 def host_block_allocation(cfg: ModelConfig, hw: HardwareSpec,
                           n_act_gpu_blocks: int,
                           fits: Tuple[LinearFit, LinearFit] = None,
-                          generalized: bool = False) -> HostAllocation:
-    """Algorithm 1 top level: -> #ACT_Host, #KV_Host."""
-    fit_gen, fit_load = fits if fits is not None else profile_cost_fns(cfg, hw)
+                          generalized: bool = False,
+                          quant=None) -> HostAllocation:
+    """Algorithm 1 top level: -> #ACT_Host, #KV_Host.  ``quant`` reprices
+    block sizes AND the default fits by the quantized bytes (DESIGN.md §14),
+    so the KV:ACT split re-balances around the changed lane slopes."""
+    fit_gen, fit_load = fits if fits is not None else \
+        profile_cost_fns(cfg, hw, quant=quant)
     act_init, kv_init = initial_cache_allocation(
         cfg, hw, fit_gen, fit_load, n_act_gpu_blocks)
     act_rem, kv_rem = alloc_remaining(cfg, hw, fit_gen, fit_load, act_init,
-                                      kv_init, generalized=generalized)
+                                      kv_init, generalized=generalized,
+                                      quant=quant)
     return HostAllocation(act_blocks=act_init + act_rem,
                           kv_blocks=kv_init + kv_rem,
                           act_init=act_init, kv_init=kv_init)
@@ -126,9 +134,9 @@ def request_block_split(alloc: HostAllocation, context_blocks: int) -> Tuple[int
 
 
 def device_act_blocks(cfg: ModelConfig, hw: HardwareSpec,
-                      frac: float = 0.7) -> int:
+                      frac: float = 0.7, quant=None) -> int:
     """ACT blocks that fit the device-memory budget (weights stream)."""
-    per_block = act_block_bytes(cfg)
+    per_block = act_block_bytes(cfg, quant=quant)
     return int(hw.device_mem * frac / per_block)
 
 

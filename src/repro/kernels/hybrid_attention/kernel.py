@@ -63,13 +63,16 @@ NEG_INF = -1e30
 def _hybrid_attn_kernel(
         # scalar prefetch
         page_table, page_type, page_ntok, n_used,
-        # inputs
+        # inputs (+3 scale refs between wv_ref and o_ref when quantized)
         q_ref, k_ref, v_ref, act_ref, scale_ref, wk_ref, wv_ref,
-        # outputs
-        o_ref,
-        # scratch
-        acc, m_s, l_s, a_norm,
-        *, norm_type: str, eps: float, sm_scale: float):
+        # outputs / scratch
+        *rest,
+        norm_type: str, eps: float, sm_scale: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, as_ref, o_ref, acc, m_s, l_s, a_norm = rest
+    else:
+        ks_ref = vs_ref = as_ref = None
+        o_ref, acc, m_s, l_s, a_norm = rest
     b = pl.program_id(0)
     p = pl.program_id(1)
     h = pl.program_id(2)
@@ -89,6 +92,10 @@ def _hybrid_attn_kernel(
     @pl.when(live & (ptype == 1) & (h == 0))
     def _norm_act():
         a = act_ref[0].astype(jnp.float32)               # (T, d_model)
+        if quantized:
+            # int8 ACT page dequant rides the once-per-page hoist: the page
+            # is widened to fp32 in VMEM only, never materialized in HBM
+            a = a * as_ref[0].astype(jnp.float32)        # (T, 1) per-token
         s = scale_ref[...].astype(jnp.float32)           # (1, d_model)
         if norm_type == "rmsnorm":
             var = jnp.mean(a * a, axis=-1, keepdims=True)
@@ -104,8 +111,13 @@ def _hybrid_attn_kernel(
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (G, D)
 
         def kv_path():
-            return (k_ref[0, :, 0, :].astype(jnp.float32),
-                    v_ref[0, :, 0, :].astype(jnp.float32))   # (T, D)
+            k = k_ref[0, :, 0, :].astype(jnp.float32)        # (T, D)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+            if quantized:
+                # per-(token, head) scales, (T, 1): dequant on the VMEM tile
+                k = k * ks_ref[0, :, 0, :].astype(jnp.float32)
+                v = v * vs_ref[0, :, 0, :].astype(jnp.float32)
+            return k, v
 
         def act_path():
             wk = wk_ref[:, 0, :].astype(jnp.float32)         # (d_model, D)
@@ -140,6 +152,7 @@ def _hybrid_attn_kernel(
                                     "interpret"))
 def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
                            page_table, page_type, page_ntok, *,
+                           k_scales=None, v_scales=None, act_scales=None,
                            norm_type: str = "layernorm", eps: float = 1e-5,
                            pages_bound: int | None = None,
                            interpret: bool = True):
@@ -148,7 +161,19 @@ def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
     pages_bound: static upper bound on any request's USED page count; the
     page grid dimension shrinks to it (default: MAXP).  The caller (which
     owns the page tables) knows this bound exactly.
+
+    Quantized pages (DESIGN.md §14): pass int8 k/v/act pools plus their
+    absmax scale sidecars — k/v_scales (P_kv, T, KVH, 1) per (token, head),
+    act_scales (P_act, T, 1) per token, all float16.  The scale blocks ride
+    the SAME index maps as their payload pools, and dequant happens on the
+    VMEM tile: KV pages widen inside the per-head kv path, ACT pages inside
+    the once-per-page h==0 norm hoist — the fp32 cache is never
+    materialized in HBM.  Either pass all three scales or none.
     """
+    quantized = k_scales is not None
+    if quantized and (v_scales is None or act_scales is None):
+        raise ValueError("quantized path needs k_scales, v_scales AND "
+                         "act_scales")
     B, KVH, G, D = q.shape
     P_kv, T, _, _ = k_pages.shape
     d_model = act_pages.shape[-1]
@@ -192,18 +217,31 @@ def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
         # are always overwritten by that block's later finalize flush.
         return (b, jnp.where((p < nu[b]) | (p == PB - 1), h, 0), 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), q_index),
+        pl.BlockSpec((1, T, 1, D), k_index),
+        pl.BlockSpec((1, T, 1, D), k_index),
+        pl.BlockSpec((1, T, d_model), act_index),
+        pl.BlockSpec((1, d_model), lambda b, p, h, pt, pty, pn, nu: (0, 0)),
+        pl.BlockSpec((d_model, 1, D), w_index),
+        pl.BlockSpec((d_model, 1, D), w_index),
+    ]
+    operands = [q, k_pages, v_pages, act_pages, scale2d, wk, wv]
+    if quantized:
+        # scale sidecars reuse the payload index maps: a dead/clamped page
+        # clamps its scale block identically, so payload and scale DMAs
+        # always refer to the same physical page
+        in_specs += [
+            pl.BlockSpec((1, T, 1, 1), k_index),
+            pl.BlockSpec((1, T, 1, 1), k_index),
+            pl.BlockSpec((1, T, 1), act_index),
+        ]
+        operands += [k_scales, v_scales, act_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B, PB, KVH),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), q_index),
-            pl.BlockSpec((1, T, 1, D), k_index),
-            pl.BlockSpec((1, T, 1, D), k_index),
-            pl.BlockSpec((1, T, d_model), act_index),
-            pl.BlockSpec((1, d_model), lambda b, p, h, pt, pty, pn, nu: (0, 0)),
-            pl.BlockSpec((d_model, 1, D), w_index),
-            pl.BlockSpec((d_model, 1, D), w_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D), o_index),
         scratch_shapes=[
             pltpu.VMEM((KVH, G, D), jnp.float32),
@@ -214,10 +252,9 @@ def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
     )
     out = pl.pallas_call(
         functools.partial(_hybrid_attn_kernel, norm_type=norm_type, eps=eps,
-                          sm_scale=sm_scale),
+                          sm_scale=sm_scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
         interpret=interpret,
-    )(pt, pty, pn, n_used,
-      q, k_pages, v_pages, act_pages, scale2d, wk, wv)
+    )(pt, pty, pn, n_used, *operands)
     return out

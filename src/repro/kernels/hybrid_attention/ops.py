@@ -24,7 +24,11 @@ def paged_hybrid_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
     kernel's page grid dimension below MAXP (DESIGN.md §7.4).  An
     insufficient bound would silently truncate attention, so it is checked
     here whenever the page_type table is concrete (the common eager case —
-    inside a jit trace the caller's contract stands)."""
+    inside a jit trace the caller's contract stands).
+
+    Quantized pools: pass int8 pages plus ``k_scales``/``v_scales``/
+    ``act_scales`` through ``**kw`` — both the kernel (on-tile dequant) and
+    the reference (dense dequant up front) accept them (DESIGN.md §14)."""
     if pages_bound is not None and not isinstance(page_type, jax.core.Tracer):
         used = int(jnp.sum((page_type != 2).astype(jnp.int32), axis=1).max())
         if pages_bound < used:

@@ -8,8 +8,20 @@ from jax import lax
 
 def hybrid_paged_attention_ref(q, k_pages, v_pages, act_pages, norm_scale,
                                wk, wv, page_table, page_type, page_ntok, *,
+                               k_scales=None, v_scales=None, act_scales=None,
                                norm_type: str = "layernorm", eps: float = 1e-5):
-    """Gathers every page, recomputes ACT pages via Eq. 7, runs plain softmax."""
+    """Gathers every page, recomputes ACT pages via Eq. 7, runs plain softmax.
+
+    Quantized oracle (DESIGN.md §14): when scale sidecars are given, the
+    int8 pools are dequantized densely up front (the opposite strategy of
+    the kernel's on-tile dequant) and the rest of the oracle runs unchanged
+    — it answers "what SHOULD attention over these codes produce".
+    """
+    if k_scales is not None:
+        k_pages = k_pages.astype(jnp.float32) * k_scales.astype(jnp.float32)
+        v_pages = v_pages.astype(jnp.float32) * v_scales.astype(jnp.float32)
+        act_pages = (act_pages.astype(jnp.float32)
+                     * act_scales.astype(jnp.float32))
     B, KVH, G, D = q.shape
     T = k_pages.shape[1]
     d_model = act_pages.shape[-1]

@@ -24,6 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import shardhints as SH
 from repro.models import transformer as T
+from repro.models.quant_ops import fake_quant
 from repro.models.transformer import (  # re-export
     family, init_params, pad_vocab, _window_split, hybrid_slots)
 
@@ -641,7 +642,7 @@ def init_hybrid_cache(cfg: ModelConfig, B: int, kv_cap: int, act_cap: int) -> Ca
 
 def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
                        sincos_new, sincos_act, is_moe,
-                       kv_bound=None, act_bound=None):
+                       kv_bound=None, act_bound=None, quant=None):
     """One hybrid KV/ACT attention layer at decode time (shared by the
     uniform scan and the windowed period scan).  Returns h, kc', vc', ac'.
 
@@ -652,7 +653,16 @@ def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
     the bound is exact: KV Gen and attention run over ``[:bound]`` slices
     instead of the full capacity, while cache WRITES stay full-size.  An
     insufficient bound would drop context; callers must cover
-    ``max(len) + steps_in_dispatch``."""
+    ``max(len) + steps_in_dispatch``.
+
+    quant: optional ``QuantConfig`` (STATIC).  When set, every value STORED
+    into a cache region passes through ``fake_quant`` — numerically identical
+    to int8 residency with dequant-on-load (DESIGN.md §14), so this dense
+    path stays the exactness oracle for the quantized Pallas kernel and the
+    int8 spill arena.  Transients stay exact: the recomputed KV-Gen K/V are
+    never stored, and an ACT-bound token attends to its own exact K/V the
+    step it is produced (only its checkpoint is stored); a KV-bound token is
+    read back dequantized — error enters exactly where storage does."""
     B = h.shape[0]
     S_kv = kc.shape[1]
     S_act = ac.shape[1]
@@ -676,16 +686,24 @@ def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
         ka = L.apply_rope(ka, sincos_act[0][:, :act_b], sincos_act[1][:, :act_b])
 
     # --- append the new token to its region --------------------------------
+    # Stored values are quantized; the token's OWN k/v used for this step's
+    # attention (the ka/va rows below) stay exact — they are transient.
+    if quant is not None:
+        k_store, v_store = fake_quant(k[:, 0]), fake_quant(v[:, 0])
+        act_store = fake_quant(act_in).astype(ac.dtype)
+    else:
+        k_store, v_store = k[:, 0], v[:, 0]
+        act_store = act_in.astype(ac.dtype)
     kc2 = kc.at[arangeB, kv_len].set(
-        jnp.where(store_act[:, None, None], kc[arangeB, kv_len], k[:, 0]))
+        jnp.where(store_act[:, None, None], kc[arangeB, kv_len], k_store))
     vc2 = vc.at[arangeB, kv_len].set(
-        jnp.where(store_act[:, None, None], vc[arangeB, kv_len], v[:, 0]))
+        jnp.where(store_act[:, None, None], vc[arangeB, kv_len], v_store))
     ka = ka.at[arangeB, act_len].set(
         jnp.where(store_act[:, None, None], k[:, 0], ka[arangeB, act_len]))
     va = va.at[arangeB, act_len].set(
         jnp.where(store_act[:, None, None], v[:, 0], va[arangeB, act_len]))
     ac2 = ac.at[arangeB, act_len].set(
-        jnp.where(store_act[:, None], act_in.astype(ac.dtype), ac[arangeB, act_len]))
+        jnp.where(store_act[:, None], act_store, ac[arangeB, act_len]))
     # mesh-sharded serving (DESIGN.md §11): pin the carried regions to the
     # plan's layout — batch over 'data', KV heads over 'model', checkpoints
     # over d_model — so SPMD propagation cannot drift the scan carry toward
@@ -711,11 +729,15 @@ def _hybrid_layer_step(lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
 
 
 def hybrid_prefill(params, cfg: ModelConfig, batch, kv_cap: int, act_cap: int,
-                   kv_keep: int):
+                   kv_keep: int, quant=None):
     """Prefill storing the first ``kv_keep`` tokens as K/V and the remaining
     prompt tokens as activation checkpoints (engine decides kv_keep from the
-    Algorithm-1 ratio)."""
+    Algorithm-1 ratio).  ``quant`` quantizes the stored regions (uniform
+    family only; see ``_hybrid_layer_step``)."""
     if family(cfg) == "windowed":
+        if quant is not None:
+            raise NotImplementedError(
+                "QuantConfig is wired for the uniform hybrid family only")
         return _hybrid_prefill_windowed(params, cfg, batch, kv_cap, act_cap,
                                         kv_keep)
     assert family(cfg) == "uniform"
@@ -738,6 +760,8 @@ def hybrid_prefill(params, cfg: ModelConfig, batch, kv_cap: int, act_cap: int,
     B = x.shape[0]
     cache = init_hybrid_cache(cfg, B, kv_cap, act_cap)
     kfit = min(kv_keep, S)
+    if quant is not None:
+        K, V, ACT = fake_quant(K), fake_quant(V), fake_quant(ACT)
     cache["k"] = lax.dynamic_update_slice_in_dim(
         cache["k"], K[:, :, :kfit].astype(cache["k"].dtype), 0, axis=2)
     cache["v"] = lax.dynamic_update_slice_in_dim(
@@ -773,7 +797,7 @@ def decode_loop(params, cfg: ModelConfig, cur, cache: Cache, n_steps: int):
 
 
 def hybrid_decode_loop(params, cfg: ModelConfig, cur, cache: Cache,
-                       store_sched):
+                       store_sched, quant=None):
     """Device-resident greedy generation over the hybrid KV/ACT cache.
 
     The engine's decode hot path (DESIGN.md §7): the per-token store_act
@@ -790,7 +814,8 @@ def hybrid_decode_loop(params, cfg: ModelConfig, cur, cache: Cache,
     """
     def step(carry, store):
         tok, c = carry
-        lg, c = hybrid_decode_step(params, cfg, tok[:, None], c, store)
+        lg, c = hybrid_decode_step(params, cfg, tok[:, None], c, store,
+                                   quant=quant)
         nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
         return (nxt, c), tok
 
@@ -799,7 +824,7 @@ def hybrid_decode_loop(params, cfg: ModelConfig, cur, cache: Cache,
 
 
 def hybrid_prefill_batched(params, cfg: ModelConfig, batch, kv_cap: int,
-                           act_cap: int, kv_keep, last_pos):
+                           act_cap: int, kv_keep, last_pos, quant=None):
     """Group-batched hybrid prefill with PER-REQUEST KV/ACT split points.
 
     The engine pads every request in a jit group to one common bucket and
@@ -849,6 +874,8 @@ def hybrid_prefill_batched(params, cfg: ModelConfig, batch, kv_cap: int,
 
     cache = init_hybrid_cache(cfg, B, kv_cap, act_cap)
     kfit = min(S, kv_cap)
+    if quant is not None:
+        K, V, ACT = fake_quant(K), fake_quant(V), fake_quant(ACT)
     # kv region: positions < kv_keep[b] are the real prefix; slots beyond are
     # masked by kv_len and overwritten as decode appends.
     cache["k"] = lax.dynamic_update_slice_in_dim(
@@ -869,7 +896,8 @@ def hybrid_prefill_batched(params, cfg: ModelConfig, batch, kv_cap: int,
 
 
 def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
-                       store_act, *, kv_bound=None, act_bound=None):
+                       store_act, *, kv_bound=None, act_bound=None,
+                       quant=None):
     """One generation step with the KV-Activation hybrid cache.
 
     store_act: (B,) bool — whether this token's checkpoint goes to the ACT
@@ -885,6 +913,9 @@ def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
     weight streaming.
     """
     if family(cfg) == "windowed":
+        if quant is not None:
+            raise NotImplementedError(
+                "QuantConfig is wired for the uniform hybrid family only")
         return _hybrid_decode_windowed(params, cfg, token, cache, store_act)
     assert family(cfg) == "uniform"
     B = token.shape[0]
@@ -906,7 +937,7 @@ def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
         h, kc2, vc2, ac2 = _hybrid_layer_step(
             lp, cfg, h, kc, vc, ac, kv_len, act_len, store_act,
             sincos_new, sincos_act, is_moe,
-            kv_bound=kv_bound, act_bound=act_bound)
+            kv_bound=kv_bound, act_bound=act_bound, quant=quant)
         return h, (kc2, vc2, ac2)
 
     x, (K, V, ACT) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"], cache["act"]))
@@ -922,7 +953,7 @@ def hybrid_decode_step(params, cfg: ModelConfig, token, cache: Cache,
 
 def hybrid_decode_chunk(params, cfg: ModelConfig, cur, cache: Cache,
                         store_sched, active_sched, *, kv_bound=None,
-                        act_bound=None):
+                        act_bound=None, quant=None):
     """Masked multi-step decode: S serving iterations in ONE dispatch.
 
     The continuous-batching server's hot path (DESIGN.md §10): instead of one
@@ -955,7 +986,8 @@ def hybrid_decode_chunk(params, cfg: ModelConfig, cur, cache: Cache,
         store, active = xs
         store = store & active
         lg, c2 = hybrid_decode_step(params, cfg, tok[:, None], c, store,
-                                    kv_bound=kv_bound, act_bound=act_bound)
+                                    kv_bound=kv_bound, act_bound=act_bound,
+                                    quant=quant)
         nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
         # freeze inactive slots: lengths and the carried token do not advance
         c2["kv_len"] = jnp.where(active, c2["kv_len"], c["kv_len"])

@@ -1,0 +1,54 @@
+"""jnp quantization primitives shared by the cache formats (DESIGN.md §14).
+
+Leaf module (imports nothing from ``repro.models``) so both the dormant
+int8 cache (``quantized_cache.py``) and the serving hot path
+(``model.py``'s hybrid cache write points) use ONE absmax quantizer —
+the kernel's in-kernel dequant, the host spill arena, and the dense XLA
+decode all agree on codes and scales by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import SCALE_FLOOR
+
+
+def quantize(x, axis=-1):
+    """x (..., D) -> (int8 values, f16 scales) with per-slice absmax.
+
+    The scale floor must survive the float16 cast: f16's smallest
+    subnormal is ~6e-8, so a 1e-8 floor flushes to a ZERO stored scale
+    for all-zero slices and any later divide-by-scale consumer produces
+    inf/±127 garbage.  ``SCALE_FLOOR`` (2**-14, f16 min normal) is exactly
+    representable, and all-zero slices still quantize to all-zero codes.
+
+    The scale is cast to float16 BEFORE the codes are computed: codes must
+    quantize against the scale that will actually be stored, or
+    requantizing dequantized values would see a different effective scale
+    and the spill round trip (``fake_quant`` docstring) would not be exact.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, SCALE_FLOOR).astype(jnp.float16)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale.astype(jnp.float32)),
+                 -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def fake_quant(x, axis=-1):
+    """Quantize-then-dequantize in the storage dtype of ``x``.
+
+    Compute-identical to real int8 storage + dequant-on-load: the values
+    the consumer sees ARE ``code * scale``.  The serving hot path applies
+    this at every cache write so the dense XLA decode, the Pallas
+    kernel's in-kernel dequant, and the int8 host spill arena agree
+    bit-for-bit on the dequantized cache contents.  The round trip is
+    idempotent (requantizing fake-quant values reproduces the same codes
+    and scales), which is what lets the spill lane store REAL int8 bytes
+    losslessly mid-generation.
+    """
+    q, s = quantize(x, axis=axis)
+    return dequantize(q, s, x.dtype)

@@ -20,21 +20,12 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core.quant import SCALE_FLOOR  # noqa: F401  (re-export)
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models import transformer as T
-
-
-def quantize(x, axis=-1):
-    """x (..., D) -> (int8 values, f16 scales) with per-slice absmax."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax / 127.0, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale.astype(jnp.float16)
-
-
-def dequantize(q, scale, dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+from repro.models.quant_ops import (  # noqa: F401  (re-export)
+    dequantize, fake_quant, quantize)
 
 
 def init_cache_q8(cfg: ModelConfig, B: int, max_len: int) -> Dict[str, Any]:
@@ -59,10 +50,24 @@ def prefill_q8(params, cfg: ModelConfig, batch, max_len: int):
 
 
 def decode_step_q8(params, cfg: ModelConfig, token, cache):
-    """One decode step over the int8 cache (uniform family)."""
+    """One decode step over the int8 cache (uniform family).
+
+    Dequantizes only the attended ``kv_len``-bounded slice of the cache:
+    the whole point of int8 residency is that the fp cache never
+    materialises at ``max_len`` — the old full-cache ``dequantize`` undid
+    exactly that every step.  With a concrete ``kv_len`` (the normal
+    host-stepped oracle use) the bound is ``max(kv_len)+1``; under a
+    tracer it falls back to ``max_len``, which is numerically identical
+    (``decode_attention`` masks past ``kv_len`` either way).
+    """
     assert M.family(cfg) == "uniform"
     B = token.shape[0]
     kv_len = cache["kv_len"]
+    max_len = cache["k_q"].shape[2]
+    if isinstance(kv_len, jax.core.Tracer):
+        bound = max_len
+    else:
+        bound = min(max_len, int(jax.device_get(jnp.max(kv_len))) + 1)
     sincos = T._rope_for(cfg, kv_len[:, None]) if cfg.pos_type == "rope" else None
     x = M._embed_tokens(params, cfg, token)
     if cfg.pos_type == "learned":
@@ -83,8 +88,8 @@ def decode_step_q8(params, cfg: ModelConfig, token, cache):
         ks = ks.at[arangeB, kv_len].set(nks)
         vq = vq.at[arangeB, kv_len].set(nvq)
         vs = vs.at[arangeB, kv_len].set(nvs)
-        kf = dequantize(kq, ks, cfg.dtype)
-        vf = dequantize(vq, vs, cfg.dtype)
+        kf = dequantize(kq[:, :bound], ks[:, :bound], cfg.dtype)
+        vf = dequantize(vq[:, :bound], vs[:, :bound], cfg.dtype)
         o = L.decode_attention(q, kf, vf, kv_len=kv_len + 1)
         h = h + o.reshape(B, 1, cfg.q_dim) @ lp["attn"]["wo"]
         if cfg.d_ff > 0:

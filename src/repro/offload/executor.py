@@ -36,15 +36,54 @@ import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core.quant import SCALE_FLOOR
 from repro.models import layers as nn
 from repro.models import model as M
 from repro.models import transformer as T
+from repro.models.quant_ops import fake_quant
 from repro.offload.host_pool import HostWeightPool, Region, ShardedRegion
 from repro.offload.streamer import (ShardedWeightLanes, WeightStreamer,
                                     donate_buffers)
 from repro.offload.timeline import MeasuredTimeline
 
 Cache = Dict[str, Any]
+
+
+# --- host-side quantized spill format (DESIGN.md §14) ------------------------
+# numpy mirror of models.quant_ops: identical op sequence (f32 absmax, scale
+# floored then f16-cast BEFORE the codes, round-half-even, clip ±127), so a
+# value that went through the device-side fake_quant requantizes here to the
+# SAME codes and scales — the spill round trip is bit-exact by construction.
+
+def np_quantize(x: np.ndarray, axis: int = -1):
+    amax = np.max(np.abs(x.astype(np.float32)), axis=axis, keepdims=True)
+    scale = np.maximum(amax / 127.0, SCALE_FLOOR).astype(np.float16)
+    q = np.clip(np.rint(x.astype(np.float32) / scale.astype(np.float32)),
+                -127, 127)
+    return q.astype(np.int8), scale
+
+
+def np_dequantize(q: np.ndarray, scale: np.ndarray, dtype=np.float32):
+    return (q.astype(np.float32) * scale.astype(np.float32)).astype(dtype)
+
+
+class QuantSlab:
+    """One layer's spilled K or V plane in the pinned arena: an int8 payload
+    view plus its f16 scale sidecar (both carved from the same ``Region``).
+    ``nbytes`` is what actually crosses the measured lane."""
+
+    __slots__ = ("q", "s")
+
+    def __init__(self, q: np.ndarray, s: np.ndarray):
+        self.q, self.s = q, s
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.nbytes + self.s.nbytes
+
+    @property
+    def shape(self):
+        return self.q.shape
 
 
 class OffloadExecutor:
@@ -62,10 +101,15 @@ class OffloadExecutor:
     def __init__(self, cfg: ModelConfig, params, *, prefetch_depth: int = 1,
                  timeline: Optional[MeasuredTimeline] = None, plan=None,
                  faults=None, watchdog_s: Optional[float] = None,
-                 max_copy_retries: int = 2, tracer=None, metrics=None):
+                 max_copy_retries: int = 2, tracer=None, metrics=None,
+                 quant=None):
         assert M.family(cfg) == "uniform", \
             "offload executor drives uniform-family models"
         self.cfg = cfg
+        # QuantConfig: cache writes fake-quant on device (token-exact vs the
+        # quantized monolithic loop) and the spill arena stores REAL int8
+        # payload + f16 scales — lane spans carry the reduced byte counts
+        self.quant = quant
         self.is_moe = cfg.is_moe and cfg.moe_every == 1
         self.timeline = timeline if timeline is not None else MeasuredTimeline()
         # obs plumbing (DESIGN.md §13): the tracer rides the shared timeline
@@ -96,6 +140,12 @@ class OffloadExecutor:
         # host_syncs) read this instead of assuming one sync per call
         self.blocking_syncs = 0
 
+        # spilled-KV upload in quant mode: int8 payload + f16 scales cross
+        # the (measured) link, dequant runs device-side — the fp cache never
+        # rides the lane
+        self._dequant_kv = jax.jit(
+            lambda q, s: (q.astype(jnp.float32) * s.astype(jnp.float32))
+            .astype(jnp.dtype(cfg.dtype)))
         self._pre = jax.jit(self._pre_impl)
         self._layer = jax.jit(self._layer_impl, donate_argnums=(1, 2, 3),
                               static_argnames=("kv_bound", "act_bound"))
@@ -128,7 +178,7 @@ class OffloadExecutor:
         return M._hybrid_layer_step(lp, self.cfg, h, kc, vc, ac, kv_len,
                                     act_len, store, sincos_new, sincos_act,
                                     self.is_moe, kv_bound=kv_bound,
-                                    act_bound=act_bound)
+                                    act_bound=act_bound, quant=self.quant)
 
     def _post_impl(self, resident, h, prev, kv_len, act_len, store, active):
         """active: (B,) bool — inactive slots keep their carried token and
@@ -156,6 +206,8 @@ class OffloadExecutor:
         h, (k, v), _ = T.layer_full(lp, cfg, x, sincos, kind="attn",
                                     is_moe=self.is_moe, want_cache=True,
                                     q_chunk=M.Q_CHUNK, k_chunk=M.K_CHUNK)
+        if self.quant is not None:    # stored regions only; h stays exact
+            k, v, act_in = fake_quant(k), fake_quant(v), fake_quant(act_in)
         kfit = min(S, kv_cap)
         kc = lax.dynamic_update_slice_in_dim(
             jnp.zeros((B, kv_cap, cfg.num_kv_heads, cfg.head_dim), dt),
@@ -249,11 +301,27 @@ class OffloadExecutor:
         Per-shard lanes (plan): ``hk_l``/``hv_l`` are per-lane head-slice
         views; the put lands sharded on the mesh and the wall window is
         recorded once per lane with that lane's bytes — N physical lanes
-        moving 1/N each in parallel."""
+        moving 1/N each in parallel.
+
+        Quantized spill (``self.quant``): the slabs hold int8 payload + f16
+        scales; those REDUCED bytes are what the lane moves and what the
+        span records.  Single-lane mode uploads the quantized planes and
+        dequantizes device-side (one extra fused dispatch per plane) — the
+        fp cache never rides the lane.  Per-shard lanes dequantize in the
+        host view before the sharded put (mesh placement of the scale
+        sidecar is not worth the complexity at smoke scale) but still
+        record the quantized transfer bytes."""
         t0 = time.perf_counter()
         if isinstance(hk_l, list):              # per-shard lanes
-            full_k = np.concatenate(hk_l, axis=2)
-            full_v = np.concatenate(hv_l, axis=2)
+            if self.quant is not None:
+                dt = np.dtype(self.cfg.dtype)
+                full_k = np.concatenate(
+                    [np_dequantize(s.q, s.s, dt) for s in hk_l], axis=2)
+                full_v = np.concatenate(
+                    [np_dequantize(s.q, s.s, dt) for s in hv_l], axis=2)
+            else:
+                full_k = np.concatenate(hk_l, axis=2)
+                full_v = np.concatenate(hv_l, axis=2)
             sh = self._kv_layer_sharding(full_k.shape)
             kc = jax.device_put(full_k, sh)
             vc = jax.device_put(full_v, sh)
@@ -263,6 +331,17 @@ class OffloadExecutor:
             for s, (k_s, v_s) in enumerate(zip(hk_l, hv_l)):
                 self.timeline.record("pcie", "kv", t0, t1,
                                      k_s.nbytes + v_s.nbytes, shard=s)
+            return kc, vc
+        if self.quant is not None:
+            kc = self._dequant_kv(jax.device_put(hk_l.q),
+                                  jax.device_put(hk_l.s))
+            vc = self._dequant_kv(jax.device_put(hv_l.q),
+                                  jax.device_put(hv_l.s))
+            jax.block_until_ready((kc, vc))
+            self.blocking_syncs += 1
+            self.dispatches += 2
+            self.timeline.record("pcie", "kv", t0, time.perf_counter(),
+                                 hk_l.nbytes + hv_l.nbytes)
             return kc, vc
         if self.plan is not None:
             # single arena (cache dims indivisible) but mesh execution: the
@@ -293,20 +372,41 @@ class OffloadExecutor:
         gather = jnp.asarray(np.minimum(kv_idx, cap - 1))
         rows_k = np.asarray(kc2[jnp.arange(B), gather])
         rows_v = np.asarray(vc2[jnp.arange(B), gather])
+        if self.quant is not None:
+            # device rows are fake-quant values: requantizing reproduces the
+            # exact codes/scales the device dequantized from (lossless)
+            qk, sk = np_quantize(rows_k)
+            qv, sv = np_quantize(rows_v)
         nbytes = 0
         n = len(hk_l) if lanes else 1
         kvh_s = rows_k.shape[1] // n
         for b in range(B):
             if not store_np[b]:                 # KV-bound token: row is new
                 row = min(kv_idx[b], cap - 1)
-                if lanes:
+                if self.quant is not None:
+                    if lanes:
+                        for s in range(n):
+                            hs = slice(s * kvh_s, (s + 1) * kvh_s)
+                            hk_l[s].q[b, row] = qk[b, hs]
+                            hk_l[s].s[b, row] = sk[b, hs]
+                            hv_l[s].q[b, row] = qv[b, hs]
+                            hv_l[s].s[b, row] = sv[b, hs]
+                    else:
+                        hk_l.q[b, row] = qk[b]
+                        hk_l.s[b, row] = sk[b]
+                        hv_l.q[b, row] = qv[b]
+                        hv_l.s[b, row] = sv[b]
+                    nbytes += (qk[b].nbytes + sk[b].nbytes
+                               + qv[b].nbytes + sv[b].nbytes)
+                elif lanes:
                     for s in range(n):
                         hk_l[s][b, row] = rows_k[b, s * kvh_s:(s + 1) * kvh_s]
                         hv_l[s][b, row] = rows_v[b, s * kvh_s:(s + 1) * kvh_s]
+                    nbytes += rows_k[b].nbytes + rows_v[b].nbytes
                 else:
                     hk_l[b, row] = rows_k[b]
                     hv_l[b, row] = rows_v[b]
-                nbytes += rows_k[b].nbytes + rows_v[b].nbytes
+                    nbytes += rows_k[b].nbytes + rows_v[b].nbytes
         t1 = time.perf_counter()
         if lanes:
             for s in range(n):
@@ -321,7 +421,13 @@ class OffloadExecutor:
         Single arena: per-layer views of one contiguous region.  Per-shard
         arenas (``ShardedRegion``): each model-axis lane's arena receives
         that lane's head slice; ``hk[l]``/``hv[l]`` become per-lane view
-        lists and the store spans carry per-shard byte counts."""
+        lists and the store spans carry per-shard byte counts.
+
+        Quantized spill (``self.quant``): the region is carved into int8
+        payload planes + f16 scale sidecars (``Region.views``) and each
+        layer is host-quantized on the way down — the arena holds and the
+        upstream span counts the REDUCED bytes.  Device values are already
+        fake-quant, so this quantization is lossless (codes round-trip)."""
         cfg = self.cfg
         Lc = cfg.num_layers
         B, kv_cap = ks[0].shape[0], ks[0].shape[1]
@@ -329,23 +435,65 @@ class OffloadExecutor:
         if isinstance(region, ShardedRegion):
             n = region.n_lanes
             kvh_s = cfg.num_kv_heads // n
-            views = [region.lane_view(
-                s, (2, Lc, B, kv_cap, kvh_s, cfg.head_dim),
-                np.dtype(cfg.dtype)) for s in range(n)]
-            hk = [[views[s][0][l] for s in range(n)] for l in range(Lc)]
-            hv = [[views[s][1][l] for s in range(n)] for l in range(Lc)]
-            nbytes = 0
-            for l in range(Lc):
-                k_np, v_np = np.asarray(ks[l]), np.asarray(vs[l])
-                for s in range(n):
-                    hk[l][s][...] = k_np[:, :, s * kvh_s:(s + 1) * kvh_s]
-                    hv[l][s][...] = v_np[:, :, s * kvh_s:(s + 1) * kvh_s]
-                nbytes += k_np.nbytes + v_np.nbytes
-                donate_buffers((ks[l], vs[l]))   # device copies are now stale
+            if self.quant is not None:
+                psh = (Lc, B, kv_cap, kvh_s, cfg.head_dim)
+                ssh = (Lc, B, kv_cap, kvh_s, 1)
+                lanes = [region.lane_views(
+                    s, [(psh, np.int8), (ssh, np.float16),
+                        (psh, np.int8), (ssh, np.float16)])
+                    for s in range(n)]
+                hk = [[QuantSlab(lanes[s][0][l], lanes[s][1][l])
+                       for s in range(n)] for l in range(Lc)]
+                hv = [[QuantSlab(lanes[s][2][l], lanes[s][3][l])
+                       for s in range(n)] for l in range(Lc)]
+                nbytes = 0
+                for l in range(Lc):
+                    kq, ksc = np_quantize(np.asarray(ks[l]))
+                    vq, vsc = np_quantize(np.asarray(vs[l]))
+                    for s in range(n):
+                        hs = slice(s * kvh_s, (s + 1) * kvh_s)
+                        hk[l][s].q[...] = kq[:, :, hs]
+                        hk[l][s].s[...] = ksc[:, :, hs]
+                        hv[l][s].q[...] = vq[:, :, hs]
+                        hv[l][s].s[...] = vsc[:, :, hs]
+                    nbytes += (kq.nbytes + ksc.nbytes
+                               + vq.nbytes + vsc.nbytes)
+                    donate_buffers((ks[l], vs[l]))
+            else:
+                views = [region.lane_view(
+                    s, (2, Lc, B, kv_cap, kvh_s, cfg.head_dim),
+                    np.dtype(cfg.dtype)) for s in range(n)]
+                hk = [[views[s][0][l] for s in range(n)] for l in range(Lc)]
+                hv = [[views[s][1][l] for s in range(n)] for l in range(Lc)]
+                nbytes = 0
+                for l in range(Lc):
+                    k_np, v_np = np.asarray(ks[l]), np.asarray(vs[l])
+                    for s in range(n):
+                        hk[l][s][...] = k_np[:, :, s * kvh_s:(s + 1) * kvh_s]
+                        hv[l][s][...] = v_np[:, :, s * kvh_s:(s + 1) * kvh_s]
+                    nbytes += k_np.nbytes + v_np.nbytes
+                    donate_buffers((ks[l], vs[l]))   # device copies now stale
             t1 = time.perf_counter()
             for s in range(n):
                 self.timeline.record("pcie_up", "st", t0, t1, nbytes // n,
                                      shard=s)
+            return hk, hv, np.asarray(kv_len).copy()
+        if self.quant is not None:
+            psh = (Lc, B, kv_cap, cfg.num_kv_heads, cfg.head_dim)
+            ssh = (Lc, B, kv_cap, cfg.num_kv_heads, 1)
+            kqv, ksv, vqv, vsv = region.views(
+                [(psh, np.int8), (ssh, np.float16),
+                 (psh, np.int8), (ssh, np.float16)])
+            hk = [QuantSlab(kqv[l], ksv[l]) for l in range(Lc)]
+            hv = [QuantSlab(vqv[l], vsv[l]) for l in range(Lc)]
+            nbytes = 0
+            for l in range(Lc):
+                hk[l].q[...], hk[l].s[...] = np_quantize(np.asarray(ks[l]))
+                hv[l].q[...], hv[l].s[...] = np_quantize(np.asarray(vs[l]))
+                nbytes += hk[l].nbytes + hv[l].nbytes
+                donate_buffers((ks[l], vs[l]))       # device copies now stale
+            self.timeline.record("pcie_up", "st", t0, time.perf_counter(),
+                                 nbytes)
             return hk, hv, np.asarray(kv_len).copy()
         arr = region.view((2, Lc, B, kv_cap, cfg.num_kv_heads, cfg.head_dim),
                           np.dtype(cfg.dtype))

@@ -139,6 +139,26 @@ class Region:
         start = self.offset * self.pool.block_bytes
         return self.pool.arena[start: start + need].view(dtype).reshape(shape)
 
+    def views(self, specs) -> List[np.ndarray]:
+        """Carve CONSECUTIVE views ``[(shape, dtype), ...]`` from the region
+        (quantized spill layout: int8 payload planes + scale sidecars share
+        one contiguous region, DESIGN.md §14).  Each view is aligned to its
+        dtype's itemsize; overflow past the region fails loudly."""
+        start = self.offset * self.pool.block_bytes
+        out: List[np.ndarray] = []
+        off = 0
+        for shape, dtype in specs:
+            dt = np.dtype(dtype)
+            off = -(-off // dt.itemsize) * dt.itemsize      # align
+            need = int(np.prod(shape)) * dt.itemsize
+            if off + need > self.nbytes:
+                raise ValueError(f"views of {off + need} B exceed region of "
+                                 f"{self.nbytes} B")
+            out.append(self.pool.arena[start + off: start + off + need]
+                       .view(dt).reshape(shape))
+            off += need
+        return out
+
     def free(self) -> None:
         self.pool.free(self)
 
@@ -241,6 +261,9 @@ class ShardedRegion:
     def lane_view(self, lane: int, shape: Tuple[int, ...], dtype) -> np.ndarray:
         return self.regions[lane].view(shape, dtype)
 
+    def lane_views(self, lane: int, specs) -> List[np.ndarray]:
+        return self.regions[lane].views(specs)
+
     def free(self) -> None:
         for r in self.regions:
             r.free()
@@ -287,7 +310,7 @@ class ShardedSpillPool:
 
 
 def make_spill_pool(cfg: ModelConfig, *, max_requests: int,
-                    kv_cap: int, shards: int = 1):
+                    kv_cap: int, shards: int = 1, quant=None):
     """The engine's once-allocated KV staging pool: enough host blocks to
     back the largest jit group's KV region, plus one group of slack for
     admission churn.  This is the *staging* arena the executor spills into,
@@ -297,10 +320,15 @@ def make_spill_pool(cfg: ModelConfig, *, max_requests: int,
     here if ACT spill ever becomes real.)
 
     ``shards`` > 1 returns a ``ShardedSpillPool``: one arena per model-axis
-    position, each sized for that shard's 1/N block slices."""
+    position, each sized for that shard's 1/N block slices.
+
+    ``quant`` (a ``QuantConfig``) sizes each block slot by the QUANTIZED
+    byte layout (int8 payload + scale sidecar, DESIGN.md §14) — the arena
+    physically shrinks by the compression factor, which is the whole point
+    of spilling quantized blocks."""
     kv_blocks = 2 * kv_region_blocks(max_requests, kv_cap)
     if shards == 1:
-        return HostBlockPool(kv_blocks, kv_block_bytes(cfg))
+        return HostBlockPool(kv_blocks, kv_block_bytes(cfg, quant=quant))
     return ShardedSpillPool([
-        HostBlockPool(kv_blocks, kv_block_bytes(cfg, shards))
+        HostBlockPool(kv_blocks, kv_block_bytes(cfg, shards, quant=quant))
         for _ in range(shards)])

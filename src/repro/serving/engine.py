@@ -99,7 +99,7 @@ class HybridServeEngine:
                  faults=None, watchdog_s: Optional[float] = None,
                  ctl: Optional[ControllerConfig] = None,
                  plan: Optional[ShardPlan] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, quant=None):
         """generalized=True uses the byte-ratio-aware Algorithm-1 variant
         (DESIGN.md §7) — recommended for GQA models; False reproduces the
         paper's policy exactly.
@@ -128,10 +128,18 @@ class HybridServeEngine:
         host syncs), and the whole policy stack prices the AGGREGATE
         machine (``costmodel.scale_for_shards``: per-shard PCIe bandwidth x
         shard count, device memory x shard count).  ``plan=None`` (or a
-        1x1 mesh) is bit-for-bit today's single-device engine."""
+        1x1 mesh) is bit-for-bit today's single-device engine.
+
+        quant=... stores both cache regions block-quantized (DESIGN.md §14):
+        the hot path fake-quantizes every cache write (numerically identical
+        to int8 residency + dequant-on-load), while the BlockManager, spill
+        arena, cost model, and simulator all price the REAL quantized bytes
+        — so lane slopes drop and Algorithm 1 re-balances.  ``quant=None``
+        (default) is bit-identical to the unquantized engine."""
         assert mode in ("hybrid", "kv", "act")
         assert M.family(cfg) == "uniform", "engine drives uniform-family models"
         self.plan = plan
+        self.quant = quant
         shards = plan.shard_factor if plan is not None else 1
         hw = cm.scale_for_shards(hw, shards)
         self.cfg, self.params, self.hw, self.mode = cfg, params, hw, mode
@@ -152,9 +160,10 @@ class HybridServeEngine:
             register_busy_fraction_collector(metrics)
             metrics.register_collector(self._collect_metrics)
 
-        self.fits = profile_cost_fns(cfg, hw)
-        self.alloc = host_block_allocation(cfg, hw, device_act_blocks(cfg, hw),
-                                           generalized=generalized)
+        self.fits = profile_cost_fns(cfg, hw, quant=quant)
+        self.alloc = host_block_allocation(
+            cfg, hw, device_act_blocks(cfg, hw, quant=quant),
+            generalized=generalized, quant=quant)
         if mode == "kv":
             self.alloc = dataclasses.replace(self.alloc, act_blocks=0, kv_blocks=max(
                 self.alloc.kv_blocks, 1))
@@ -169,10 +178,10 @@ class HybridServeEngine:
             assert mode == "hybrid", "adaptive controller re-balances the " \
                 "hybrid split; kv/act baselines pin the ratio"
             self.controller = HybridCacheController(
-                cfg, hw, self.alloc, device_act_blocks(cfg, hw),
+                cfg, hw, self.alloc, device_act_blocks(cfg, hw, quant=quant),
                 fits=self.fits, generalized=generalized,
                 ctl=ctl if ctl is not None else ControllerConfig(),
-                drift=self.drift)
+                drift=self.drift, quant=quant)
 
         # device KV pool: generous when device-resident; budget-derived under
         # offload so tight (reduced) budgets force real spill to the host arena
@@ -181,8 +190,9 @@ class HybridServeEngine:
             cfg,
             host_kv_blocks=max(self.alloc.kv_blocks, 1),
             host_act_blocks=max(self.alloc.act_blocks, 1),
-            dev_kv_blocks=dev_kv, dev_act_blocks=device_act_blocks(cfg, hw),
-            shard_factor=shards)
+            dev_kv_blocks=dev_kv,
+            dev_act_blocks=device_act_blocks(cfg, hw, quant=quant),
+            shard_factor=shards, quant=quant)
 
         self.executor = None
         self.measured_steps: List[TimelineResult] = []
@@ -196,10 +206,10 @@ class HybridServeEngine:
             self.executor = OffloadExecutor(
                 cfg, params, prefetch_depth=self.budget.prefetch_depth,
                 plan=plan, faults=faults, watchdog_s=watchdog_s,
-                tracer=tracer, metrics=metrics)
+                tracer=tracer, metrics=metrics, quant=quant)
             self.spill_kv_pool = make_spill_pool(
                 cfg, max_requests=max_minibatch, kv_cap=kv_cap,
-                shards=shards)
+                shards=shards, quant=quant)
             # the executor owns host shards of the layer weights + the small
             # resident tree; the engine must not pin the caller's full
             # device-resident parameter set for its lifetime (the monolithic
@@ -242,7 +252,8 @@ class HybridServeEngine:
                             act_cap):
         lg, cache = M.hybrid_prefill_batched(
             params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
-            act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos)
+            act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos,
+            quant=self.quant)
         if self.plan is not None:
             cache = self.plan.constrain_cache(cache)
         # fold the greedy sample of the prefill logits into the same dispatch
@@ -254,7 +265,7 @@ class HybridServeEngine:
         if self.plan is not None:
             cache = self.plan.constrain_cache(cache)
         toks, cache = M.hybrid_decode_loop(params, self.cfg, cur, cache,
-                                           store_sched)
+                                           store_sched, quant=self.quant)
         if self.plan is not None:
             cache = self.plan.constrain_cache(cache)
         return toks, cache
@@ -524,7 +535,8 @@ class HybridServeEngine:
                                     ctx_tokens=int(np.mean(np.asarray(pbs)
                                                            + steps_ahead[s])))]
                      for s in range(max_new)]
-            sim_results = simulate_steps(cfg, self.hw, specs)
+            sim_results = simulate_steps(cfg, self.hw, specs,
+                                         quant=self.quant)
             for res in sim_results:
                 stats.sim_time += res.total
                 stats.sim_gpu_busy += res.gpu_busy

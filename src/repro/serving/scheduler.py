@@ -123,7 +123,7 @@ class ContinuousBatchingServer:
                  host_act_blocks: Optional[int] = None,
                  dev_kv_blocks: Optional[int] = None,
                  dev_act_blocks: Optional[int] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, quant=None):
         """chunk_steps: decode iterations per jitted dispatch.  1 reproduces
         the classic step server (admission every iteration); S>1 runs S
         masked steps per dispatch, admitting/retiring only at chunk
@@ -169,9 +169,15 @@ class ContinuousBatchingServer:
 
         host_kv_blocks / host_act_blocks / dev_kv_blocks / dev_act_blocks
         override the Algorithm-1 pool sizing — the pressure tests' knob for
-        provoking exhaustion at smoke scale."""
+        provoking exhaustion at smoke scale.
+
+        quant=... serves with block-quantized cache regions (DESIGN.md
+        §14): cache writes fake-quant inside the same dispatches, and the
+        policy stack / block accounting price the quantized bytes.
+        ``quant=None`` (default) is bit-identical to today's server."""
         assert M.family(cfg) == "uniform"
         self.plan = plan
+        self.quant = quant
         shards = plan.shard_factor if plan is not None else 1
         hw = cm.scale_for_shards(hw, shards)
         self.cfg, self.params, self.hw = cfg, params, hw
@@ -186,15 +192,17 @@ class ContinuousBatchingServer:
             register_busy_fraction_collector(metrics)
             metrics.register_collector(self._collect_metrics)
         self.alloc = host_block_allocation(
-            cfg, hw, device_act_blocks(cfg, hw), generalized=generalized)
+            cfg, hw, device_act_blocks(cfg, hw, quant=quant),
+            generalized=generalized, quant=quant)
         self.act_frac = self.alloc.act_fraction
         self.controller = None
         if adaptive:
             self.controller = HybridCacheController(
-                cfg, hw, self.alloc, device_act_blocks(cfg, hw),
+                cfg, hw, self.alloc, device_act_blocks(cfg, hw, quant=quant),
                 generalized=generalized,
                 ctl=ctl if ctl is not None else
-                ControllerConfig(update_every=4), drift=self.drift)
+                ControllerConfig(update_every=4), drift=self.drift,
+                quant=quant)
         # physical block accounting, replayed per chunk from the precomputed
         # store schedule (the engine's pattern, DESIGN.md §5): host pools in
         # the Algorithm-1 split, device pools as the engine sizes them
@@ -207,14 +215,14 @@ class ContinuousBatchingServer:
             dev_kv_blocks=(dev_kv_blocks if dev_kv_blocks is not None
                            else 64),
             dev_act_blocks=(dev_act_blocks if dev_act_blocks is not None
-                            else device_act_blocks(cfg, hw)),
-            shard_factor=shards)
+                            else device_act_blocks(cfg, hw, quant=quant)),
+            shard_factor=shards, quant=quant)
         # pressure recovery (DESIGN.md §12): parked re-admission queue +
         # counters; profiled fits price resume costs in sim_time units
         self.recovery = recovery if recovery is not None else RecoveryConfig()
         self.recovery_stats = RecoveryStats(metrics)
         self.parked: List[ParkedRequest] = []
-        self.fits = cm.profile_cost_fns(cfg, hw)
+        self.fits = cm.profile_cost_fns(cfg, hw, quant=quant)
         # offload mode: per-iteration timelines drained out of the executor
         # as they complete (keeping its span store bounded) and accumulated
         # here for the measured_steps property
@@ -233,7 +241,8 @@ class ContinuousBatchingServer:
                                             prefetch_depth=prefetch_depth,
                                             plan=plan, faults=faults,
                                             watchdog_s=watchdog_s,
-                                            tracer=tracer, metrics=metrics)
+                                            tracer=tracer, metrics=metrics,
+                                            quant=quant)
         else:
             # cache donated: the slot pools update in place every chunk
             self._decode_chunk_jit = functools.partial(
@@ -308,7 +317,8 @@ class ContinuousBatchingServer:
         slots of the (donated) server cache."""
         lg, c1 = M.hybrid_prefill_batched(
             params, self.cfg, {"tokens": tokens}, kv_cap=kv_cap,
-            act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos)
+            act_cap=act_cap, kv_keep=kv_keep, last_pos=last_pos,
+            quant=self.quant)
         for key in ("k", "v", "act"):
             cache[key] = cache[key].at[:, slot_idx].set(c1[key])
         for key in ("act_pos", "kv_len", "act_len"):
@@ -323,7 +333,7 @@ class ContinuousBatchingServer:
             cache = self.plan.constrain_cache(cache)
         toks, cur, cache = M.hybrid_decode_chunk(
             params, self.cfg, cur, cache, store_sched, active_sched,
-            kv_bound=kv_bound, act_bound=act_bound)
+            kv_bound=kv_bound, act_bound=act_bound, quant=self.quant)
         if self.plan is not None:
             cache = self.plan.constrain_cache(cache)
         return toks, cur, cache
@@ -770,7 +780,8 @@ class ContinuousBatchingServer:
                                 0, ctx_tokens=int(
                                     (kv_run[s] + act_run[s])[active[s]].mean()))]
                  for s in range(n_steps)]
-        sim_results = simulate_steps(self.cfg, self.hw, specs)
+        sim_results = simulate_steps(self.cfg, self.hw, specs,
+                                     quant=self.quant)
 
         # sub-chunk bookkeeping: tokens, block replay, TTFT/TBT, retirement.
         # A pool-exhausted raise mid-replay releases every slot (the host

@@ -54,6 +54,58 @@ def test_hybrid_attention_sweep(kvh, g, d_model, norm):
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
 
 
+@pytest.mark.parametrize("kvh,g,d_model", [(1, 4, 128), (2, 3, 256)])
+@pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])
+def test_hybrid_attention_quantized_matches_dequant_ref(kvh, g, d_model, norm):
+    """int8 pools + f16 scale sidecars: the kernel's on-tile dequant (KV in
+    the kv path, ACT inside the once-per-page norm hoist) must agree with
+    the reference's dense dequantize-then-attend oracle, and stay close to
+    the fp kernel on the same values (DESIGN.md §14)."""
+    from repro.models.quant_ops import quantize
+    rng = jax.random.PRNGKey(0)
+    B, D, T = 2, 32, 16
+    P_kv, P_act = 4, 3
+    ks = jax.random.normal(rng, (P_kv, T, kvh, D)) * 0.3
+    vs = jax.random.normal(jax.random.PRNGKey(1), (P_kv, T, kvh, D)) * 0.3
+    ap = jax.random.normal(jax.random.PRNGKey(2), (P_act, T, d_model)) * 0.5
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, kvh, g, D))
+    sc = jnp.ones((d_model,))
+    wk = jax.random.normal(jax.random.PRNGKey(4), (d_model, kvh, D)) * 0.05
+    wv = jax.random.normal(jax.random.PRNGKey(5), (d_model, kvh, D)) * 0.05
+    pt = jnp.array([[0, 1, 0, 2, 3], [2, 1, 0, 0, 0]], jnp.int32)
+    pty = jnp.array([[0, 1, 0, 1, 0], [0, 0, 1, 2, 2]], jnp.int32)
+    pn = jnp.array([[16, 16, 16, 16, 9], [16, 16, 5, 0, 0]], jnp.int32)
+    kq, ksc = quantize(ks)
+    vq, vsc = quantize(vs)
+    aq, asc = quantize(ap)
+    scales = dict(k_scales=ksc, v_scales=vsc, act_scales=asc)
+    o1 = hybrid_paged_attention(q, kq, vq, aq, sc, wk, wv, pt, pty, pn,
+                                norm_type=norm, **scales)
+    o2 = hybrid_paged_attention_ref(q, kq, vq, aq, sc, wk, wv, pt, pty, pn,
+                                    norm_type=norm, **scales)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    # int8 error is bounded: close to (but not equal to) the fp kernel
+    ofp = hybrid_paged_attention(q, ks, vs, ap, sc, wk, wv, pt, pty, pn,
+                                 norm_type=norm)
+    err = float(jnp.max(jnp.abs(o1 - ofp)))
+    assert 0.0 < err < 0.05
+
+
+def test_hybrid_attention_quantized_requires_all_scales():
+    B, kvh, g, D, T, d_model = 1, 1, 2, 16, 16, 32
+    ks = jnp.zeros((1, T, kvh, D), jnp.int8)
+    ap = jnp.zeros((1, T, d_model), jnp.int8)
+    q = jnp.ones((B, kvh, g, D))
+    pt = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="k_scales"):
+        hybrid_paged_attention(q, ks, ks, ap, jnp.ones(d_model),
+                               jnp.zeros((d_model, kvh, D)),
+                               jnp.zeros((d_model, kvh, D)),
+                               pt, pt, pt, norm_type="none",
+                               k_scales=jnp.ones((1, T, kvh, 1),
+                                                 jnp.float16))
+
+
 @pytest.mark.parametrize("pages_bound", [None, 3, 5])
 def test_hybrid_attention_empty_page_compaction(pages_bound):
     """Interleaved empty pages + a static pages_bound: the compacted grid
