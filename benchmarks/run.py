@@ -22,6 +22,7 @@ MODULES = [
     "fig15_policy_ablation",
     "ratio_sweep",
     "serving_bench",
+    "host_attn_bench",
     "sharded_bench",
     "beyond_paper",
     "roofline",

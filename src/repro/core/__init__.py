@@ -3,15 +3,17 @@ from repro.core.blocks import (BLOCK_TOKENS, BlockManager, BlockType, Location,
                                act_block_bytes, kv_block_bytes)
 from repro.core.controller import ControllerConfig, HybridCacheController
 from repro.core.costmodel import (HARDWARE, RTX4090, TPU_V5E, HardwareSpec,
-                                  LaneSample, LinearFit, damp_fit, ewma_refit,
-                                  fit_linear, fit_samples, make_cost_fns,
-                                  profile_cost_fns, t_load_w)
+                                  LaneSample, LinearFit,
+                                  cpu_attend_seconds_per_token, damp_fit,
+                                  ewma_refit, fit_linear, fit_samples,
+                                  make_cost_fns, profile_cost_fns, t_load_w)
 from repro.core.minibatch import (MiniBatch, RequestBlocks, balance_metric,
                                   f_b, form_minibatches)
 from repro.core.pipeline import (GenerationResult, MiniBatchSpec, StepConfig,
                                  TimelineResult, simulate_generation,
                                  simulate_step, simulate_steps)
 from repro.core.policy import (HostAllocation, host_block_allocation,
+                               host_block_allocation_threeway,
                                next_block_kind, policy_act_ratio,
                                request_block_split, device_act_blocks,
                                store_act_schedule)

@@ -64,6 +64,11 @@ class LogicalBlock:
     # every block is when the manager has quant=None).
     dtype: str = ""
     scale_dtype: Optional[str] = None
+    # host-attend residency tag (DESIGN.md §15): a HOST KV block placed on
+    # the cpu lane — attended in place by the host executor, never loaded
+    # over PCIe and never regenerated.  Only meaningful for KV@HOST; a
+    # demotion to ACT or a migration to DEVICE clears it.
+    host_attend: bool = False
 
     @property
     def full(self) -> bool:
@@ -222,6 +227,8 @@ class BlockManager:
         key = (blk.kind, blk.location, new_loc)
         self.transitions[key] = self.transitions.get(key, 0) + 1
         blk.location, blk.pbn = new_loc, pbn
+        if new_loc == Location.DEVICE:
+            blk.host_attend = False     # cpu-lane tag is host-only residency
         return True
 
     def migrate(self, rid: int, kind: BlockType, new_loc: Location) -> int:
@@ -256,12 +263,29 @@ class BlockManager:
             self.pools[(blk.kind, blk.location)].free(blk.pbn)
             blk.kind, blk.location, blk.pbn = BlockType.ACT, new.location, new.pbn
             blk.dtype, blk.scale_dtype = new.dtype, new.scale_dtype
+            blk.host_attend = False     # ACT blocks regenerate, never cpu-attend
             moved += 1
         if moved:
             key = (BlockType.KV, BlockType.ACT)
             self.kind_transitions[key] = \
                 self.kind_transitions.get(key, 0) + moved
         return moved
+
+    # -- cpu-attend lane residency (DESIGN.md §15) ----------------------------
+    def tag_host_attend(self, rid: int, on: bool = True) -> int:
+        """Set the cpu-lane residency tag on every HOST KV block of a
+        request (the engine routes a whole spilled KV region to the host
+        executor at once).  Only KV@HOST blocks are eligible; returns how
+        many blocks changed state."""
+        changed = 0
+        for blk in self.tables[rid]:
+            eligible = (blk.kind == BlockType.KV
+                        and blk.location == Location.HOST)
+            target = bool(on) and eligible
+            if blk.host_attend != target:
+                blk.host_attend = target
+                changed += 1
+        return changed
 
     def free_blocks(self, kind: BlockType) -> int:
         """Total free capacity of ``kind`` across both tiers."""
@@ -335,6 +359,7 @@ class BlockManager:
             "act_tokens": sum(b.ntokens for b in t if b.kind == BlockType.ACT),
             "host_blocks": sum(1 for b in t if b.location == Location.HOST),
             "dev_blocks": sum(1 for b in t if b.location == Location.DEVICE),
+            "host_attend_blocks": sum(1 for b in t if b.host_attend),
         }
 
     def context_len(self, rid: int) -> int:

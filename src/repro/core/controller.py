@@ -44,7 +44,8 @@ from repro.configs.base import ModelConfig
 from repro.core import costmodel as cm
 from repro.core.costmodel import LaneSample, LinearFit, ewma_refit
 from repro.core.pipeline import TimelineResult
-from repro.core.policy import HostAllocation, host_block_allocation
+from repro.core.policy import (HostAllocation, host_block_allocation,
+                               host_block_allocation_threeway)
 
 
 @dataclass(frozen=True)
@@ -81,10 +82,10 @@ class HybridCacheController:
 
     def __init__(self, cfg: ModelConfig, hw: cm.HardwareSpec,
                  alloc: HostAllocation, n_act_gpu_blocks: int, *,
-                 fits: Optional[Tuple[LinearFit, LinearFit]] = None,
+                 fits: Optional[Tuple[LinearFit, ...]] = None,
                  generalized: bool = False,
                  ctl: ControllerConfig = ControllerConfig(), drift=None,
-                 quant=None):
+                 quant=None, cpu: bool = False):
         self.cfg, self.hw, self.ctl = cfg, hw, ctl
         # optional QuantConfig: retargeting must price the same (quantized)
         # block bytes the engine allocates, or Algorithm 1 would re-balance
@@ -97,14 +98,26 @@ class HybridCacheController:
         self.drift = drift
         self.generalized = generalized
         self.n_act_gpu_blocks = n_act_gpu_blocks
+        # ``cpu=True`` enables the three-way retarget (DESIGN.md §15):
+        # Algorithm 1 re-runs with the cpu-attend lane fit and the target
+        # also carries cpu_blocks.  False (the default) is the two-way
+        # paper control law, bit-for-bit.
+        self.cpu = bool(cpu)
         prior = (fits if fits is not None
-                 else cm.profile_cost_fns(cfg, hw, quant=quant))
-        self.prior_gen, self.prior_load = prior
-        self.fit_gen, self.fit_load = prior
+                 else cm.profile_cost_fns(cfg, hw, quant=quant, cpu=cpu))
+        self.prior_gen, self.prior_load = prior[0], prior[1]
+        self.fit_gen, self.fit_load = prior[0], prior[1]
+        if self.cpu:
+            pc = (prior[2] if len(prior) > 2
+                  else cm.profile_cost_fns(cfg, hw, quant=quant, cpu=True)[2])
+            self.prior_cpu = self.fit_cpu = pc
+        else:
+            self.prior_cpu = self.fit_cpu = None
         self.alloc = alloc
-        self.total_host = alloc.total_blocks
+        self.total_host = alloc.total_blocks + alloc.cpu_blocks
         self._gen: Deque[LaneSample] = deque(maxlen=ctl.max_samples)
         self._load: Deque[LaneSample] = deque(maxlen=ctl.max_samples)
+        self._cpu: Deque[LaneSample] = deque(maxlen=ctl.max_samples)
         self._since_update = 0
         self.updates = 0                 # refit+retarget passes run
         self.migrated_blocks = 0         # blocks stepped across all updates
@@ -114,7 +127,8 @@ class HybridCacheController:
     # ---------------------------------------------------------------- observe
     def observe(self, results: Sequence[TimelineResult],
                 kv_tokens: Sequence[float], act_tokens: Sequence[float],
-                sim: Optional[Sequence[TimelineResult]] = None) -> int:
+                sim: Optional[Sequence[TimelineResult]] = None,
+                cpu_tokens: Optional[Sequence[float]] = None) -> int:
         """Fold per-step timelines into the lane sample windows.
 
         kv_tokens / act_tokens: per-step host context token counts (batch
@@ -162,6 +176,14 @@ class HybridCacheController:
             if t_gen > 0.0 and na > 0.0:
                 self._gen.append(LaneSample(na, t_gen / L))
                 added += 1
+            # cpu-attend lane (DESIGN.md §15): host spans carry the "cpu"
+            # tag; cpu_tokens aligns per step like the other lanes
+            nc = (float(cpu_tokens[i]) if cpu_tokens is not None
+                  and i < len(cpu_tokens) else 0.0)
+            t_cpu = tb.get("cpu", 0.0)
+            if t_cpu > 0.0 and nc > 0.0:
+                self._cpu.append(LaneSample(nc, t_cpu / L))
+                added += 1
         self._since_update += 1
         return added
 
@@ -181,12 +203,32 @@ class HybridCacheController:
                 self.fit_load, self.prior_load, list(self._load),
                 alpha=c.alpha, damping=c.damping,
                 intercept_scale_tokens=c.intercept_scale_tokens)
+        if self.cpu and len(self._cpu) >= c.min_samples:
+            self.fit_cpu = ewma_refit(
+                self.fit_cpu, self.prior_cpu, list(self._cpu),
+                alpha=c.alpha, damping=c.damping,
+                intercept_scale_tokens=c.intercept_scale_tokens)
         return self.fit_gen, self.fit_load
 
     # --------------------------------------------------------------- retarget
     def target_allocation(self) -> HostAllocation:
         """Algorithm 1 under the current (refit) fits, re-expressed on the
-        fixed host-block total: the target conserves act+kv exactly."""
+        fixed host-block total: the target conserves act+kv(+cpu) exactly."""
+        if self.cpu:
+            ref = host_block_allocation_threeway(
+                self.cfg, self.hw, self.n_act_gpu_blocks,
+                fits=(self.fit_gen, self.fit_load, self.fit_cpu),
+                generalized=self.generalized, quant=self.quant)
+            tot = ref.total_blocks + ref.cpu_blocks
+            if tot <= 0:
+                return self.alloc
+            act = int(round(ref.act_blocks / tot * self.total_host))
+            act = min(max(act, 0), self.total_host)
+            cpu = int(round(ref.cpu_blocks / tot * self.total_host))
+            cpu = min(max(cpu, 0), self.total_host - act)
+            return dataclasses.replace(
+                self.alloc, act_blocks=act, cpu_blocks=cpu,
+                kv_blocks=self.total_host - act - cpu)
         ref = host_block_allocation(
             self.cfg, self.hw, self.n_act_gpu_blocks,
             fits=(self.fit_gen, self.fit_load), generalized=self.generalized,
@@ -210,14 +252,23 @@ class HybridCacheController:
         self.updates += 1
         target = self.target_allocation()
         delta = target.act_blocks - self.alloc.act_blocks
-        if abs(delta) <= c.deadband_blocks(self.total_host):
+        d_cpu = (target.cpu_blocks - self.alloc.cpu_blocks) if self.cpu else 0
+        if max(abs(delta), abs(d_cpu)) <= c.deadband_blocks(self.total_host):
             self.frac_history.append(self.alloc.act_fraction)
             return self.alloc
         bound = c.bound_blocks(self.total_host)
         step = int(np.clip(delta, -bound, bound))
         act = self.alloc.act_blocks + step
         self.migrated_blocks += abs(step)
-        out = dataclasses.replace(self.alloc, act_blocks=act,
-                                  kv_blocks=self.total_host - act)
+        cpu = self.alloc.cpu_blocks
+        if self.cpu:
+            # cpu-lane step shares the migration bound and may not push kv
+            # negative: kv = total - act - cpu stays >= 0
+            s_cpu = int(np.clip(d_cpu, -bound, bound))
+            s_cpu = min(s_cpu, self.total_host - act - cpu)
+            cpu = max(cpu + s_cpu, 0)
+            self.migrated_blocks += abs(s_cpu)
+        out = dataclasses.replace(self.alloc, act_blocks=act, cpu_blocks=cpu,
+                                  kv_blocks=self.total_host - act - cpu)
         self.frac_history.append(out.act_fraction)
         return out

@@ -43,6 +43,15 @@ class HardwareSpec:
     # amortizes over ``chunk_steps`` iterations (DESIGN.md §10).  Tens of
     # microseconds is typical for XLA dispatch + a small D2H readback.
     dispatch_overhead: float = 40e-6
+    # Host-compute attention lane (DESIGN.md §15): peak host FLOP/s across
+    # all cores and host DRAM bandwidth.  Like ``host_mem`` these describe
+    # the ONE shared host, so ``scale_for_shards`` must leave them alone.
+    # Defaults are a mid-range server CPU (~32 cores AVX-512, 8-ch DDR).
+    host_flops: float = 2e12
+    host_dram_bw: float = 150e9
+    # Achievable fraction of host peak for the decode-attention GEMV shape
+    # (bandwidth-bound, numpy single-stream): far below the device's mfu.
+    host_mfu: float = 0.25
 
 
 # The paper's evaluation machine (RTX 4090, PCIe 4.0 x16, 882 GB host DRAM).
@@ -87,7 +96,10 @@ def scale_for_shards(hw: HardwareSpec, shards: int) -> HardwareSpec:
     scaled: the host tier is one shared DRAM pool.  Per-dispatch overhead
     is NOT scaled either: the dispatch tax is paid once per jitted call
     regardless of how many devices participate, which is exactly why the
-    PR 4 dispatch-count guarantees must hold per mesh.
+    PR 4 dispatch-count guarantees must hold per mesh.  The host-compute
+    terms (``host_flops``/``host_dram_bw``/``host_mfu``, DESIGN.md §15)
+    follow the host_mem precedent: one shared CPU + DRAM complex serves
+    every shard, so the cpu-attend lane does NOT get faster with shards.
 
     ``shards=1`` returns ``hw`` unchanged (bit-for-bit — the single-shard
     policy numbers are the same object), so every consumer can take the
@@ -131,6 +143,21 @@ def attn_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
     return 2.0 * 2 * ctx * cfg.q_dim
 
 
+def cpu_attend_seconds_per_token(cfg: ModelConfig, hw: HardwareSpec,
+                                 quant=None) -> float:
+    """Host-attention cost per SPILLED CONTEXT TOKEN per layer (§15).
+
+    One context token costs ``attn_flops_per_token(cfg, 1)`` MACs on the
+    host cores and one KV row read out of host DRAM; the lane runs at
+    whichever roofline binds.  Quantized arenas read fewer bytes but pay
+    the same FLOPs (dequant is fused into the streaming pass).
+    """
+    from repro.core.quant import kv_bytes_per_token
+    t_flops = attn_flops_per_token(cfg, 1) / (hw.host_flops * hw.host_mfu)
+    t_bytes = kv_bytes_per_token(cfg, quant) / hw.host_dram_bw
+    return max(t_flops, t_bytes)
+
+
 def forward_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
     """Per-layer per-token decode forward (QKV+proj+FFN+attention)."""
     d, f = cfg.d_model, cfg.d_ff
@@ -143,8 +170,11 @@ def forward_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
     return proj + ffn + attn_flops_per_token(cfg, ctx)
 
 
-def make_cost_fns(cfg: ModelConfig, hw: HardwareSpec, quant=None):
-    """-> (t_kv_gen(n_tokens), t_load_kv(n_tokens), t_load_act(n_tokens)).
+def make_cost_fns(cfg: ModelConfig, hw: HardwareSpec, quant=None, cpu=False):
+    """-> (t_kv_gen(n_tokens), t_load_kv(n_tokens), t_load_act(n_tokens)),
+    plus ``t_cpu_attend(n_tokens)`` as a fourth element when ``cpu=True``
+    (the DESIGN.md §15 host-attention lane; default keeps the 3-tuple
+    contract every existing caller unpacks).
 
     Per layer, batch-aggregate token counts (matching Algorithm 1's units:
     "#blocks" scaled by BLOCK_TOKENS happens at the caller).  ``quant``
@@ -169,7 +199,15 @@ def make_cost_fns(cfg: ModelConfig, hw: HardwareSpec, quant=None):
     def t_load_act(n):                   # PCIe lane (half-size block gather)
         return np.asarray(n, float) * actB / kv_bw
 
-    return t_kv_gen, t_load_kv, t_load_act
+    if not cpu:
+        return t_kv_gen, t_load_kv, t_load_act
+
+    cpuB = cpu_attend_seconds_per_token(cfg, hw, quant=quant)
+
+    def t_cpu_attend(n):                 # CPU lane (host flash attention)
+        return np.asarray(n, float) * cpuB
+
+    return t_kv_gen, t_load_kv, t_load_act, t_cpu_attend
 
 
 # =============================================================================
@@ -212,11 +250,17 @@ def fit_linear(fn: Callable, ns: Sequence[float], noise: float = 0.0,
 
 def profile_cost_fns(cfg: ModelConfig, hw: HardwareSpec,
                      sample_tokens: Sequence[int] = (256, 1024, 4096, 16384, 65536),
-                     noise: float = 0.02, quant=None) -> Tuple[LinearFit, LinearFit]:
-    """The paper's sampling step: returns (fit_kv_gen, fit_load_kv)."""
-    t_kv_gen, t_load_kv, _ = make_cost_fns(cfg, hw, quant=quant)
-    return (fit_linear(t_kv_gen, sample_tokens, noise, seed=1),
-            fit_linear(t_load_kv, sample_tokens, noise, seed=2))
+                     noise: float = 0.02, quant=None,
+                     cpu: bool = False) -> Tuple[LinearFit, ...]:
+    """The paper's sampling step: returns (fit_kv_gen, fit_load_kv), plus
+    ``fit_cpu_attend`` as a third element when ``cpu=True`` (§15 lane —
+    default keeps the 2-tuple every existing caller unpacks)."""
+    fns = make_cost_fns(cfg, hw, quant=quant, cpu=cpu)
+    fits = (fit_linear(fns[0], sample_tokens, noise, seed=1),
+            fit_linear(fns[1], sample_tokens, noise, seed=2))
+    if cpu:
+        fits += (fit_linear(fns[3], sample_tokens, noise, seed=3),)
+    return fits
 
 
 # =============================================================================

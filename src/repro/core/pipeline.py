@@ -49,6 +49,9 @@ class TimelineResult:
     pcie_busy: float
     gpu_busy: float
     traffic: Dict[str, float]           # bytes by category
+    # host-compute attention lane busy seconds (DESIGN.md §15).  0.0 for
+    # every pre-existing producer — the two-lane schema is a strict subset.
+    cpu_busy: float = 0.0
     finish: List[float] = field(default_factory=list)
     # busy seconds by task tag ("w"/"kv"/"act"/"gen"/"fwd"/"st") — the
     # per-lane samples the adaptive controller refits the cost model from
@@ -79,10 +82,12 @@ def run_timeline(tasks: List[LaneTask]) -> TimelineResult:
     """Serialise tasks per lane in list order, honouring cross-lane deps.
 
     Lanes: "pcie" (host->device, loads), "pcie_up" (device->host, stores —
-    PCIe is full duplex so stores never block loads) and "gpu" (compute).
+    PCIe is full duplex so stores never block loads), "gpu" (compute) and
+    "cpu" (host-compute attention over spilled KV, DESIGN.md §15 — runs on
+    host cores, so it overlaps every other lane).
     """
-    lane_free = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0}
-    busy = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0}
+    lane_free = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0, "cpu": 0.0}
+    busy = {"pcie": 0.0, "pcie_up": 0.0, "gpu": 0.0, "cpu": 0.0}
     tag_busy: Dict[str, float] = {}
     finish: List[float] = [0.0] * len(tasks)
     traffic: Dict[str, float] = {}
@@ -97,8 +102,8 @@ def run_timeline(tasks: List[LaneTask]) -> TimelineResult:
         finish[i] = end
     total = max(lane_free.values())
     return TimelineResult(total=total, pcie_busy=busy["pcie"],
-                          gpu_busy=busy["gpu"], traffic=traffic, finish=finish,
-                          tag_busy=tag_busy)
+                          gpu_busy=busy["gpu"], cpu_busy=busy["cpu"],
+                          traffic=traffic, finish=finish, tag_busy=tag_busy)
 
 
 # =============================================================================
@@ -115,6 +120,10 @@ class MiniBatchSpec:
     kv_dev_tokens: int = 0    # context tokens held as KV on device
     tok_recompute_tokens: int = 0   # context tokens held as raw token IDs
     ctx_tokens: int = 0       # total context per request (for attention cost)
+    # context tokens whose KV stays on host and is ATTENDED there by the cpu
+    # lane (DESIGN.md §15) — no PCIe load, no GPU regen; the partial-softmax
+    # merge folds the result into the device lane's output.
+    cpu_host_tokens: int = 0
 
 
 @dataclass(frozen=True)
@@ -127,8 +136,9 @@ def _run_timeline_arrays(tasks: List[LaneTask], n: int):
     """``run_timeline`` with every task duration an (n,) array — the same
     per-lane serialisation and cross-lane dep resolution, computed for n
     independent timelines at once.  -> (total, busy, finish), all (n,)."""
-    lane_free = {"pcie": np.zeros(n), "pcie_up": np.zeros(n), "gpu": np.zeros(n)}
-    busy = {"pcie": np.zeros(n), "pcie_up": np.zeros(n), "gpu": np.zeros(n)}
+    lanes = ("pcie", "pcie_up", "gpu", "cpu")
+    lane_free = {ln: np.zeros(n) for ln in lanes}
+    busy = {ln: np.zeros(n) for ln in lanes}
     tag_busy: Dict[str, np.ndarray] = {}
     finish: List[np.ndarray] = [np.zeros(n)] * len(tasks)
     for i, t in enumerate(tasks):
@@ -142,8 +152,9 @@ def _run_timeline_arrays(tasks: List[LaneTask], n: int):
         if t.tag:
             tag_busy[t.tag] = tag_busy.get(t.tag, np.zeros(n)) + t.dur
         finish[i] = end
-    total = np.maximum(np.maximum(lane_free["pcie"], lane_free["pcie_up"]),
-                       lane_free["gpu"])
+    total = np.zeros(n)
+    for ln in lanes:
+        total = np.maximum(total, lane_free[ln])
     return total, busy, finish, tag_busy
 
 
@@ -192,6 +203,8 @@ def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
     tok_rec = f("tok_recompute_tokens")
     n_req = f("n_requests")
     ctx = f("ctx_tokens")
+    cpu_host = f("cpu_host_tokens")
+    t_cpu_tok = cm.cpu_attend_seconds_per_token(cfg, hw, quant=quant)
 
     tasks: List[LaneTask] = []          # dur as (n,) arrays
     idx: Dict[Tuple, int] = {}
@@ -234,10 +247,18 @@ def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
             add(("gen", l, m), "gpu", t_gen,
                 deps=[("act", l, m)], tag="gen")
 
+            # CPU: host attention over spilled KV tokens (DESIGN.md §15).
+            # Needs the previous layer's output (the query), overlaps this
+            # layer's KV-gen / loads on the gpu and pcie lanes; the fwd
+            # below consumes its partial via the LSE merge.  No PCIe bytes.
+            add(("cpu", l, m), "cpu", cpu_host[:, m] * t_cpu_tok,
+                deps=[("fwd", l - 1, m)], tag="cpu")
+
             # GPU: forward for the new token of every request in the mb
             fwd_flops = n_req[:, m] * cm.forward_flops_per_token(cfg, ctx[:, m])
             add(("fwd", l, m), "gpu", fwd_flops / eff,
-                deps=[("w", l), ("kv", l, m), ("gen", l, m)], tag="fwd")
+                deps=[("w", l), ("kv", l, m), ("gen", l, m), ("cpu", l, m)],
+                tag="fwd")
 
             # PCIe upstream: store the new token's KV/ACT back to host
             st_bytes = n_req[:, m] * max(kvB, actB)
@@ -249,7 +270,7 @@ def simulate_steps(cfg: ModelConfig, hw: cm.HardwareSpec,
     return [
         TimelineResult(
             total=float(total[s]), pcie_busy=float(busy["pcie"][s]),
-            gpu_busy=float(busy["gpu"][s]),
+            gpu_busy=float(busy["gpu"][s]), cpu_busy=float(busy["cpu"][s]),
             traffic={k: float(v[s]) for k, v in traffic.items()},
             finish=[float(fi[s]) for fi in finish],
             tag_busy={k: float(v[s]) for k, v in tag_busy.items()})

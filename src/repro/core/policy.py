@@ -23,6 +23,11 @@ class HostAllocation:
     kv_blocks: int
     act_init: int
     kv_init: int
+    # host KV blocks placed on the CPU-attend lane (DESIGN.md §15): they
+    # occupy the same host KV arena as ``kv_blocks`` but are ATTENDED on
+    # host cores instead of loaded over PCIe.  0 keeps the two-way paper
+    # allocation bit-identical for every existing caller.
+    cpu_blocks: int = 0
 
     @property
     def total_blocks(self) -> int:
@@ -122,6 +127,103 @@ def host_block_allocation(cfg: ModelConfig, hw: HardwareSpec,
     return HostAllocation(act_blocks=act_init + act_rem,
                           kv_blocks=kv_init + kv_rem,
                           act_init=act_init, kv_init=kv_init)
+
+
+def alloc_remaining_threeway(cfg: ModelConfig, hw: HardwareSpec,
+                             fit_gen: LinearFit, fit_load: LinearFit,
+                             fit_cpu: LinearFit,
+                             act_init: int, kv_init: int,
+                             generalized: bool = False,
+                             quant=None) -> Tuple[int, int, int]:
+    """Three-way Algorithm 1 (DESIGN.md §15): fill remaining host memory so
+    all three lanes finish together.
+
+        S_ACT*a + S_KV*(k + c) = M_rem
+        T_gen(a)  = T_load(k)            (gpu regen vs pcie load)
+        T_gen(a)  = T_cpu(c)             (gpu regen vs host attend)
+
+    ``c`` blocks stay KV-shaped in the host arena but are attended on host
+    cores — no PCIe bytes, no regen FLOPs.  Negative corners clamp to the
+    best feasible two-way split (the 2x2 system over the surviving lanes).
+    Returns (act_blocks, kv_blocks, cpu_blocks).
+    """
+    S_act = act_block_bytes(cfg, quant=quant)
+    S_kv = kv_block_bytes(cfg, quant=quant)
+    S_weight = cfg.num_params() * cfg.bytes_per_param()
+    M_occ = S_act * act_init + S_kv * kv_init
+    M_rem = hw.host_mem - S_weight - M_occ
+    if M_rem <= 0:
+        return 0, 0, 0
+    ga = fit_gen.slope * BLOCK_TOKENS
+    lk = fit_load.slope * BLOCK_TOKENS
+    cc = fit_cpu.slope * BLOCK_TOKENS
+    c1 = fit_load.intercept - fit_gen.intercept
+    c2 = fit_cpu.intercept - fit_gen.intercept
+    if generalized:
+        la = (fit_load.slope * BLOCK_TOKENS
+              * Q.act_bytes_per_token(cfg, quant)
+              / Q.kv_bytes_per_token(cfg, quant))
+        ga = ga + la
+    A = np.array([[S_act, S_kv, S_kv],
+                  [ga, -lk, 0.0],
+                  [ga, 0.0, -cc]], float)
+    b = np.array([M_rem, c1, c2], float)
+    try:
+        a, k, c = np.linalg.solve(A, b)
+    except np.linalg.LinAlgError:
+        a, k, c = -1.0, -1.0, -1.0        # degenerate: fall through to 2-way
+    if a >= 0 and k >= 0 and c >= 0:
+        return int(a), int(k), int(c)
+    # corner clamps: drop the lane that went negative, re-balance the rest
+    if c < 0:                             # cpu lane never pays: paper 2-way
+        a2, k2 = alloc_remaining(cfg, hw, fit_gen, fit_load, act_init,
+                                 kv_init, generalized=generalized,
+                                 quant=quant)
+        return a2, k2, 0
+    if a < 0:                             # regen never pays: pcie vs cpu
+        # S_kv*(k + c) = M_rem ; lk*k + c1' = cc*c + c2'  (intercept diff)
+        tot = M_rem / S_kv
+        d = fit_cpu.intercept - fit_load.intercept
+        if lk + cc > 0:
+            k2 = float(np.clip((cc * tot + d) / (lk + cc), 0.0, tot))
+        else:
+            k2 = 0.0
+        return 0, int(k2), int(tot - k2)
+    # k < 0: pcie never pays (all loads slower than both): gen vs cpu
+    A2 = np.array([[S_act, S_kv], [ga, -cc]], float)
+    b2 = np.array([M_rem, c2], float)
+    try:
+        a2, c2b = np.linalg.solve(A2, b2)
+    except np.linalg.LinAlgError:
+        return 0, 0, int(M_rem // S_kv)
+    if a2 < 0:
+        return 0, 0, int(M_rem // S_kv)
+    if c2b < 0:
+        return int(M_rem // S_act), 0, 0
+    return int(a2), 0, int(c2b)
+
+
+def host_block_allocation_threeway(cfg: ModelConfig, hw: HardwareSpec,
+                                   n_act_gpu_blocks: int,
+                                   fits=None, generalized: bool = False,
+                                   quant=None) -> HostAllocation:
+    """Three-way Algorithm 1 top level -> HostAllocation with cpu_blocks.
+
+    ``fits``: (fit_gen, fit_load, fit_cpu) — e.g. ``profile_cost_fns(...,
+    cpu=True)`` or the controller's online refits.  The init step (pipeline
+    idleness vs weight streaming) is unchanged from the paper; only the
+    fill step becomes a three-lane balance.
+    """
+    if fits is None:
+        fits = profile_cost_fns(cfg, hw, quant=quant, cpu=True)
+    fit_gen, fit_load, fit_cpu = fits
+    act_init, kv_init = initial_cache_allocation(
+        cfg, hw, fit_gen, fit_load, n_act_gpu_blocks)
+    a, k, c = alloc_remaining_threeway(cfg, hw, fit_gen, fit_load, fit_cpu,
+                                       act_init, kv_init,
+                                       generalized=generalized, quant=quant)
+    return HostAllocation(act_blocks=act_init + a, kv_blocks=kv_init + k,
+                          act_init=act_init, kv_init=kv_init, cpu_blocks=c)
 
 
 def request_block_split(alloc: HostAllocation, context_blocks: int) -> Tuple[int, int]:

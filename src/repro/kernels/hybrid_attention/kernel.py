@@ -67,11 +67,16 @@ def _hybrid_attn_kernel(
         q_ref, k_ref, v_ref, act_ref, scale_ref, wk_ref, wv_ref,
         # outputs / scratch
         *rest,
-        norm_type: str, eps: float, sm_scale: float, quantized: bool):
+        norm_type: str, eps: float, sm_scale: float, quantized: bool,
+        return_lse: bool):
     if quantized:
-        ks_ref, vs_ref, as_ref, o_ref, acc, m_s, l_s, a_norm = rest
+        ks_ref, vs_ref, as_ref, *rest = rest
     else:
         ks_ref = vs_ref = as_ref = None
+    if return_lse:
+        o_ref, m_ref, l_ref, acc, m_s, l_s, a_norm = rest
+    else:
+        m_ref = l_ref = None
         o_ref, acc, m_s, l_s, a_norm = rest
     b = pl.program_id(0)
     p = pl.program_id(1)
@@ -145,18 +150,31 @@ def _hybrid_attn_kernel(
     @pl.when(p == n_pages - 1)
     def _finalize():
         o_ref[0, 0] = (acc[h] / jnp.maximum(l_s[h], 1e-30)).astype(o_ref.dtype)
+        if return_lse:
+            # partial-softmax statistics in the sm_scale'd score basis: m is
+            # the running masked max (NEG_INF when the request attends over
+            # zero tokens), l the sum of exp(s - m).  Enough to merge this
+            # partition with any disjoint partition's (out, m, l) exactly.
+            m_ref[0, 0] = m_s[h]
+            l_ref[0, 0] = l_s[h]
 
 
 @functools.partial(jax.jit,
                    static_argnames=("norm_type", "eps", "pages_bound",
-                                    "interpret"))
+                                    "interpret", "return_lse"))
 def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
                            page_table, page_type, page_ntok, *,
                            k_scales=None, v_scales=None, act_scales=None,
                            norm_type: str = "layernorm", eps: float = 1e-5,
                            pages_bound: int | None = None,
-                           interpret: bool = True):
+                           interpret: bool = True,
+                           return_lse: bool = False):
     """-> (B, KVH, G, D) attention output over the hybrid paged cache.
+
+    return_lse: also return the per-request log-sum-exp partials
+    ``(m, l)``, each (B, KVH, G, 1) float32, where m is the masked score
+    max (NEG_INF basis) and l the sum of exp(s - m) over this partition's
+    tokens — the statistics needed to merge with a disjoint partition.
 
     pages_bound: static upper bound on any request's USED page count; the
     page grid dimension shrinks to it (default: MAXP).  The caller (which
@@ -238,11 +256,22 @@ def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
         ]
         operands += [k_scales, v_scales, act_scales]
 
+    out_specs = pl.BlockSpec((1, 1, G, D), o_index)
+    out_shape = jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype)
+    if return_lse:
+        # m/l flush per-head on the finalize page exactly like o, so their
+        # blocks ride the same clamped index map with a width-1 last dim
+        lse_spec = pl.BlockSpec((1, 1, G, 1), o_index)
+        out_specs = [out_specs, lse_spec, lse_spec]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B, KVH, G, 1), jnp.float32),
+                     jax.ShapeDtypeStruct((B, KVH, G, 1), jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B, PB, KVH),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, G, D), o_index),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((KVH, G, D), jnp.float32),
             pltpu.VMEM((KVH, G, 1), jnp.float32),
@@ -252,9 +281,12 @@ def hybrid_paged_attention(q, k_pages, v_pages, act_pages, norm_scale, wk, wv,
     )
     out = pl.pallas_call(
         functools.partial(_hybrid_attn_kernel, norm_type=norm_type, eps=eps,
-                          sm_scale=sm_scale, quantized=quantized),
+                          sm_scale=sm_scale, quantized=quantized,
+                          return_lse=return_lse),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(pt, pty, pn, n_used, *operands)
+    if return_lse:
+        return tuple(out)
     return out

@@ -9,13 +9,18 @@ from jax import lax
 def hybrid_paged_attention_ref(q, k_pages, v_pages, act_pages, norm_scale,
                                wk, wv, page_table, page_type, page_ntok, *,
                                k_scales=None, v_scales=None, act_scales=None,
-                               norm_type: str = "layernorm", eps: float = 1e-5):
+                               norm_type: str = "layernorm", eps: float = 1e-5,
+                               return_lse: bool = False):
     """Gathers every page, recomputes ACT pages via Eq. 7, runs plain softmax.
 
     Quantized oracle (DESIGN.md §14): when scale sidecars are given, the
     int8 pools are dequantized densely up front (the opposite strategy of
     the kernel's on-tile dequant) and the rest of the oracle runs unchanged
     — it answers "what SHOULD attention over these codes produce".
+
+    return_lse mirrors the kernel flag: additionally return ``(m, l)``
+    partials, (B, KVH, G, 1) float32 each, on the kernel's NEG_INF masked-max
+    basis (m = -1e30 for a zero-token partition, l = sum exp(s - m)).
     """
     if k_scales is not None:
         k_pages = k_pages.astype(jnp.float32) * k_scales.astype(jnp.float32)
@@ -40,7 +45,8 @@ def hybrid_paged_attention_ref(q, k_pages, v_pages, act_pages, norm_scale,
     k_act = jnp.einsum("ptd,dhe->pthe", a, wk.astype(jnp.float32))
     v_act = jnp.einsum("ptd,dhe->pthe", a, wv.astype(jnp.float32))
 
-    out = []
+    NEG_INF = -1e30
+    out, ms, ls = [], [], []
     for b in range(B):
         ks, vs, mask = [], [], []
         for p in range(MAXP):
@@ -64,4 +70,13 @@ def hybrid_paged_attention_ref(q, k_pages, v_pages, act_pages, norm_scale,
         s_ = jnp.where(valid[None, None, :], s_, -jnp.inf)
         p_ = jax.nn.softmax(s_, axis=-1)
         out.append(jnp.einsum("hgs,shd->hgd", p_, v))
-    return jnp.stack(out, 0).astype(q.dtype)
+        if return_lse:
+            sm = jnp.where(valid[None, None, :], s_, NEG_INF)
+            m = jnp.max(sm, axis=-1, keepdims=True)           # (KVH, G, 1)
+            e = jnp.where(valid[None, None, :], jnp.exp(sm - m), 0.0)
+            ms.append(m)
+            ls.append(jnp.sum(e, axis=-1, keepdims=True))
+    o = jnp.stack(out, 0).astype(q.dtype)
+    if return_lse:
+        return o, jnp.stack(ms, 0), jnp.stack(ls, 0)
+    return o

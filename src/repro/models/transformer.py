@@ -324,6 +324,34 @@ def _masked_decode_attn(q, k_cache, v_cache, valid):
     return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
+#: finite masked-score basis shared with the host attention lane and the
+#: hybrid kernel ref oracle — an all-masked partition yields (m=NEG_INF,
+#: l=0), the identity element under partial merging (DESIGN.md §15)
+NEG_INF = -1e30
+
+
+def _partial_masked_attn(q, k_cache, v_cache, valid):
+    """``_masked_decode_attn`` exposing flash-attention partials: returns
+    the NORMALISED partition output plus its (m, l) log-sum-exp stats, so
+    two disjoint key partitions merge exactly (``host_attn.merge_partials``)
+    into what the dense softmax over their union would produce.
+
+    -> (o (B,KVH,G,D) f32, m (B,KVH,G,1) f32, l (B,KVH,G,1) f32).
+    """
+    B, _, H, D = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache.astype(jnp.float32)) / math.sqrt(D)
+    vm = valid[:, None, None, :]
+    s = jnp.where(vm, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(vm, jnp.exp(s - m), 0.0)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", e, v_cache.astype(jnp.float32))
+    return o / jnp.maximum(l, 1e-30), m, l
+
+
 def ffn_apply(p, cfg: ModelConfig, x, is_moe: bool, expert_sharding=None):
     if cfg.d_ff == 0:
         return x * 0, 0.0

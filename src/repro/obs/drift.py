@@ -34,9 +34,9 @@ from typing import Deque, Dict, List, Optional, Tuple
 from .metrics import MetricsRegistry
 
 #: lanes tracked: download copies, upload stores (``tag_busy["st"]`` — the
-#: TimelineResult schema carries no dedicated pcie_up field), compute, and
-#: wall total
-DRIFT_LANES = ("pcie", "pcie_up", "gpu", "total")
+#: TimelineResult schema carries no dedicated pcie_up field), device
+#: compute, host-attention compute (``cpu_busy``, PR 9), and wall total
+DRIFT_LANES = ("pcie", "pcie_up", "gpu", "cpu", "total")
 
 #: default flag threshold.  The controller refit clamps each window's
 #: correction to ~1/damping (damping=4 -> 25%); persistent relative drift
@@ -51,6 +51,8 @@ def _lane_busy(res, lane: str) -> float:
         return float(getattr(res, "gpu_busy", 0.0))
     if lane == "pcie_up":
         return float((getattr(res, "tag_busy", None) or {}).get("st", 0.0))
+    if lane == "cpu":
+        return float(getattr(res, "cpu_busy", 0.0) or 0.0)
     return float(getattr(res, "pcie_busy", 0.0) or 0.0)
 
 

@@ -1,14 +1,17 @@
 """Host-offload runtime: weight streaming overlapped with KV regeneration.
 
-The executable counterpart of the two-lane pipeline model in
-``core/pipeline.py`` (DESIGN.md §8): pinned host pools, a double-buffered
-weight streamer, a layer-granular executor that is token-exact against the
-device-resident decode loop, and measured lane timelines in the analytic
-simulator's schema.
+The executable counterpart of the pipeline model in ``core/pipeline.py``
+(DESIGN.md §8, §15): pinned host pools, a double-buffered weight streamer,
+a cpu attention lane that attends over spilled KV blocks in place, a
+layer-granular executor that is token-exact against the device-resident
+decode loop, and measured lane timelines in the analytic simulator's
+schema.
 """
 from repro.offload.executor import OffloadExecutor, stack_cache
 from repro.offload.faults import (FAULT_KINDS, FaultEvent, FaultPlan,
                                   TransientCopyError)
+from repro.offload.host_attn import (HostAttnExecutor, host_flash_attention,
+                                     merge_partials)
 from repro.offload.host_pool import (HostBlockPool, HostWeightPool, Region,
                                      kv_region_blocks, make_spill_pool)
 from repro.offload.streamer import WeightStreamer, donate_buffers

@@ -41,6 +41,7 @@ from repro.models import layers as nn
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.quant_ops import fake_quant
+from repro.offload.host_attn import HostAttnExecutor, merge_partials
 from repro.offload.host_pool import HostWeightPool, Region, ShardedRegion
 from repro.offload.streamer import (ShardedWeightLanes, WeightStreamer,
                                     donate_buffers)
@@ -120,6 +121,12 @@ class OffloadExecutor:
             self.timeline.tracer = tracer
         self.plan = plan if (plan is not None and plan.mesh.size > 1) else None
         self.faults = faults
+        # cpu attention lane (DESIGN.md §15): created lazily on the first
+        # host-attend decode; shares the timeline/fault-plan/metrics wiring
+        self._watchdog_s = watchdog_s
+        self._max_copy_retries = max_copy_retries
+        self._metrics = metrics
+        self.host_lane: Optional[HostAttnExecutor] = None
         self.pool = HostWeightPool(cfg, params, plan=self.plan)
         if self.plan is not None:
             self.streamer = ShardedWeightLanes(
@@ -149,6 +156,16 @@ class OffloadExecutor:
         self._pre = jax.jit(self._pre_impl)
         self._layer = jax.jit(self._layer_impl, donate_argnums=(1, 2, 3),
                               static_argnames=("kv_bound", "act_bound"))
+        # host-attend stage split (DESIGN.md §15): qk → [host job ‖ device
+        # partial] → merge; three dispatches per layer instead of one
+        self._ha_qk = jax.jit(self._ha_qk_impl)
+        self._ha_dev_partial = jax.jit(self._ha_dev_partial_impl,
+                                       donate_argnums=(1,),
+                                       static_argnames=("act_bound",))
+        self._ha_dev_partial_kv = jax.jit(self._ha_dev_partial_kv_impl,
+                                          donate_argnums=(1, 2, 3),
+                                          static_argnames=("act_bound",))
+        self._ha_merge = jax.jit(self._ha_merge_impl)
         self._post = jax.jit(self._post_impl)
         self._prefill_embed = jax.jit(self._prefill_embed_impl)
         self._prefill_layer = jax.jit(self._prefill_layer_impl,
@@ -179,6 +196,109 @@ class OffloadExecutor:
                                     act_len, store, sincos_new, sincos_act,
                                     self.is_moe, kv_bound=kv_bound,
                                     act_bound=act_bound, quant=self.quant)
+
+    # host-attend layer split (DESIGN.md §15).  The three stages partition
+    # ``M._hybrid_layer_step`` term for term: the union of the host
+    # partition (arena KV rows [0, kv_len)) and the device partition
+    # (recomputed ACT region + the new token's own row) is EXACTLY the
+    # oracle's valid set, so the merged softmax matches the dense one.
+    def _ha_qk_impl(self, lp, h, sincos_new):
+        """Stage A: projections for the new token.  Returns the roped query
+        (synced host-side to seed the cpu-lane job) plus the exact and
+        stored K/V rows both later stages need."""
+        cfg = self.cfg
+        act_in = h[:, 0]                                 # A^i of new token
+        hn = nn.apply_norm(h, lp["ln1"], cfg.norm_type)
+        q, k, v = T._qk(lp["attn"], cfg, hn)
+        if sincos_new is not None:
+            q = nn.apply_rope(q, *sincos_new)
+            k = nn.apply_rope(k, *sincos_new)
+        dt = jnp.dtype(cfg.dtype)
+        if self.quant is not None:
+            k_store, v_store = fake_quant(k[:, 0]), fake_quant(v[:, 0])
+            act_store = fake_quant(act_in).astype(dt)
+        else:
+            k_store, v_store = k[:, 0], v[:, 0]
+            act_store = act_in.astype(dt)
+        return q, k[:, 0], v[:, 0], k_store, v_store, act_store
+
+    def _ha_dev_core(self, lp, ac, act_len, store, sincos_act, q, k0, v0,
+                     k_store, v_store, act_store, act_b):
+        """Device partial: KV Gen over the ACT prefix (Eq. 7), new-token
+        overrides, then partial attention over [ACT region ; own row]."""
+        cfg = self.cfg
+        B = ac.shape[0]
+        arangeB = jnp.arange(B)
+        dt = jnp.dtype(cfg.dtype)
+        an = nn.apply_norm(ac[:, :act_b], lp["ln1"], cfg.norm_type)
+        ka = (an @ lp["attn"]["wk"]).reshape(B, act_b, cfg.num_kv_heads,
+                                             cfg.head_dim)
+        va = (an @ lp["attn"]["wv"]).reshape(B, act_b, cfg.num_kv_heads,
+                                             cfg.head_dim)
+        if cfg.qk_norm:
+            ka = nn.rms_norm(ka, lp["attn"]["knorm"])
+        if sincos_act is not None:
+            ka = nn.apply_rope(ka, sincos_act[0][:, :act_b],
+                               sincos_act[1][:, :act_b])
+        # the token's OWN k/v used for this step's attention stay exact
+        ka = ka.at[arangeB, act_len].set(
+            jnp.where(store[:, None, None], k0, ka[arangeB, act_len]))
+        va = va.at[arangeB, act_len].set(
+            jnp.where(store[:, None, None], v0, va[arangeB, act_len]))
+        ac2 = ac.at[arangeB, act_len].set(
+            jnp.where(store[:, None], act_store, ac[arangeB, act_len]))
+        # own row joins the device partition with the oracle's kv validity
+        k_dev = jnp.concatenate([ka.astype(dt), k_store[:, None].astype(dt)],
+                                axis=1)
+        v_dev = jnp.concatenate([va.astype(dt), v_store[:, None].astype(dt)],
+                                axis=1)
+        act_valid = jnp.arange(act_b)[None, :] < (act_len + store)[:, None]
+        valid = jnp.concatenate([act_valid, (~store)[:, None]], axis=1)
+        o, m, l = T._partial_masked_attn(q, k_dev, v_dev, valid)
+        return o, m, l, ac2
+
+    def _ha_dev_partial_impl(self, lp, ac, act_len, store, sincos_act, q,
+                             k0, v0, k_store, v_store, act_store,
+                             act_bound=None):
+        """Stage B, spill flavour: the host arena owns the KV region, so no
+        device KV write happens at all (the row store-back is host-side)."""
+        S_act = ac.shape[1]
+        act_b = S_act if act_bound is None else min(int(act_bound), S_act)
+        return self._ha_dev_core(lp, ac, act_len, store, sincos_act, q, k0,
+                                 v0, k_store, v_store, act_store, act_b)
+
+    def _ha_dev_partial_kv_impl(self, lp, kc, vc, ac, kv_len, act_len, store,
+                                sincos_act, q, k0, v0, k_store, v_store,
+                                act_store, act_bound=None):
+        """Stage B, stacked-cache flavour (chunked scheduler): the device
+        cache stays source of truth, so the new row IS written device-side
+        exactly as ``_hybrid_layer_step`` writes it."""
+        B = ac.shape[0]
+        arangeB = jnp.arange(B)
+        S_act = ac.shape[1]
+        act_b = S_act if act_bound is None else min(int(act_bound), S_act)
+        o, m, l, ac2 = self._ha_dev_core(lp, ac, act_len, store, sincos_act,
+                                         q, k0, v0, k_store, v_store,
+                                         act_store, act_b)
+        kc2 = kc.at[arangeB, kv_len].set(
+            jnp.where(store[:, None, None], kc[arangeB, kv_len], k_store))
+        vc2 = vc.at[arangeB, kv_len].set(
+            jnp.where(store[:, None, None], vc[arangeB, kv_len], v_store))
+        return o, m, l, kc2, vc2, ac2
+
+    def _ha_merge_impl(self, lp, h, o_d, m_d, l_d, o_h, m_h, l_h):
+        """Stage C: fold the host partial into the device partial, project,
+        FFN — the tail of ``_hybrid_layer_step`` after its attention."""
+        cfg = self.cfg
+        B = h.shape[0]
+        o, _, _ = merge_partials(o_d, m_d, l_d, o_h, m_h, l_h, xp=jnp)
+        o = o.reshape(B, 1, cfg.num_heads, cfg.head_dim).astype(h.dtype)
+        h = h + o.reshape(B, 1, cfg.q_dim) @ lp["attn"]["wo"]
+        if cfg.d_ff > 0:
+            hf = nn.apply_norm(h, lp["ln2"], cfg.norm_type)
+            f, _ = T.ffn_apply(lp["ffn"], cfg, hf, self.is_moe)
+            h = h + f
+        return h
 
     def _post_impl(self, resident, h, prev, kv_len, act_len, store, active):
         """active: (B,) bool — inactive slots keep their carried token and
@@ -372,6 +492,46 @@ class OffloadExecutor:
         gather = jnp.asarray(np.minimum(kv_idx, cap - 1))
         rows_k = np.asarray(kc2[jnp.arange(B), gather])
         rows_v = np.asarray(vc2[jnp.arange(B), gather])
+        nbytes = self._rows_store_back(rows_k, rows_v, hk_l, hv_l, kv_idx,
+                                       store_np)
+        t1 = time.perf_counter()
+        if lanes:
+            n = len(hk_l)
+            for s in range(n):
+                self.timeline.record("pcie_up", "st", t0, t1, nbytes // n,
+                                     shard=s)
+        else:
+            self.timeline.record("pcie_up", "st", t0, t1, nbytes)
+
+    def _ha_store_back(self, k_store, v_store, hk_l, hv_l,
+                       kv_idx: np.ndarray, store_np: np.ndarray) -> None:
+        """Host-attend flavour of the row store-back: the KV region never
+        came up, so the new row rides D2H straight from the qk stage's
+        store values (same upstream lane, same quant round trip)."""
+        t0 = time.perf_counter()
+        rows_k = np.asarray(k_store)
+        rows_v = np.asarray(v_store)
+        self.blocking_syncs += 1
+        nbytes = self._rows_store_back(rows_k, rows_v, hk_l, hv_l, kv_idx,
+                                       store_np)
+        t1 = time.perf_counter()
+        if isinstance(hk_l, list):
+            n = len(hk_l)
+            for s in range(n):
+                self.timeline.record("pcie_up", "st", t0, t1, nbytes // n,
+                                     shard=s)
+        else:
+            self.timeline.record("pcie_up", "st", t0, t1, nbytes)
+
+    def _rows_store_back(self, rows_k, rows_v, hk_l, hv_l,
+                         kv_idx: np.ndarray, store_np: np.ndarray) -> int:
+        """Shared row-write loop: place each KV-bound request's new K/V row
+        (host-side (B, KVH, D) values) into its arena slot; returns the
+        bytes written."""
+        lanes = isinstance(hk_l, list)
+        hk0 = hk_l[0] if lanes else hk_l
+        B = kv_idx.shape[0]
+        cap = hk0.shape[1]
         if self.quant is not None:
             # device rows are fake-quant values: requantizing reproduces the
             # exact codes/scales the device dequantized from (lossless)
@@ -407,13 +567,7 @@ class OffloadExecutor:
                     hk_l[b, row] = rows_k[b]
                     hv_l[b, row] = rows_v[b]
                     nbytes += rows_k[b].nbytes + rows_v[b].nbytes
-        t1 = time.perf_counter()
-        if lanes:
-            for s in range(n):
-                self.timeline.record("pcie_up", "st", t0, t1, nbytes // n,
-                                     shard=s)
-        else:
-            self.timeline.record("pcie_up", "st", t0, t1, nbytes)
+        return nbytes
 
     def _spill_out(self, ks, vs, region, kv_len):
         """Move the whole KV region device→host into the pinned arena(s).
@@ -507,8 +661,113 @@ class OffloadExecutor:
         self.timeline.record("pcie_up", "st", t0, time.perf_counter(), nbytes)
         return hk, hv, np.asarray(kv_len).copy()
 
+    # ------------------------------------------------- host-attend layer path
+    def _ensure_host_lane(self) -> HostAttnExecutor:
+        """Create (once) and re-arm the cpu attention lane, sharing the
+        executor's timeline, fault plan, watchdog and metrics wiring."""
+        if self.host_lane is None:
+            self.host_lane = HostAttnExecutor(
+                timeline=self.timeline, faults=self.faults,
+                watchdog_s=self._watchdog_s,
+                max_retries=self._max_copy_retries, metrics=self._metrics,
+                cache_dtype=np.dtype(self.cfg.dtype))
+        self.host_lane.begin()
+        return self.host_lane
+
+    def _q_host(self, q) -> np.ndarray:
+        """Sync the roped query host-side, grouped per KV head —
+        (B, 1, H, D) → (B, KVH, G, D), the cpu lane's layout."""
+        cfg = self.cfg
+        q_np = np.asarray(q)[:, 0]
+        B = q_np.shape[0]
+        return q_np.reshape(B, cfg.num_kv_heads,
+                            cfg.num_heads // cfg.num_kv_heads, cfg.head_dim)
+
+    def _ha_layer_spill(self, lane, lp, h, ac, hk_l, hv_l, kv_len_np,
+                        act_len, store, sn, sa, store_np):
+        """One host-attend layer against the spilled arena: the KV region
+        never crosses the link — only the query (D2H), the merged softmax
+        statistics (H2D) and the new row's store-back (D2H) do."""
+        t0 = time.perf_counter()
+        q, k0, v0, k_store, v_store, act_store = self._ha_qk(lp, h, sn)
+        q_np = self._q_host(q)
+        self.blocking_syncs += 1
+        self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+        self.dispatches += 1
+        job = lane.submit(q_np, hk_l, hv_l, kv_len_np)
+        t0 = time.perf_counter()        # device partial overlaps the cpu job
+        o_d, m_d, l_d, ac2 = self._ha_dev_partial(
+            lp, ac, act_len, store, sa, q, k0, v0, k_store, v_store,
+            act_store)
+        jax.block_until_ready(o_d)
+        self.blocking_syncs += 1
+        self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+        self.dispatches += 1
+        o_h, m_h, l_h = lane.collect(job)
+        t0 = time.perf_counter()
+        h = self._ha_merge(lp, h, o_d, m_d, l_d, jnp.asarray(o_h),
+                           jnp.asarray(m_h), jnp.asarray(l_h))
+        jax.block_until_ready(h)
+        self.blocking_syncs += 1
+        self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+        self.dispatches += 1
+        self._ha_store_back(k_store, v_store, hk_l, hv_l, kv_len_np,
+                            store_np)
+        return h, ac2
+
+    def _ha_layer_kv(self, lane, lp, h, kc, vc, ac, hk_np, hv_np, kv_len_np,
+                     kv_len, act_len, store, sn, sa, act_bound):
+        """One host-attend layer over a stacked device cache (chunked
+        scheduler): the cpu lane attends over the chunk's host MIRROR of
+        the KV region while the device cache stays source of truth."""
+        t0 = time.perf_counter()
+        q, k0, v0, k_store, v_store, act_store = self._ha_qk(lp, h, sn)
+        q_np = self._q_host(q)
+        self.blocking_syncs += 1
+        self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+        self.dispatches += 1
+        job = lane.submit(q_np, hk_np, hv_np, kv_len_np)
+        t0 = time.perf_counter()        # device partial overlaps the cpu job
+        o_d, m_d, l_d, kc2, vc2, ac2 = self._ha_dev_partial_kv(
+            lp, kc, vc, ac, kv_len, act_len, store, sa, q, k0, v0, k_store,
+            v_store, act_store, act_bound=act_bound)
+        jax.block_until_ready(o_d)
+        self.blocking_syncs += 1
+        self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+        self.dispatches += 1
+        o_h, m_h, l_h = lane.collect(job)
+        t0 = time.perf_counter()
+        h = self._ha_merge(lp, h, o_d, m_d, l_d, jnp.asarray(o_h),
+                           jnp.asarray(m_h), jnp.asarray(l_h))
+        jax.block_until_ready(h)
+        self.blocking_syncs += 1
+        self.timeline.record("gpu", "fwd", t0, time.perf_counter())
+        self.dispatches += 1
+        rows_k = np.asarray(k_store)
+        rows_v = np.asarray(v_store)
+        self.blocking_syncs += 1
+        return h, kc2, vc2, ac2, rows_k, rows_v
+
+    def _mirror_append(self, hk_np, hv_np, rows_k, rows_v,
+                       kv_idx: np.ndarray, store_np: np.ndarray) -> None:
+        """Append each KV-bound request's new row to the chunk's host
+        mirror — the same write condition ``_hybrid_layer_step`` applies to
+        the device region, so mirror and cache stay in lockstep."""
+        t0 = time.perf_counter()
+        cap = hk_np.shape[1]
+        nbytes = 0
+        for b in range(rows_k.shape[0]):
+            if not store_np[b]:
+                row = min(kv_idx[b], cap - 1)
+                hk_np[b, row] = rows_k[b]
+                hv_np[b, row] = rows_v[b]
+                nbytes += rows_k[b].nbytes + rows_v[b].nbytes
+        self.timeline.record("pcie_up", "st", t0, time.perf_counter(),
+                             nbytes)
+
     def decode_loop(self, cur, cache: Cache, store_sched, *,
-                    spill_region: Optional[Region] = None
+                    spill_region: Optional[Region] = None,
+                    host_attn: bool = False
                     ) -> Tuple[np.ndarray, Cache]:
         """Layer-streamed greedy generation, token-exact vs
         ``M.hybrid_decode_loop``.
@@ -520,6 +779,10 @@ class OffloadExecutor:
                       region between steps — every layer's tiles are
                       re-uploaded per step and the new token's row is stored
                       back (real PCIe-style traffic on the reduced configs).
+        host_attn:    spill mode only — instead of re-uploading the KV
+                      region every step, the cpu lane attends over it in
+                      place (DESIGN.md §15): only softmax statistics and
+                      the new row cross the link.
 
         The cache is donated: its per-layer pools are updated in place or
         freed (spill mode).  Returns ``(tokens (B, n_steps), final cache)``.
@@ -533,6 +796,8 @@ class OffloadExecutor:
         kv_len, act_len = cache["kv_len"], cache["act_len"]
         act_pos = cache["act_pos"]
         spill = spill_region is not None
+        assert not host_attn or spill, "host_attn requires a spilled KV region"
+        lane = self._ensure_host_lane() if host_attn else None
         hk = hv = kv_len_np = None
         if spill:
             hk, hv, kv_len_np = self._spill_out(ks, vs, spill_region, kv_len)
@@ -548,6 +813,13 @@ class OffloadExecutor:
             self.dispatches += 1
             for l in range(Lc):
                 lp = self.streamer.acquire(seq)
+                if host_attn:
+                    x, acs[l] = self._ha_layer_spill(
+                        lane, lp, x, acs[l], hk[l], hv[l], kv_len_np,
+                        act_len, store, sn, sa, sched[s])
+                    self.streamer.release(seq)
+                    seq += 1
+                    continue
                 if spill:
                     kc, vc = self._kv_upload(hk[l], hv[l])
                 else:
@@ -630,7 +902,8 @@ class OffloadExecutor:
 
     def decode_chunk(self, cur, cache: Cache, store_sched, active_sched, *,
                      kv_bound: Optional[int] = None,
-                     act_bound: Optional[int] = None
+                     act_bound: Optional[int] = None,
+                     host_attn: bool = False
                      ) -> Tuple[np.ndarray, np.ndarray, Cache]:
         """Chunked layer-streamed decode over a *stacked* hybrid cache (the
         continuous-batching scheduler's offload hot path, DESIGN.md §10).
@@ -650,6 +923,11 @@ class OffloadExecutor:
                       masking contract; matches ``M.hybrid_decode_chunk``).
         kv_bound / act_bound: static region-occupancy bounds (see
                       ``M._hybrid_layer_step``).
+        host_attn:    run each layer's KV-region attention on the cpu lane
+                      over a per-chunk host mirror of the (bounded) region
+                      (DESIGN.md §15).  The device cache stays source of
+                      truth — admission, demotion and non-host-attend
+                      chunks read it unchanged.
         -> (tokens (B, n_steps) int32, next cur (B,), final stacked cache).
         """
         cfg = self.cfg
@@ -663,6 +941,27 @@ class OffloadExecutor:
         kv_len, act_len = cache["kv_len"], cache["act_len"]
         act_pos = cache["act_pos"]
         cur = jnp.asarray(cur, jnp.int32)
+        lane = hk_np = hv_np = kv_len_np = None
+        if host_attn:
+            # per-chunk host mirror of the KV region: ONE bulk D2H pull
+            # replaces per-step re-uploads; rows appended during the chunk
+            # keep it in lockstep with the device writes.  kv_bound covers
+            # max(len) + steps_in_dispatch by the scheduler's contract, so
+            # appended rows always fit the mirror.
+            lane = self._ensure_host_lane()
+            S_kv = ks[0].shape[1]
+            kv_b = S_kv if kv_bound is None else min(int(kv_bound), S_kv)
+            self.timeline.begin_step("mirror")
+            t0 = time.perf_counter()
+            hk_np = [np.array(ks[l][:, :kv_b]) for l in range(Lc)]
+            hv_np = [np.array(vs[l][:, :kv_b]) for l in range(Lc)]
+            self.blocking_syncs += 1
+            nbytes = sum(a.nbytes for a in hk_np) + \
+                sum(a.nbytes for a in hv_np)
+            self.timeline.record("pcie", "kv", t0, time.perf_counter(),
+                                 nbytes)
+            self.timeline.end_step()
+            kv_len_np = np.asarray(cache["kv_len"]).copy()
         toks: List[np.ndarray] = []
         # ONE prefetch window across the whole chunk's layer sequence
         self.streamer.begin([l for _ in range(n_steps) for l in range(Lc)])
@@ -676,6 +975,16 @@ class OffloadExecutor:
             self.dispatches += 1
             for l in range(Lc):
                 lp = self.streamer.acquire(seq)
+                if host_attn:
+                    x, ks[l], vs[l], acs[l], rk, rv = self._ha_layer_kv(
+                        lane, lp, x, ks[l], vs[l], acs[l], hk_np[l],
+                        hv_np[l], kv_len_np, kv_len, act_len, store, sn,
+                        sa, act_bound)
+                    self._mirror_append(hk_np[l], hv_np[l], rk, rv,
+                                        kv_len_np, sched[s])
+                    self.streamer.release(seq)
+                    seq += 1
+                    continue
                 t0 = time.perf_counter()
                 x, ks[l], vs[l], acs[l] = self._layer(
                     lp, ks[l], vs[l], acs[l], x, kv_len, act_len, store,
@@ -692,6 +1001,9 @@ class OffloadExecutor:
                                                    kv_len, act_len, store,
                                                    active)
             self.dispatches += 1
+            if host_attn:
+                kv_len_np = kv_len_np + ((~sched[s]) & act_np[s]).astype(
+                    kv_len_np.dtype)
             self.timeline.end_step()
         out = (np.stack(toks, axis=1).astype(np.int32) if toks
                else np.zeros((B, 0), np.int32))
@@ -713,9 +1025,12 @@ class OffloadExecutor:
         return self.timeline.drain(tag)
 
     def close(self) -> None:
-        """Deterministic teardown: joins the copy-stream thread(s).  Also the
-        context-manager exit, so engine teardown can't leak threads."""
+        """Deterministic teardown: joins the copy-stream thread(s) and the
+        cpu attention lane's worker.  Also the context-manager exit, so
+        engine teardown can't leak threads."""
         self.streamer.close()
+        if self.host_lane is not None:
+            self.host_lane.close()
 
     def __enter__(self) -> "OffloadExecutor":
         return self
@@ -733,6 +1048,15 @@ class OffloadExecutor:
     def fault_counters(self) -> Dict[str, int]:
         """Cumulative robustness counters from the weight lane(s)."""
         return self.streamer.fault_counters
+
+    @property
+    def host_fault_counters(self) -> Dict[str, int]:
+        """Cumulative robustness counters from the cpu attention lane
+        (all-zero until the first host-attend decode creates it)."""
+        if self.host_lane is None:
+            from repro.offload.streamer import FAULT_COUNTER_KEYS
+            return {k: 0 for k in FAULT_COUNTER_KEYS}
+        return self.host_lane.fault_counters
 
 
 def stack_cache(cache: Cache) -> Cache:

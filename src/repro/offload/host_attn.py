@@ -1,0 +1,307 @@
+"""CPU-compute attention lane: host flash attention over spilled KV blocks.
+
+The two existing placements for a KV block under memory pressure both pay a
+link cost: keep it on device (HBM), or spill it and either re-upload it every
+step (PCIe down + dequant) or regenerate it from an ACT checkpoint (KV Gen
+FLOPs).  The paper's cost balance (Algorithm 1) only arbitrates those two.
+This module adds the third lane (DESIGN.md §15): leave the block in the
+pinned host arena and run its share of the attention *on the CPU*, shipping
+only the per-partition softmax statistics back — O(H·D) per request instead
+of O(S·KVH·D) per step.
+
+Flash-attention partials make the split exact.  Each partition computes
+
+    m = max_j s_j          (masked score max, NEG_INF basis)
+    l = sum_j exp(s_j - m)
+    o = sum_j exp(s_j - m) v_j / l
+
+and two partitions merge associatively:
+
+    m* = max(m_a, m_b);  w_i = l_i * exp(m_i - m*)
+    o  = (w_a o_a + w_b o_b) / (w_a + w_b);   l* = w_a + w_b
+
+so host partition = arena KV rows ``[0, kv_len)`` and device partition =
+recomputed ACT region + the new token's own row reproduce exactly the
+valid set ``M._hybrid_layer_step`` attends over.  An empty host partition
+is the identity element (m = NEG_INF, l = 0).
+
+Quantized arenas (DESIGN.md §14) dequantize host-side through the same
+``np_dequantize`` mirror the spill path quantized through, rounded through
+the cache dtype — the values entering the host dot product are bit-identical
+to what the device oracle reads back from its own region.
+
+``HostAttnExecutor`` runs the host partition on a dedicated worker thread —
+the ``WeightStreamer`` pattern: submit right after the query syncs, overlap
+with the device partial's dispatch, collect at the merge point — including
+the PR 6 fault/watchdog ladder (injected stall/slow/copy_fail at site
+``"host_attn"``, watchdog timeout → degraded inline-sync fallback, bounded
+retries with exponential backoff).  Every job records a ``cpu``-lane span on
+the shared ``MeasuredTimeline``, so the Tracer, metrics registry, drift
+monitor and ``ewma_refit`` see the lane like any other.
+"""
+from __future__ import annotations
+
+import math
+import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.obs.metrics import CounterDictView, MetricsRegistry
+from repro.offload.faults import FaultPlan, TransientCopyError
+from repro.offload.streamer import FAULT_COUNTER_KEYS
+from repro.offload.timeline import MeasuredTimeline
+
+#: masked-score basis shared with the kernel ref oracle (finite, so the
+#: identity partition merges without nan: exp(NEG_INF - NEG_INF) = 1, l = 0)
+NEG_INF = -1e30
+
+#: fault-injection site consulted once per submitted job
+HOST_ATTN_SITE = "host_attn"
+
+
+# ============================================================== partial math
+def merge_partials(o_a, m_a, l_a, o_b, m_b, l_b, *, xp=np):
+    """Fold two flash-attention partials into one (associative, exact).
+
+    ``o_*`` are NORMALISED partition outputs (..., D); ``m_*``/``l_*`` are
+    broadcastable against them with a trailing singleton (..., 1).  A
+    partition with l = 0 (empty: m = NEG_INF) contributes weight 0 and
+    drops out of the sum.  ``xp`` selects numpy (host merge, tests) or
+    ``jax.numpy`` (inside the executor's jitted merge stage).
+    """
+    m_new = xp.maximum(m_a, m_b)
+    w_a = l_a * xp.exp(m_a - m_new)
+    w_b = l_b * xp.exp(m_b - m_new)
+    tot = w_a + w_b
+    o = (w_a * o_a + w_b * o_b) / xp.maximum(tot, 1e-30)
+    return o, m_new, tot
+
+
+def _dequant_rows(plane, bound: int, cache_dtype) -> Tuple[np.ndarray, int]:
+    """First ``bound`` rows of one arena plane as f32 plus bytes touched.
+
+    ``plane`` is an ndarray (fp arena), a ``QuantSlab`` (int8 arena) or a
+    per-shard list of either (``ShardedRegion`` lanes — concatenated along
+    the head axis, the ``_kv_upload`` convention).  Quantized rows round
+    through ``cache_dtype`` exactly like the device's dequant-on-upload, so
+    host and device read the same values.
+    """
+    from repro.offload.executor import QuantSlab, np_dequantize
+    if isinstance(plane, list):
+        parts, nbytes = [], 0
+        for p in plane:
+            arr, nb = _dequant_rows(p, bound, cache_dtype)
+            parts.append(arr)
+            nbytes += nb
+        return np.concatenate(parts, axis=2), nbytes
+    if isinstance(plane, QuantSlab):
+        q, s = plane.q[:, :bound], plane.s[:, :bound]
+        return (np_dequantize(q, s, cache_dtype).astype(np.float32),
+                q.nbytes + s.nbytes)
+    rows = plane[:, :bound]
+    return rows.astype(np.float32), rows.nbytes
+
+
+def host_flash_attention(q: np.ndarray, hk, hv, kv_len: np.ndarray, *,
+                         chunk: int = 256, cache_dtype=np.float32
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Flash-style masked attention over host-arena KV rows ``[0, kv_len)``.
+
+    q:      (B, KVH, G, D) f32 — roped/normed query, grouped per KV head.
+    hk/hv:  arena planes, (B, cap, KVH, D) each (ndarray | QuantSlab | list
+            of per-shard slices).
+    kv_len: (B,) int — valid host rows per request (0 = empty partition).
+    -> (o (B,KVH,G,D) f32 normalised, m (B,KVH,G,1) f32, l (B,KVH,G,1) f32,
+        bytes read from the arena).
+
+    Single pass over kv chunks with a running (m, l, acc) — the numpy
+    mirror of the Pallas kernel's inner loop, so the returned partial obeys
+    the same NEG_INF conventions ``merge_partials`` expects.
+    """
+    B, KVH, G, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    m = np.full((B, KVH, G), NEG_INF, np.float32)
+    l = np.zeros((B, KVH, G), np.float32)
+    acc = np.zeros((B, KVH, G, D), np.float32)
+    kv_len = np.asarray(kv_len)
+    bound = int(kv_len.max()) if kv_len.size else 0
+    k_rows, nbytes_k = _dequant_rows(hk, bound, cache_dtype)
+    v_rows, nbytes_v = _dequant_rows(hv, bound, cache_dtype)
+    q32 = np.asarray(q, np.float32)
+    for c0 in range(0, bound, chunk):
+        c1 = min(c0 + chunk, bound)
+        kc = k_rows[:, c0:c1]                               # (B, C, KVH, D)
+        vc = v_rows[:, c0:c1]
+        s = np.einsum("bhgd,bchd->bhgc", q32, kc,
+                      optimize=True) * scale
+        valid = np.arange(c0, c1)[None, :] < kv_len[:, None]    # (B, C)
+        vmask = valid[:, None, None, :]
+        s = np.where(vmask, s, NEG_INF)
+        m_new = np.maximum(m, s.max(axis=-1))
+        alpha = np.exp(m - m_new)
+        e = np.where(vmask, np.exp(s - m_new[..., None]), 0.0)
+        acc = acc * alpha[..., None] + np.einsum(
+            "bhgc,bchd->bhgd", e, vc, optimize=True)
+        l = l * alpha + e.sum(axis=-1)
+        m = m_new
+    o = acc / np.maximum(l, 1e-30)[..., None]
+    return (o.astype(np.float32), m[..., None], l[..., None],
+            nbytes_k + nbytes_v)
+
+
+# =========================================================== worker executor
+class _HostJob:
+    """One submitted host-partition job: the future plus everything needed
+    to retry or recompute it inline after a fault."""
+
+    __slots__ = ("q", "hk", "hv", "kv_len", "fut", "retries")
+
+    def __init__(self, q, hk, hv, kv_len):
+        self.q, self.hk, self.hv, self.kv_len = q, hk, hv, kv_len
+        self.fut = None
+        self.retries = 0
+
+
+class HostAttnExecutor:
+    """Dedicated CPU attention worker — the ``WeightStreamer`` of the cpu
+    lane.
+
+    ``submit`` enqueues a host partition on the single worker thread and
+    returns immediately (the caller dispatches the device partial next, so
+    both partitions run concurrently); ``collect`` joins with the full
+    robustness ladder:
+
+      * injected ``copy_fail`` → ``TransientCopyError`` → bounded retries
+        with exponential backoff (``copy_retries``), then give-up
+        (``copy_failures``) → degrade + inline fallback,
+      * watchdog timeout (``fut.result(timeout=watchdog_s)``) →
+        ``watchdog_timeouts`` → degrade + inline fallback,
+      * degraded lane: every job computes inline on the caller thread,
+        bypassing injection (``sync_fallbacks``) — correctness is never
+        traded, only overlap.  ``begin()`` re-arms the lane (same recovery
+        granularity as the weight streamer).
+
+    Completed jobs record a ``cpu``-lane ``cpu``-tag span (worker wall
+    window, arena bytes read) on the shared ``MeasuredTimeline`` from the
+    worker thread — ``record`` is lock-protected for exactly this.
+    """
+
+    def __init__(self, *, timeline: Optional[MeasuredTimeline] = None,
+                 faults: Optional[FaultPlan] = None,
+                 watchdog_s: Optional[float] = None, max_retries: int = 2,
+                 metrics: Optional[MetricsRegistry] = None,
+                 chunk: int = 256, cache_dtype=np.float32):
+        self.timeline = timeline if timeline is not None else MeasuredTimeline()
+        self.faults = faults
+        self.watchdog_s = watchdog_s
+        self.max_retries = int(max_retries)
+        self.chunk = int(chunk)
+        self.cache_dtype = cache_dtype
+        self.degraded = False
+        self._closed = False
+        self._worker = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix="host-attn")
+        if metrics is None:
+            self.counters: Dict[str, int] = {k: 0 for k in FAULT_COUNTER_KEYS}
+        else:
+            self.counters = CounterDictView(metrics, "host_attn_faults",
+                                            keys=FAULT_COUNTER_KEYS)
+
+    # ------------------------------------------------------------------ work
+    def _attend(self, q, hk, hv, kv_len, *, inject: bool):
+        """The actual host partition; optionally consults the fault plan
+        first (worker thread only — the inline fallback never injects)."""
+        if inject and self.faults is not None:
+            ev = self.faults.draw(HOST_ATTN_SITE,
+                                  kinds=("stall", "copy_fail", "slow"))
+            if ev is not None:
+                if ev.kind == "copy_fail":
+                    self.timeline.record_event("copy_fail_injected")
+                    raise TransientCopyError(
+                        f"injected host-attn fault at {HOST_ATTN_SITE}")
+                if ev.kind == "stall":
+                    self.counters["stalls_injected"] += 1
+                self.timeline.record_event(f"{ev.kind}_injected")
+                time.sleep(ev.seconds)
+        t0 = time.perf_counter()
+        o, m, l, nbytes = host_flash_attention(
+            q, hk, hv, kv_len, chunk=self.chunk, cache_dtype=self.cache_dtype)
+        self.timeline.record("cpu", "cpu", t0, time.perf_counter(), nbytes)
+        return o, m, l
+
+    def submit(self, q: np.ndarray, hk, hv, kv_len: np.ndarray) -> _HostJob:
+        """Enqueue one host partition.  ``q`` must already be host-side
+        (the caller syncs it before dispatching the device partial).  A
+        degraded lane defers the inline compute to ``collect`` so the
+        caller's dispatch pattern stays identical either way."""
+        assert not self._closed, "submit() after close()"
+        job = _HostJob(np.asarray(q), hk, hv, np.asarray(kv_len))
+        if not self.degraded:
+            job.fut = self._worker.submit(self._attend, job.q, job.hk,
+                                          job.hv, job.kv_len, inject=True)
+        return job
+
+    def collect(self, job: _HostJob):
+        """Join one job through the watchdog/retry ladder; always returns a
+        correct ``(o, m, l)`` partial."""
+        while True:
+            if job.fut is None:                        # degraded: inline sync
+                self.counters["sync_fallbacks"] += 1
+                self.timeline.record_event("sync_fallback")
+                return self._attend(job.q, job.hk, job.hv, job.kv_len,
+                                    inject=False)
+            try:
+                return job.fut.result(timeout=self.watchdog_s)
+            except FuturesTimeout:
+                self.counters["watchdog_timeouts"] += 1
+                self.timeline.record_event("watchdog_timeout")
+                self._degrade()
+                job.fut = None
+            except TransientCopyError:
+                job.retries += 1
+                if job.retries > self.max_retries:
+                    self.counters["copy_failures"] += 1
+                    self.timeline.record_event("copy_give_up")
+                    self._degrade()
+                    job.fut = None
+                else:
+                    self.counters["copy_retries"] += 1
+                    self.timeline.record_event("copy_retry")
+                    time.sleep(min(0.001 * (2 ** (job.retries - 1)), 0.05))
+                    job.fut = self._worker.submit(
+                        self._attend, job.q, job.hk, job.hv, job.kv_len,
+                        inject=True)
+
+    def _degrade(self) -> None:
+        self.degraded = True
+
+    # ------------------------------------------------------------- lifecycle
+    def begin(self) -> None:
+        """Re-arm the lane at dispatch-window granularity (mirrors
+        ``WeightStreamer.begin``): a lane degraded by last window's faults
+        gets to try overlapping again."""
+        self.degraded = False
+
+    def close(self) -> None:
+        """Deterministic teardown; idempotent (context-manager exit)."""
+        if not self._closed:
+            self._closed = True
+            self._worker.shutdown(wait=True)
+
+    def __enter__(self) -> "HostAttnExecutor":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    @property
+    def lane_health(self) -> str:
+        return "degraded" if self.degraded else "healthy"
+
+    @property
+    def fault_counters(self) -> Dict[str, int]:
+        return dict(self.counters)

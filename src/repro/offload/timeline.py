@@ -27,14 +27,16 @@ from repro.core.pipeline import TimelineResult
 #: traffic categories, matching ``simulate_steps``'s traffic dict keys
 TRAFFIC_TAGS = ("weights", "kv_load", "act_load", "store")
 
-#: lane names, matching ``core.pipeline.run_timeline``
-LANES = ("pcie", "pcie_up", "gpu")
+#: lane names, matching ``core.pipeline.run_timeline``.  "cpu" is the
+#: host-compute attention lane (DESIGN.md §15): spans recorded from the
+#: HostAttnExecutor worker thread, overlapping the gpu lane in wall time.
+LANES = ("pcie", "pcie_up", "gpu", "cpu")
 
 
 @dataclass
 class Span:
-    lane: str                 # "pcie" | "pcie_up" | "gpu"
-    tag: str                  # "w" | "kv" | "act" | "st" | "gen" | "fwd"
+    lane: str                 # "pcie" | "pcie_up" | "gpu" | "cpu"
+    tag: str                  # "w" | "kv" | "act" | "st" | "gen" | "fwd" | "cpu"
     start: float              # perf_counter seconds
     end: float
     nbytes: int = 0
@@ -180,8 +182,8 @@ class MeasuredTimeline:
                 tag_busy[t] = max(tag_busy.get(t, 0.0), v)
             out.append(TimelineResult(
                 total=end - s.start, pcie_busy=busy["pcie"],
-                gpu_busy=busy["gpu"], traffic=traffic, finish=finish,
-                tag_busy=tag_busy, events=dict(s.events)))
+                gpu_busy=busy["gpu"], cpu_busy=busy["cpu"], traffic=traffic,
+                finish=finish, tag_busy=tag_busy, events=dict(s.events)))
         return out
 
     def step_tags(self) -> List[str]:

@@ -69,6 +69,7 @@ class GenStats(ScalarStatsView):
         # measured (offload runtime ground truth; zero device-resident)
         "measured_time": 0.0,
         "measured_gpu_busy": 0.0,
+        "measured_cpu_busy": 0.0,    # cpu attention lane (DESIGN.md §15)
     }
 
     def __init__(self, registry=None):
@@ -99,7 +100,8 @@ class HybridServeEngine:
                  faults=None, watchdog_s: Optional[float] = None,
                  ctl: Optional[ControllerConfig] = None,
                  plan: Optional[ShardPlan] = None,
-                 tracer=None, metrics=None, quant=None):
+                 tracer=None, metrics=None, quant=None,
+                 host_attn: bool = False):
         """generalized=True uses the byte-ratio-aware Algorithm-1 variant
         (DESIGN.md §7) — recommended for GQA models; False reproduces the
         paper's policy exactly.
@@ -135,9 +137,22 @@ class HybridServeEngine:
         to int8 residency + dequant-on-load), while the BlockManager, spill
         arena, cost model, and simulator all price the REAL quantized bytes
         — so lane slopes drop and Algorithm 1 re-balances.  ``quant=None``
-        (default) is bit-identical to the unquantized engine."""
+        (default) is bit-identical to the unquantized engine.
+
+        host_attn=True (offload only) enables the cpu attention lane
+        (DESIGN.md §15): groups that physically spill run their KV-region
+        attention ON THE HOST over the pinned arena — only softmax
+        statistics and the new row cross the link — overlapped with the
+        device partial on a dedicated worker thread.  Spilled blocks gain
+        the BlockManager's ``host_attend`` residency tag, the simulator
+        prices the third lane, and an adaptive controller arbitrates
+        three ways {device KV, ACT regenerate, CPU attend}.  Tokens stay
+        exact; ``host_attn=False`` is bit-identical to the PR 8 engine."""
         assert mode in ("hybrid", "kv", "act")
         assert M.family(cfg) == "uniform", "engine drives uniform-family models"
+        assert not host_attn or offload, \
+            "host_attn rides the offload runtime's spill arena"
+        self.host_attn = bool(host_attn)
         self.plan = plan
         self.quant = quant
         shards = plan.shard_factor if plan is not None else 1
@@ -181,7 +196,7 @@ class HybridServeEngine:
                 cfg, hw, self.alloc, device_act_blocks(cfg, hw, quant=quant),
                 fits=self.fits, generalized=generalized,
                 ctl=ctl if ctl is not None else ControllerConfig(),
-                drift=self.drift, quant=quant)
+                drift=self.drift, quant=quant, cpu=host_attn)
 
         # device KV pool: generous when device-resident; budget-derived under
         # offload so tight (reduced) budgets force real spill to the host arena
@@ -338,6 +353,7 @@ class HybridServeEngine:
             stats.device_calls += st.device_calls
             stats.measured_time += st.measured_time
             stats.measured_gpu_busy += st.measured_gpu_busy
+            stats.measured_cpu_busy += st.measured_cpu_busy
             for k, v in st.traffic.items():
                 stats.traffic[k] = stats.traffic.get(k, 0.0) + v
         return outputs, stats
@@ -349,9 +365,10 @@ class HybridServeEngine:
         that the stats path already materialised — no device syncs."""
         if self.controller is None or self._last_obs is None:
             return
-        results, sim, kv_tok, act_tok = self._last_obs
+        results, sim, kv_tok, act_tok, cpu_tok = self._last_obs
         self._last_obs = None
-        self.controller.observe(results, kv_tok, act_tok, sim=sim)
+        self.controller.observe(results, kv_tok, act_tok, sim=sim,
+                                cpu_tokens=cpu_tok)
         self._apply_alloc(self.controller.update())
 
     def _apply_alloc(self, new_alloc: HostAllocation) -> None:
@@ -473,18 +490,29 @@ class HybridServeEngine:
                         self.blockman.migrate(r.rid, BlockType.KV,
                                               Location.DEVICE)
 
+            # cpu lane engages only for groups that physically spilled: the
+            # arena KV blocks are attended in place (host_attend residency
+            # tag) instead of riding PCIe back up every step
+            use_cpu = self.host_attn and region is not None
+            if use_cpu:
+                for r in group:
+                    self.blockman.tag_host_attend(r.rid, True)
+
             if max_new:
                 with self.tracer.server_span("decode", batch=B,
                                              steps=max_new):
                     if self.executor is not None:
                         d0 = self.executor.dispatches
                         gen, _ = self.executor.decode_loop(
-                            cur, cache, sched.T, spill_region=region)
+                            cur, cache, sched.T, spill_region=region,
+                            host_attn=use_cpu)
                         stats.device_calls += self.executor.dispatches - d0
                         measured = self.executor.drain_timeline("decode")
                         self.measured_steps += measured
                         stats.measured_time += sum(m.total for m in measured)
                         stats.measured_gpu_busy += sum(m.gpu_busy
+                                                       for m in measured)
+                        stats.measured_cpu_busy += sum(m.cpu_busy
                                                        for m in measured)
                     else:
                         with trace_ctx(self.plan):
@@ -531,10 +559,14 @@ class HybridServeEngine:
             steps_ahead = np.arange(1, max_new + 1)
             kv_tok = int(kv_keep.sum()) + np.cumsum((~sched).sum(0))
             act_tok = int(act0.sum()) + np.cumsum(sched.sum(0))
-            specs = [[MiniBatchSpec(B, int(kv_tok[s]), int(act_tok[s]), 0,
-                                    ctx_tokens=int(np.mean(np.asarray(pbs)
-                                                           + steps_ahead[s])))]
-                     for s in range(max_new)]
+            # host-attended groups move their KV tokens off the pcie lane
+            # and onto the cpu lane — the simulator prices the same
+            # placement the executor ran
+            specs = [[MiniBatchSpec(
+                B, 0 if use_cpu else int(kv_tok[s]), int(act_tok[s]), 0,
+                ctx_tokens=int(np.mean(np.asarray(pbs) + steps_ahead[s])),
+                cpu_host_tokens=int(kv_tok[s]) if use_cpu else 0)]
+                for s in range(max_new)]
             sim_results = simulate_steps(cfg, self.hw, specs,
                                          quant=self.quant)
             for res in sim_results:
@@ -550,10 +582,14 @@ class HybridServeEngine:
             if self.controller is not None:
                 # controller food: measured lane times where they exist
                 # (offload runtime), the simulated prediction otherwise,
-                # with the schedule's per-step host token counts
+                # with the schedule's per-step host token counts.  A
+                # host-attended group's KV tokens fed the cpu lane, not the
+                # pcie lane — route the counts to the lane they exercised
                 self._last_obs = (measured if self.executor is not None
                                   else sim_results, sim_results,
-                                  kv_tok.tolist(), act_tok.tolist())
+                                  [0] * max_new if use_cpu
+                                  else kv_tok.tolist(), act_tok.tolist(),
+                                  kv_tok.tolist() if use_cpu else None)
             elif self.executor is not None:
                 # no controller to route through: feed the drift monitor
                 # its (measured, predicted) pairs directly

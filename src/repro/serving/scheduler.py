@@ -123,7 +123,8 @@ class ContinuousBatchingServer:
                  host_act_blocks: Optional[int] = None,
                  dev_kv_blocks: Optional[int] = None,
                  dev_act_blocks: Optional[int] = None,
-                 tracer=None, metrics=None, quant=None):
+                 tracer=None, metrics=None, quant=None,
+                 host_attn: bool = False):
         """chunk_steps: decode iterations per jitted dispatch.  1 reproduces
         the classic step server (admission every iteration); S>1 runs S
         masked steps per dispatch, admitting/retiring only at chunk
@@ -174,8 +175,20 @@ class ContinuousBatchingServer:
         quant=... serves with block-quantized cache regions (DESIGN.md
         §14): cache writes fake-quant inside the same dispatches, and the
         policy stack / block accounting price the quantized bytes.
-        ``quant=None`` (default) is bit-identical to today's server."""
+        ``quant=None`` (default) is bit-identical to today's server.
+
+        host_attn=True (offload mode only) routes every slot's KV-region
+        attention to the cpu lane (DESIGN.md §15): the executor keeps a
+        host mirror of the occupied KV prefix, a worker thread computes
+        flash-style LSE partials over it while the device recomputes the
+        ACT region, and the partials merge on device — token-exact, with
+        the cpu lane recorded in the measured timelines and priced by the
+        three-way placement stack.  ``host_attn=False`` (default) is
+        bit-identical to today's server."""
         assert M.family(cfg) == "uniform"
+        assert not host_attn or offload, \
+            "host_attn rides the offload runtime's host mirror"
+        self.host_attn = bool(host_attn)
         self.plan = plan
         self.quant = quant
         shards = plan.shard_factor if plan is not None else 1
@@ -202,7 +215,7 @@ class ContinuousBatchingServer:
                 generalized=generalized,
                 ctl=ctl if ctl is not None else
                 ControllerConfig(update_every=4), drift=self.drift,
-                quant=quant)
+                quant=quant, cpu=host_attn)
         # physical block accounting, replayed per chunk from the precomputed
         # store schedule (the engine's pattern, DESIGN.md §5): host pools in
         # the Algorithm-1 split, device pools as the engine sizes them
@@ -490,6 +503,9 @@ class ContinuousBatchingServer:
                 st.act_tokens = lens[j] - int(kv_keep[j])
                 self._cur_tok[i] = cur_np[j]
                 self.blockman.new_request(r.rid)
+                if self.host_attn:
+                    # KV blocks attend on the cpu lane (DESIGN.md §15)
+                    self.blockman.tag_host_attend(r.rid, True)
                 for t in range(lens[j]):
                     kind = BlockType.KV if t < kv_keep[j] else BlockType.ACT
                     if self.blockman.append_token(r.rid, kind) is None:
@@ -753,7 +769,8 @@ class ContinuousBatchingServer:
                           self.executor.blocking_syncs)
                 toks, cur, self.cache = self.executor.decode_chunk(
                     jnp.asarray(self._cur_tok), self.cache, sched_t, active,
-                    kv_bound=kv_bound, act_bound=act_bound)
+                    kv_bound=kv_bound, act_bound=act_bound,
+                    host_attn=self.host_attn)
                 stats.device_calls += self.executor.dispatches - d0
                 stats.host_syncs += self.executor.blocking_syncs - b0
             else:
@@ -776,9 +793,14 @@ class ContinuousBatchingServer:
         # sync; the mirrors advance exactly like the on-device lengths)
         kv_tok = [int(kv_run[s][active[s]].sum()) for s in range(n_steps)]
         act_tok = [int(act_run[s][active[s]].sum()) for s in range(n_steps)]
-        specs = [[MiniBatchSpec(int(active[s].sum()), kv_tok[s], act_tok[s],
+        # host_attn: the KV region attends on the cpu lane, so the sim prices
+        # those tokens as cpu_host_tokens (three-way pipeline, DESIGN.md §15)
+        use_cpu = self.host_attn
+        specs = [[MiniBatchSpec(int(active[s].sum()),
+                                0 if use_cpu else kv_tok[s], act_tok[s],
                                 0, ctx_tokens=int(
-                                    (kv_run[s] + act_run[s])[active[s]].mean()))]
+                                    (kv_run[s] + act_run[s])[active[s]].mean()),
+                                cpu_host_tokens=kv_tok[s] if use_cpu else 0)]
                  for s in range(n_steps)]
         sim_results = simulate_steps(self.cfg, self.hw, specs,
                                      quant=self.quant)
@@ -852,8 +874,11 @@ class ContinuousBatchingServer:
             # per-chunk timeline batch: measured iteration timelines where
             # they exist (offload), the simulated predictions otherwise —
             # the engine's group-granular observe, at chunk granularity
-            self.controller.observe(meas if meas else sim_results,
-                                    kv_tok, act_tok, sim=sim_results)
+            self.controller.observe(
+                meas if meas else sim_results,
+                [0] * n_steps if use_cpu else kv_tok, act_tok,
+                sim=sim_results,
+                cpu_tokens=kv_tok if use_cpu else None)
             self._apply_alloc(self.controller.update())
         elif self.executor is not None:
             # no controller to route through: feed the drift monitor its

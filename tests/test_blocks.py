@@ -66,6 +66,79 @@ def test_free_request_recycles():
     assert bm.append_token(5, BlockType.KV) is not None
 
 
+def test_host_attend_tag_lifecycle():
+    """DESIGN.md §15: the cpu-lane residency tag sticks to KV@HOST blocks
+    only, survives nothing that changes what the block IS — a migration to
+    DEVICE or a demotion to ACT clears it — and a HOST->DEVICE->HOST round
+    trip needs an explicit retag (device residency forgot the lane)."""
+    bm = make_bm()
+    bm.new_request(0)
+    for _ in range(2 * BLOCK_TOKENS):
+        assert bm.append_token(0, BlockType.KV) is not None
+    for _ in range(BLOCK_TOKENS):
+        assert bm.append_token(0, BlockType.ACT) is not None
+    # only the two KV@HOST blocks are eligible; ACT is never tagged
+    assert bm.tag_host_attend(0, True) == 2
+    assert bm.counts(0)["host_attend_blocks"] == 2
+    assert bm.tag_host_attend(0, True) == 0            # idempotent
+    # migration to DEVICE clears the tag (cpu lane is host-only residency)
+    assert bm.move_block(0, 0, Location.DEVICE)
+    assert bm.counts(0)["host_attend_blocks"] == 1
+    # ...and moving back does NOT silently restore it
+    assert bm.move_block(0, 0, Location.HOST)
+    assert bm.counts(0)["host_attend_blocks"] == 1
+    assert bm.tag_host_attend(0, True) == 1            # explicit retag
+    assert bm.counts(0)["host_attend_blocks"] == 2
+    # untag releases every block
+    assert bm.tag_host_attend(0, False) == 2
+    assert bm.counts(0)["host_attend_blocks"] == 0
+    bm.free_request(0)
+    for pool in bm.pools.values():
+        assert pool.allocated == 0
+
+
+def test_demote_request_kv_clears_host_attend():
+    """Preemption demotion re-kinds KV blocks to ACT checkpoints; an ACT
+    block regenerates instead of cpu-attending, so the tag must drop."""
+    bm = make_bm(dev_act_blocks=0)
+    bm.new_request(1)
+    for _ in range(2 * BLOCK_TOKENS):
+        bm.append_token(1, BlockType.KV)
+    assert bm.tag_host_attend(1, True) == 2
+    assert bm.demote_request_kv(1) == 2
+    c = bm.counts(1)
+    assert c["kv_blocks"] == 0 and c["act_blocks"] == 2
+    assert c["host_attend_blocks"] == 0
+    assert bm.tag_host_attend(1, True) == 0     # nothing eligible anymore
+    bm.free_request(1)
+
+
+def test_move_block_roundtrip_quant_metadata():
+    """Quant-on HOST->DEVICE->HOST round trip: the block keeps its int8
+    payload + f16 scale metadata through both residency changes (format is
+    a property of the block's kind, not its tier), and the pool accounting
+    balances."""
+    from repro.core.quant import QuantConfig
+    q = QuantConfig()
+    bm = make_bm(quant=q)
+    bm.new_request(2)
+    for _ in range(BLOCK_TOKENS):
+        bm.append_token(2, BlockType.KV)
+    blk = bm.tables[2][0]
+    assert blk.dtype == q.kv_dtype and blk.scale_dtype == q.scale_dtype
+    assert bm.move_block(2, 0, Location.DEVICE)
+    assert blk.dtype == q.kv_dtype and blk.scale_dtype == q.scale_dtype
+    assert bm.move_block(2, 0, Location.HOST)
+    assert blk.dtype == q.kv_dtype and blk.scale_dtype == q.scale_dtype
+    assert bm.transitions[(BlockType.KV, Location.HOST,
+                           Location.DEVICE)] == 1
+    assert bm.transitions[(BlockType.KV, Location.DEVICE,
+                           Location.HOST)] == 1
+    bm.free_request(2)
+    for pool in bm.pools.values():
+        assert pool.allocated == 0
+
+
 def test_host_bytes_accounting():
     bm = make_bm(dev_act_blocks=0)
     bm.new_request(6)

@@ -62,3 +62,37 @@ def test_cost_fns_linear_and_positive(n):
 def test_gqa_act_costlier_than_kv():
     t_gen, t_kv, t_act = cm.make_cost_fns(get_config("yi-6b"), HW)
     assert t_act(1000) > t_kv(1000)        # r = 4.0: ACT loads cost MORE
+
+
+@settings(max_examples=25, deadline=None)
+@given(shards=st.integers(1, 16),
+       host_flops=st.floats(1e11, 1e13),
+       host_bw=st.floats(1e10, 1e12),
+       host_mfu=st.floats(0.05, 1.0))
+def test_scale_for_shards_host_terms_invariant(shards, host_flops, host_bw,
+                                               host_mfu):
+    """The host-compute lane describes ONE shared CPU+DRAM complex
+    (DESIGN.md §15): scaling the mesh must scale device terms linearly and
+    leave every host term — and the per-call dispatch tax — untouched.
+    shards=1 is the identity, bit-for-bit (the SAME spec object)."""
+    import dataclasses
+    hw = dataclasses.replace(HW, host_flops=host_flops,
+                             host_dram_bw=host_bw, host_mfu=host_mfu)
+    assert cm.scale_for_shards(hw, 1) is hw
+    s = cm.scale_for_shards(hw, shards)
+    assert s.flops == hw.flops * shards
+    assert s.hbm_bw == hw.hbm_bw * shards
+    assert s.host_link_bw == hw.host_link_bw * shards
+    assert s.device_mem == hw.device_mem * shards
+    for f in ("host_mem", "host_flops", "host_dram_bw", "host_mfu",
+              "dispatch_overhead", "mfu", "gen_mfu", "gather_eff"):
+        assert getattr(s, f) == getattr(hw, f), f
+    # consequence: the cpu-attend per-token price is shard-invariant while
+    # the PCIe load price drops with the extra lanes
+    cpu1 = cm.cpu_attend_seconds_per_token(CFG, hw)
+    assert cm.cpu_attend_seconds_per_token(CFG, s) == cpu1
+    if shards > 1:
+        _, t_kv1, _, t_cpu1 = cm.make_cost_fns(CFG, hw, cpu=True)
+        _, t_kvN, _, t_cpuN = cm.make_cost_fns(CFG, s, cpu=True)
+        assert t_kvN(4096) < t_kv1(4096)
+        assert t_cpuN(4096) == t_cpu1(4096)

@@ -1,0 +1,319 @@
+"""CPU-compute attention lane (DESIGN.md §15): partial merge math, the host
+executor's fault ladder, and token exactness of the three-way split decode
+against the device-resident oracle on both serving paths."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.offload import OffloadBudget
+from repro.core.quant import QuantConfig
+from repro.data import request_trace
+from repro.models import model as M
+from repro.offload import HostAttnExecutor, host_flash_attention, merge_partials
+from repro.offload.executor import QuantSlab, np_dequantize, np_quantize
+from repro.offload.faults import FaultPlan
+from repro.offload.host_attn import NEG_INF
+from repro.serving import ContinuousBatchingServer, HybridServeEngine
+
+
+# =============================================================================
+# partial merge math
+# =============================================================================
+
+def _dense_partial(q, k, v, valid):
+    """(o, m, l) of masked softmax attention — the oracle both partition
+    implementations must agree with."""
+    s = np.einsum("bhgd,bshd->bhgs", q, k) / np.sqrt(q.shape[-1])
+    s = np.where(valid[:, None, None, :], s, NEG_INF)
+    m = np.max(s, -1, keepdims=True, initial=NEG_INF)
+    e = np.where(valid[:, None, None, :], np.exp(s - m), 0.0)
+    l = e.sum(-1, keepdims=True)
+    o = np.einsum("bhgs,bshd->bhgd", e, v) / np.maximum(l, 1e-30)
+    return o, m, l
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+def test_merge_partials_matches_dense_softmax():
+    """Splitting the token axis anywhere and merging the two partitions'
+    (o, m, l) must reproduce dense softmax attention exactly."""
+    B, KVH, G, D, S = 3, 2, 4, 16, 40
+    q = _rand((B, KVH, G, D), 0)
+    k = _rand((B, S, KVH, D), 1)
+    v = _rand((B, S, KVH, D), 2)
+    valid = np.ones((B, S), bool)
+    o_ref, m_ref, l_ref = _dense_partial(q, k, v, valid)
+    for cut in (0, 1, 17, S):                     # empty partitions included
+        oa, ma, la = _dense_partial(q, k[:, :cut], v[:, :cut], valid[:, :cut])
+        ob, mb, lb = _dense_partial(q, k[:, cut:], v[:, cut:], valid[:, cut:])
+        o, m, l = merge_partials(oa, ma, la, ob, mb, lb)
+        np.testing.assert_allclose(o, o_ref, atol=1e-5)
+        np.testing.assert_allclose(m, m_ref, atol=0)
+        np.testing.assert_allclose(l, l_ref, rtol=1e-5)
+
+
+def test_merge_empty_partition_is_identity():
+    B, KVH, G, D = 2, 1, 2, 8
+    o = _rand((B, KVH, G, D), 3)
+    m = _rand((B, KVH, G, 1), 4)
+    l = np.abs(_rand((B, KVH, G, 1), 5)) + 0.1
+    empty_o = np.zeros_like(o)
+    empty_m = np.full_like(m, NEG_INF)
+    empty_l = np.zeros_like(l)
+    o2, m2, l2 = merge_partials(o, m, l, empty_o, empty_m, empty_l)
+    np.testing.assert_allclose(o2, o, atol=1e-7)
+    np.testing.assert_allclose(m2, m)
+    np.testing.assert_allclose(l2, l, rtol=1e-6)
+    assert np.isfinite(o2).all()
+
+
+@pytest.mark.parametrize("chunk", [4, 256])
+def test_host_flash_attention_matches_dense(chunk):
+    """The chunked running-(m, l, acc) loop vs dense masked softmax, with
+    ragged per-request kv_len including an empty partition."""
+    B, KVH, G, D, cap = 4, 2, 3, 32, 50
+    q = _rand((B, KVH, G, D), 0)
+    hk = _rand((B, cap, KVH, D), 1)
+    hv = _rand((B, cap, KVH, D), 2)
+    kv_len = np.array([50, 17, 1, 0])
+    o, m, l, nbytes = host_flash_attention(q, hk, hv, kv_len, chunk=chunk)
+    valid = np.arange(cap)[None, :] < kv_len[:, None]
+    kt = np.where(valid[..., None, None], hk, 0.0)
+    o_ref, m_ref, l_ref = _dense_partial(q, kt, hv, valid)
+    np.testing.assert_allclose(o[:3], o_ref[:3], atol=1e-5)
+    np.testing.assert_allclose(m, m_ref, atol=1e-5)
+    np.testing.assert_allclose(l, l_ref, rtol=1e-5)
+    # request 3 is empty: identity partial, safe to merge
+    assert m[3].max() == NEG_INF and l[3].sum() == 0.0
+    assert nbytes == 2 * hk[:, :50].nbytes
+
+
+def test_host_flash_attention_quant_slab():
+    """int8 arena planes dequantize through the cache dtype host-side —
+    identical values to a pre-dequantized fp arena, bytes = payload+scales."""
+    B, KVH, D, cap = 2, 1, 16, 24
+    q = _rand((B, KVH, 2, D), 0)
+    k = _rand((B, cap, KVH, D), 1)
+    v = _rand((B, cap, KVH, D), 2)
+    kq, ks = np_quantize(k)
+    vq, vs = np_quantize(v)
+    kv_len = np.array([24, 9])
+    o1, m1, l1, nb = host_flash_attention(
+        q, QuantSlab(kq, ks), QuantSlab(vq, vs), kv_len,
+        cache_dtype=np.float32)
+    o2, m2, l2, _ = host_flash_attention(
+        q, np_dequantize(kq, ks, np.float32), np_dequantize(vq, vs, np.float32),
+        kv_len)
+    np.testing.assert_array_equal(o1, o2)
+    np.testing.assert_array_equal(m1, m2)
+    np.testing.assert_array_equal(l1, l2)
+    assert nb == kq[:, :24].nbytes + ks[:, :24].nbytes \
+        + vq[:, :24].nbytes + vs[:, :24].nbytes
+
+
+def test_np_quantize_fake_quant_roundtrip_lossless():
+    """Re-quantizing already fake-quant values is lossless (int8 payload +
+    f16 scales) — the property the host-attn store-back path relies on to
+    write device-computed rows into a quantized arena without drift."""
+    rows = _rand((4, 16, 2, 32), 7)
+    q1, s1 = np_quantize(rows)
+    fake = np_dequantize(q1, s1, np.float32)
+    q2, s2 = np_quantize(fake)
+    np.testing.assert_array_equal(q1, q2)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(np_dequantize(q2, s2, np.float32), fake)
+
+
+# =============================================================================
+# executor: worker overlap + fault ladder (the WeightStreamer pattern)
+# =============================================================================
+
+def _tiny_job():
+    q = _rand((1, 1, 2, 8), 0)
+    hk = _rand((1, 16, 1, 8), 1)
+    hv = _rand((1, 16, 1, 8), 2)
+    kv_len = np.array([5])
+    return q, hk, hv, kv_len
+
+
+def test_executor_runs_off_thread_and_matches_inline():
+    q, hk, hv, kv_len = _tiny_job()
+    ref = host_flash_attention(q, hk, hv, kv_len)[:3]
+    with HostAttnExecutor() as lane:
+        job = lane.submit(q, hk, hv, kv_len)
+        time.sleep(0.2)                  # the caller's "device partial" slot
+        assert job.fut.done(), "worker must progress while the caller works"
+        o, m, l = lane.collect(job)
+    for a, b in zip((o, m, l), ref):
+        np.testing.assert_array_equal(a, b)
+    res = lane.timeline.drain()
+    assert sum(r.cpu_busy for r in res) > 0   # cpu-lane span recorded
+
+
+def test_executor_copy_fail_retries_then_succeeds():
+    q, hk, hv, kv_len = _tiny_job()
+    ref = host_flash_attention(q, hk, hv, kv_len)[:3]
+    faults = FaultPlan(copy_fail_p=1.0, max_events=1)
+    with HostAttnExecutor(faults=faults) as lane:
+        o, m, l = lane.collect(lane.submit(q, hk, hv, kv_len))
+    for a, b in zip((o, m, l), ref):
+        np.testing.assert_array_equal(a, b)
+    assert lane.fault_counters["copy_retries"] == 1
+    assert lane.fault_counters["copy_failures"] == 0
+    assert lane.lane_health == "healthy"
+
+
+def test_executor_copy_fail_gives_up_degrades_then_rearms():
+    q, hk, hv, kv_len = _tiny_job()
+    ref = host_flash_attention(q, hk, hv, kv_len)[:3]
+    faults = FaultPlan(copy_fail_p=1.0, max_events=None)   # never stops
+    with HostAttnExecutor(faults=faults, max_retries=1) as lane:
+        o, m, l = lane.collect(lane.submit(q, hk, hv, kv_len))
+        for a, b in zip((o, m, l), ref):
+            np.testing.assert_array_equal(a, b)           # inline fallback
+        assert lane.lane_health == "degraded"
+        assert lane.fault_counters["copy_failures"] == 1
+        assert lane.fault_counters["sync_fallbacks"] == 1
+        # degraded lane: jobs compute inline (no injection) until re-armed
+        lane.collect(lane.submit(q, hk, hv, kv_len))
+        assert lane.fault_counters["sync_fallbacks"] == 2
+        lane.begin()
+        assert lane.lane_health == "healthy"
+
+
+def test_executor_watchdog_timeout_falls_back_inline():
+    q, hk, hv, kv_len = _tiny_job()
+    ref = host_flash_attention(q, hk, hv, kv_len)[:3]
+    faults = FaultPlan(stall_p=1.0, stall_s=0.4, max_events=1)
+    with HostAttnExecutor(faults=faults, watchdog_s=0.02) as lane:
+        o, m, l = lane.collect(lane.submit(q, hk, hv, kv_len))
+    for a, b in zip((o, m, l), ref):
+        np.testing.assert_array_equal(a, b)
+    assert lane.fault_counters["watchdog_timeouts"] == 1
+    assert lane.fault_counters["sync_fallbacks"] == 1
+    assert lane.fault_counters["stalls_injected"] == 1
+    assert lane.lane_health == "degraded"
+
+
+# =============================================================================
+# serving integration: token exactness vs the full-device oracle
+# =============================================================================
+
+@pytest.fixture(scope="module")
+def setup_opt():
+    cfg = get_config("opt-6.7b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = request_trace(cfg.vocab_size, 4, prompt_mean=40, gen_tokens=8,
+                        seed=3)
+    return cfg, params, reqs
+
+
+@pytest.fixture(scope="module")
+def setup_yi():
+    cfg = get_config("yi-6b-reduced")
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    reqs = request_trace(cfg.vocab_size, 3, prompt_mean=30, gen_tokens=6,
+                        seed=7)
+    return cfg, params, reqs
+
+
+def _engine_case(cfg, params, reqs, quant):
+    """Host-attn engine decode (mode='kv' forces a real spill under the
+    tight default budget) vs the device-resident oracle."""
+    eng_ref = HybridServeEngine(cfg, params, mode="kv",
+                                max_minibatch=len(reqs), kv_cap=128,
+                                act_cap=128, quant=quant)
+    ref, _ = eng_ref.generate(reqs)
+    with HybridServeEngine(cfg, params, mode="kv", max_minibatch=len(reqs),
+                           kv_cap=128, act_cap=128, offload=True,
+                           host_attn=True, quant=quant) as eng:
+        out, stats = eng.generate(reqs)
+        for r in reqs:
+            np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+        meas = eng.measured_steps
+        # the whole point: the spilled KV never rides PCIe back down
+        assert sum(m.traffic["kv_load"] for m in meas) == 0
+        assert sum(m.cpu_busy for m in meas) > 0
+        assert stats.measured_cpu_busy > 0
+
+
+@pytest.mark.parametrize("quant", [None, QuantConfig()],
+                         ids=["fp", "int8"])
+def test_engine_host_attn_token_exact_opt(setup_opt, quant):
+    _engine_case(*setup_opt, quant)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("quant", [None, QuantConfig()],
+                         ids=["fp", "int8"])
+def test_engine_host_attn_token_exact_yi(setup_yi, quant):
+    """GQA + RoPE + qk-norm config through the three-way split."""
+    _engine_case(*setup_yi, quant)
+
+
+def _scheduler_case(cfg, params, reqs, quant, chunk_steps):
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, chunk_steps=chunk_steps,
+                                  quant=quant) as srv_ref:
+        ref, _ = srv_ref.run(list(reqs))
+    with ContinuousBatchingServer(cfg, params, slots=2, kv_cap=128,
+                                  act_cap=128, chunk_steps=chunk_steps,
+                                  offload=True, host_attn=True,
+                                  quant=quant) as srv:
+        out, stats = srv.run(list(reqs))
+        for r in reqs:
+            np.testing.assert_array_equal(out[r.rid], ref[r.rid])
+        assert stats.generated_tokens == sum(r.max_new_tokens for r in reqs)
+        assert sum(m.cpu_busy for m in srv.measured_steps) > 0
+
+
+def test_scheduler_host_attn_token_exact_opt(setup_opt):
+    cfg, params, reqs = setup_opt
+    _scheduler_case(cfg, params, reqs, None, 3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("quant,chunk_steps", [(QuantConfig(), 1),
+                                               (QuantConfig(), 3)],
+                         ids=["int8-s1", "int8-s3"])
+def test_scheduler_host_attn_token_exact_opt_quant(setup_opt, quant,
+                                                   chunk_steps):
+    cfg, params, reqs = setup_opt
+    _scheduler_case(cfg, params, reqs, quant, chunk_steps)
+
+
+@pytest.mark.slow
+def test_scheduler_host_attn_token_exact_yi(setup_yi):
+    cfg, params, reqs = setup_yi
+    _scheduler_case(cfg, params, reqs, None, 2)
+
+
+def test_host_attn_off_is_inert(setup_opt):
+    """host_attn=False must leave the offload runtime untouched: no host
+    lane is ever constructed and no cpu-lane span is recorded (the PR pin —
+    the flag off is bit-identical to the pre-lane executor)."""
+    cfg, params, reqs = setup_opt
+    with HybridServeEngine(cfg, params, mode="kv", max_minibatch=len(reqs),
+                           kv_cap=128, act_cap=128, offload=True,
+                           host_attn=False) as eng:
+        _, stats = eng.generate(reqs)
+    assert eng.executor.host_lane is None
+    assert all(m.cpu_busy == 0.0 for m in eng.measured_steps)
+    assert stats.measured_cpu_busy == 0.0
+    assert eng.executor.host_fault_counters == {
+        k: 0 for k in eng.executor.host_fault_counters}
+
+
+def test_host_attn_requires_offload(setup_opt):
+    cfg, params, _ = setup_opt
+    with pytest.raises(AssertionError):
+        HybridServeEngine(cfg, params, mode="kv", kv_cap=128, act_cap=128,
+                          host_attn=True)
+    with pytest.raises(AssertionError):
+        ContinuousBatchingServer(cfg, params, kv_cap=128, act_cap=128,
+                                 host_attn=True)

@@ -91,6 +91,50 @@ def test_hybrid_attention_quantized_matches_dequant_ref(kvh, g, d_model, norm):
     assert 0.0 < err < 0.05
 
 
+@pytest.mark.parametrize("kvh,g,d_model", [(1, 4, 128), (2, 3, 256)])
+def test_hybrid_attention_return_lse_matches_ref(kvh, g, d_model):
+    """return_lse: kernel and oracle agree on the (m, l) softmax partials,
+    and merging the partials of a split page table reproduces the full
+    table's output (DESIGN.md §15 — what the cpu lane's merge relies on)."""
+    from repro.offload.host_attn import merge_partials
+    rng = jax.random.PRNGKey(0)
+    B, D, T = 2, 32, 16
+    P_kv, P_act = 4, 3
+    ks = jax.random.normal(rng, (P_kv, T, kvh, D)) * 0.3
+    vs = jax.random.normal(jax.random.PRNGKey(1), (P_kv, T, kvh, D)) * 0.3
+    ap = jax.random.normal(jax.random.PRNGKey(2), (P_act, T, d_model)) * 0.5
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, kvh, g, D))
+    sc = jnp.ones((d_model,))
+    wk = jax.random.normal(jax.random.PRNGKey(4), (d_model, kvh, D)) * 0.05
+    wv = jax.random.normal(jax.random.PRNGKey(5), (d_model, kvh, D)) * 0.05
+    pt = jnp.array([[0, 1, 0, 2, 3], [2, 1, 0, 0, 0]], jnp.int32)
+    pty = jnp.array([[0, 1, 0, 1, 0], [0, 0, 1, 2, 2]], jnp.int32)
+    pn = jnp.array([[16, 16, 16, 16, 9], [16, 16, 5, 0, 0]], jnp.int32)
+    kw = dict(norm_type="layernorm")
+    o1, m1, l1 = hybrid_paged_attention(q, ks, vs, ap, sc, wk, wv, pt, pty,
+                                        pn, return_lse=True, **kw)
+    o2, m2, l2 = hybrid_paged_attention_ref(q, ks, vs, ap, sc, wk, wv, pt,
+                                            pty, pn, return_lse=True, **kw)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5)
+    # the partials MERGE: split the table at page 2, mask the other half
+    # dead (type 2), and fold the two partitions back together
+    def half(keep):
+        mask = jnp.zeros_like(pty) + 2
+        cols = jnp.arange(pty.shape[1])
+        sel = (cols[None, :] < 2) if keep == 0 else (cols[None, :] >= 2)
+        return jnp.where(sel, pty, mask)
+    pa = hybrid_paged_attention_ref(q, ks, vs, ap, sc, wk, wv, pt, half(0),
+                                    pn, return_lse=True, **kw)
+    pb = hybrid_paged_attention_ref(q, ks, vs, ap, sc, wk, wv, pt, half(1),
+                                    pn, return_lse=True, **kw)
+    om, _, _ = merge_partials(np.asarray(pa[0], np.float32), np.asarray(pa[1]),
+                              np.asarray(pa[2]), np.asarray(pb[0], np.float32),
+                              np.asarray(pb[1]), np.asarray(pb[2]))
+    np.testing.assert_allclose(om, np.asarray(o2, np.float32), atol=1e-5)
+
+
 def test_hybrid_attention_quantized_requires_all_scales():
     B, kvh, g, D, T, d_model = 1, 1, 2, 16, 16, 32
     ks = jnp.zeros((1, T, kvh, D), jnp.int8)
